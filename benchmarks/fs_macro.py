@@ -1,0 +1,96 @@
+"""FS macrobenchmarks — paper Table 6: varmail, fileserver, untar-linux.
+
+varmail    : mail-server loop — create/append/fsync/read/delete + a fsync'd
+             operation log (ops/s; fsync-dominated like the paper's).
+fileserver : file-serving mix — create/write/append/read/stat/delete over a
+             working set, few fsyncs (ops/s).
+untar      : create a synthetic source tree (dirs + files with realistic
+             size mix), measured as total seconds — lower is better.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.fs.mounts import ALL_KINDS, make_mount
+
+
+def varmail(kind: str, loops: int = 120) -> Dict:
+    mf = make_mount(kind, n_blocks=16384)
+    v = mf.view
+    v.makedirs("/mail")
+    v.create("/mail/op.log")
+    msg = b"m" * 8192
+    ops = 0
+    t0 = time.perf_counter()
+    for i in range(loops):
+        name = f"/mail/msg{i % 64:04d}"
+        v.write_file(name, msg)
+        v.append("/mail/op.log", b"delivered %d\n" % i)
+        v.fsync("/mail/op.log")
+        v.read_file(name)
+        if i % 4 == 3:
+            v.unlink(name)
+        ops += 4
+    wall = time.perf_counter() - t0
+    mf.close()
+    return {"bench": "varmail", "fs": kind, "ops_per_s": ops / wall}
+
+
+def fileserver(kind: str, loops: int = 120) -> Dict:
+    mf = make_mount(kind, n_blocks=32768)
+    v = mf.view
+    v.makedirs("/srv")
+    blob = b"f" * 65536
+    ops = 0
+    rng = np.random.default_rng(11)
+    t0 = time.perf_counter()
+    for i in range(loops):
+        name = f"/srv/file{int(rng.integers(50)):04d}"
+        v.write_file(name, blob)
+        v.append(name, b"tail" * 256)
+        v.read_file(name)
+        v.stat(name)
+        if i % 5 == 4:
+            v.unlink(name)
+        ops += 5
+        if i % 16 == 15:
+            v.fsync(name if v.exists(name) else "/srv")
+            ops += 1
+    wall = time.perf_counter() - t0
+    mf.close()
+    return {"bench": "fileserver", "fs": kind, "ops_per_s": ops / wall}
+
+
+def untar(kind: str, n_dirs: int = 12, files_per_dir: int = 10) -> Dict:
+    """Synthetic kernel-source-like tree: many small files, few big."""
+    mf = make_mount(kind, n_blocks=32768)
+    v = mf.view
+    rng = np.random.default_rng(13)
+    sizes = [1024, 2048, 4096, 8192, 16384, 65536]
+    t0 = time.perf_counter()
+    for d in range(n_dirs):
+        v.makedirs(f"/src/dir{d:03d}")
+        for f in range(files_per_dir):
+            size = sizes[int(rng.integers(len(sizes)))]
+            v.write_file(f"/src/dir{d:03d}/file{f:03d}.c", b"c" * size)
+    v.fsync("/src")
+    wall = time.perf_counter() - t0
+    mf.close()
+    return {"bench": "untar", "fs": kind, "seconds": wall}
+
+
+def run_all(kinds=ALL_KINDS, quick: bool = False) -> List[Dict]:
+    rows = []
+    for kind in kinds:
+        scale = 0.15 if kind == "fuse" else 1.0
+        if quick:
+            scale *= 0.3
+        loops = max(10, int(120 * scale))
+        rows.append(varmail(kind, loops))
+        rows.append(fileserver(kind, loops))
+        rows.append(untar(kind, n_dirs=max(3, int(12 * scale))))
+    return rows

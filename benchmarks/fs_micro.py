@@ -1,0 +1,164 @@
+"""FS microbenchmarks — paper Figures 2-4 + Tables 4-5.
+
+read  : 4K ops/s + 32K/128K/1M MB/s, sequential+random, 1 and 32 threads
+write : 32K/128K/1M MB/s, seq 1-thread + random 1/32 threads
+create: ops/s, 1/32 threads         delete: ops/s, 1/32 threads
+
+Mount matrix: bento / vfs / fuse / ext4like (repro.fs.mounts). Op counts are
+bounded (not wall-clock bounded like filebench) so the suite stays CPU-
+friendly; FUSE rows run a reduced op count and report the same ops/s metric.
+"""
+
+from __future__ import annotations
+
+import concurrent.futures as cf
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.fs.mounts import ALL_KINDS, make_mount
+
+FILE_MB = 4
+N_THREADS = 32
+
+
+def _mk_file(view, path: str, mb: int) -> None:
+    blob = np.random.default_rng(7).integers(0, 256, mb << 20, dtype=np.uint8)
+    view.write_file(path, blob.tobytes())
+    view.fsync(path)
+
+
+def _run_threads(n_threads: int, per_thread_ops: int, fn) -> float:
+    """Returns wall seconds for n_threads x per_thread_ops calls of fn(i)."""
+    t0 = time.perf_counter()
+    if n_threads == 1:
+        for i in range(per_thread_ops):
+            fn(i)
+    else:
+        with cf.ThreadPoolExecutor(n_threads) as ex:
+            futs = [ex.submit(lambda t=t: [fn(t * per_thread_ops + i)
+                                           for i in range(per_thread_ops)])
+                    for t in range(n_threads)]
+            for f in futs:
+                f.result()
+    return time.perf_counter() - t0
+
+
+def bench_read(kind: str, *, ops_scale: float = 1.0) -> List[Dict]:
+    rows = []
+    mf = make_mount(kind, n_blocks=16384)
+    v = mf.view
+    _mk_file(v, "/readfile", FILE_MB)
+    file_bytes = FILE_MB << 20
+    rng = np.random.default_rng(3)
+    for size_kb in (4, 32, 128, 1024):
+        size = size_kb << 10
+        n_off = file_bytes // size
+        for mode in ("seq", "rand"):
+            for threads in (1, N_THREADS):
+                total_ops = max(8, int(2048 * ops_scale))
+                per_thread = max(1, total_ops // threads)
+
+                def op(i, mode=mode, size=size, n_off=n_off):
+                    idx = (i % n_off) if mode == "seq" else int(rng.integers(n_off))
+                    v.read_file("/readfile", off=idx * size, size=size)
+
+                wall = _run_threads(threads, per_thread, op)
+                ops = threads * per_thread
+                rows.append({
+                    "bench": "read", "fs": kind, "size_kb": size_kb,
+                    "mode": mode, "threads": threads,
+                    "ops_per_s": ops / wall,
+                    "mb_per_s": ops * size / wall / 2**20,
+                })
+    mf.close()
+    return rows
+
+
+def bench_write(kind: str, *, ops_scale: float = 1.0) -> List[Dict]:
+    rows = []
+    mf = make_mount(kind, n_blocks=16384)
+    v = mf.view
+    _mk_file(v, "/writefile", FILE_MB)
+    file_bytes = FILE_MB << 20
+    rng = np.random.default_rng(4)
+    blob = np.random.default_rng(9).integers(0, 256, 1 << 20, dtype=np.uint8).tobytes()
+    for size_kb in (32, 128, 1024):
+        size = size_kb << 10
+        n_off = file_bytes // size
+        cases = [("seq", 1), ("rand", 1), ("rand", N_THREADS)]
+        for mode, threads in cases:
+            total_ops = max(4, int(64 * ops_scale))
+            per_thread = max(1, total_ops // threads)
+
+            def op(i, mode=mode, size=size, n_off=n_off):
+                idx = (i % n_off) if mode == "seq" else int(rng.integers(n_off))
+                v.write_file("/writefile", blob[:size], off=idx * size,
+                             create=False)
+
+            wall = _run_threads(threads, per_thread, op)
+            ops = threads * per_thread
+            rows.append({
+                "bench": "write", "fs": kind, "size_kb": size_kb,
+                "mode": mode, "threads": threads,
+                "ops_per_s": ops / wall,
+                "mb_per_s": ops * size / wall / 2**20,
+            })
+    mf.close()
+    return rows
+
+
+def bench_create(kind: str, *, ops_scale: float = 1.0) -> List[Dict]:
+    rows = []
+    for threads in (1, N_THREADS):
+        mf = make_mount(kind, n_blocks=16384)
+        v = mf.view
+        v.makedirs("/c")
+        total = max(16, int(256 * ops_scale))
+        per_thread = max(1, total // threads)
+        payload = b"x" * 1024
+
+        def op(i):
+            v.write_file(f"/c/f{i:06d}", payload)
+            v.fsync(f"/c/f{i:06d}")
+
+        wall = _run_threads(threads, per_thread, op)
+        rows.append({"bench": "create", "fs": kind, "threads": threads,
+                     "ops_per_s": threads * per_thread / wall})
+        mf.close()
+    return rows
+
+
+def bench_delete(kind: str, *, ops_scale: float = 1.0) -> List[Dict]:
+    rows = []
+    for threads in (1, N_THREADS):
+        mf = make_mount(kind, n_blocks=16384)
+        v = mf.view
+        v.makedirs("/d")
+        total = max(16, int(256 * ops_scale))
+        per_thread = max(1, total // threads)
+        n = threads * per_thread
+        for i in range(n):
+            v.write_file(f"/d/f{i:06d}", b"y" * 1024)
+        v.fsync("/d")
+
+        def op(i):
+            v.unlink(f"/d/f{i:06d}")
+
+        wall = _run_threads(threads, per_thread, op)
+        rows.append({"bench": "delete", "fs": kind, "threads": threads,
+                     "ops_per_s": n / wall})
+        mf.close()
+    return rows
+
+
+def run_all(kinds=ALL_KINDS, quick: bool = False) -> List[Dict]:
+    rows: List[Dict] = []
+    for kind in kinds:
+        scale = (0.05 if kind == "fuse" else 1.0) * (0.25 if quick else 1.0)
+        rows += bench_read(kind, ops_scale=scale)
+        rows += bench_write(kind, ops_scale=scale)
+        rows += bench_create(kind, ops_scale=scale)
+        rows += bench_delete(kind, ops_scale=scale)
+    return rows

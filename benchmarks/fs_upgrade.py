@@ -1,0 +1,58 @@
+"""Online-upgrade benchmark (paper §4.8 — future work there, implemented
+here): measures service pause seen by a concurrent workload while the
+mounted file system is hot-swapped, plus upgrade-path microtimings.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List
+
+from repro.core.upgrade import upgrade
+from repro.fs.mounts import make_mount
+from repro.fs.xv6 import Xv6FileSystem, Xv6Options
+
+
+def run(n_upgrades: int = 5, workload_seconds: float = 2.0) -> Dict:
+    mf = make_mount("bento", n_blocks=16384)
+    v = mf.view
+    v.makedirs("/w")
+    stop = threading.Event()
+    op_times: List[float] = []
+    errors: List[str] = []
+
+    def workload():
+        i = 0
+        while not stop.is_set():
+            t0 = time.perf_counter()
+            try:
+                v.write_file(f"/w/f{i % 32:03d}", b"z" * 4096)
+                v.read_file(f"/w/f{i % 32:03d}")
+            except Exception as e:  # noqa: BLE001 — any error fails the claim
+                errors.append(str(e))
+            op_times.append(time.perf_counter() - t0)
+            i += 1
+
+    t = threading.Thread(target=workload, daemon=True)
+    t.start()
+    time.sleep(workload_seconds / 2)
+    stats = []
+    for _ in range(n_upgrades):
+        s = upgrade(mf.mount, Xv6FileSystem(Xv6Options()))
+        stats.append(s)
+        time.sleep(workload_seconds / (2 * n_upgrades))
+    stop.set()
+    t.join(timeout=5)
+    mf.close()
+    total = [s["total_s"] for s in stats]
+    return {
+        "bench": "online_upgrade",
+        "n_upgrades": n_upgrades,
+        "ops_during": len(op_times),
+        "failed_ops": len(errors),
+        "upgrade_total_ms_mean": 1e3 * sum(total) / len(total),
+        "upgrade_total_ms_max": 1e3 * max(total),
+        "workload_op_ms_p99": 1e3 * sorted(op_times)[int(0.99 * len(op_times))]
+        if op_times else None,
+    }

@@ -1,0 +1,181 @@
+"""Roofline table builder — reads the dry-run JSONs and emits §Roofline.
+
+Per (arch x shape x mesh) cell:
+  compute_s    = per-chip HLO dot FLOPs / 197e12   (bf16 peak, v5e)
+  memory_s     = per-chip dot operand+output bytes / 819e9 (HBM traffic
+                 upper bound: no fusion credit — see method notes)
+  collective_s = per-chip ring-model wire bytes / 50e9 (1 ICI link)
+  dominant     = argmax term;  roofline_fraction = compute_s / dominant_s
+  model_ratio  = analytic MODEL_FLOPS / HLO dot FLOPs (useful-compute share)
+
+MODEL_FLOPS: 6*N_active*tokens (train) / 2*N_active*tokens (prefill/decode)
+plus the architecture's attention/state-scan term (family formulas below).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs import SHAPES_BY_NAME, registry
+from repro.configs.base import ModelConfig, ShapeSpec
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def analytic_model_flops(cfg: ModelConfig, shape: ShapeSpec) -> float:
+    """Useful-model FLOPs for the whole step (all chips), family-aware."""
+    N = cfg.active_param_count()
+    B, S = shape.global_batch, shape.seq_len
+    mult = 6.0 if shape.kind == "train" else 2.0  # fwd+bwd vs fwd
+    fwd_attn_mult = 3.0 if shape.kind == "train" else 1.0
+
+    if shape.kind == "decode":
+        tokens = B  # one new token per sequence
+        flops = mult * N * tokens
+        # attention against the cache
+        if cfg.num_heads > 0:
+            eff = min(S, cfg.sliding_window) if cfg.sliding_window else S
+            n_attn = _n_attn_layers(cfg)
+            flops += 4.0 * B * cfg.num_heads * cfg.head_dim * eff * n_attn
+        if cfg.family in ("ssm", "hybrid"):
+            flops += _state_flops_per_token(cfg) * B
+        return flops
+
+    tokens = B * S
+    flops = mult * N * tokens
+    if cfg.num_heads > 0 and cfg.family != "ssm":
+        eff = min(S, cfg.sliding_window) if cfg.sliding_window else S
+        n_attn = _n_attn_layers(cfg)
+        flops += fwd_attn_mult * 2.0 * B * S * eff * cfg.num_heads * cfg.head_dim * n_attn
+        if cfg.family == "vlm":
+            n_cross = cfg.num_layers // cfg.cross_attn_every
+            flops += fwd_attn_mult * 4.0 * B * S * cfg.num_image_tokens * \
+                cfg.num_heads * cfg.head_dim * n_cross
+        if cfg.family == "audio":
+            Te = cfg.encoder_seq
+            flops += fwd_attn_mult * 4.0 * B * Te * Te * cfg.num_heads * \
+                cfg.head_dim * cfg.encoder_layers
+            flops += fwd_attn_mult * 4.0 * B * S * Te * cfg.num_heads * \
+                cfg.head_dim * cfg.num_layers
+    if cfg.family in ("ssm", "hybrid"):
+        flops += fwd_attn_mult * _state_flops_per_token(cfg) * tokens
+    return flops
+
+
+def _n_attn_layers(cfg: ModelConfig) -> int:
+    if cfg.family == "hybrid":
+        e = cfg.shared_attn_every
+        return sum(1 for i in range(cfg.num_layers) if i % e == e - 1) if e else 0
+    if cfg.family == "vlm":
+        return cfg.num_layers - cfg.num_layers // cfg.cross_attn_every
+    return cfg.num_layers
+
+
+def _state_flops_per_token(cfg: ModelConfig) -> float:
+    if cfg.family == "ssm":  # wkv6: ~4 mults per (k,v) state cell
+        H = cfg.d_model // cfg.wkv_head_dim
+        return 4.0 * H * cfg.wkv_head_dim * cfg.wkv_head_dim * cfg.num_layers
+    if cfg.family == "hybrid":  # mamba2 ssd
+        d_inner = cfg.ssm_expand * cfg.d_model
+        H = d_inner // cfg.ssm_head_dim
+        return 4.0 * H * cfg.ssm_head_dim * cfg.ssm_state * cfg.num_layers
+    return 0.0
+
+
+def improvement_note(dom: str, row: Dict) -> str:
+    if dom == "collective_s":
+        return ("collective-bound: resharding/gather traffic dominates — "
+                "fewer/overlapped gathers (cast-then-gather, seqpar rules, "
+                "shard_map decode/MoE) moves this down")
+    if dom == "memory_s":
+        return ("memory-bound: unfused attention/scan intermediates dominate "
+                "HBM traffic — the Pallas fused kernels eliminate the "
+                "materialized scores/decay tensors on TPU")
+    return ("compute-bound: near the MXU roofline; remaining headroom is "
+            "remat recompute and causal-block waste")
+
+
+def load_cells(result_dir: str) -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(result_dir, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def build_table(result_dir: str) -> List[Dict]:
+    out = []
+    for cell in load_cells(result_dir):
+        if cell.get("skipped"):
+            out.append({"arch": cell["arch"], "shape": cell["shape"],
+                        "mesh": cell["mesh"], "skipped": cell["reason"]})
+            continue
+        if not cell.get("ok"):
+            out.append({"arch": cell["arch"], "shape": cell["shape"],
+                        "mesh": cell["mesh"], "error": cell.get("error")})
+            continue
+        cfg = registry.get(cell["arch"]).model
+        shape = SHAPES_BY_NAME[cell["shape"]]
+        n_chips = cell["n_chips"]
+        terms = cell["roofline_terms_s"]
+        dom = max(terms, key=terms.get)
+        model_flops = analytic_model_flops(cfg, shape)
+        hlo_flops_all = cell["hlo"]["dot_flops"] * n_chips
+        row = {
+            "arch": cell["arch"], "shape": cell["shape"], "mesh": cell["mesh"],
+            "ruleset": cell.get("ruleset", "baseline"),
+            "chips": n_chips,
+            "compute_s": terms["compute_s"],
+            "memory_s": terms["memory_s"],
+            "collective_s": terms["collective_s"],
+            "dominant": dom.replace("_s", ""),
+            "roofline_fraction": terms["compute_s"] / max(terms[dom], 1e-12),
+            "model_flops": model_flops,
+            "model_ratio": model_flops / max(hlo_flops_all, 1.0),
+            "live_gib_per_dev": cell["per_device_bytes"]["live_peak_est"] / 2**30,
+            "note": improvement_note(dom, cell),
+        }
+        out.append(row)
+    return out
+
+
+def markdown_table(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | mesh | chips | compute_s | memory_s | "
+           "collective_s | dominant | RL-frac | model/HLO | GiB/dev |\n"
+           "|---|---|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        if "skipped" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | "
+                         f"SKIP: {r['skipped'][:60]} | | | | | | |")
+            continue
+        if "error" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | "
+                         f"ERROR | | | | | | |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['chips']} | "
+            f"{r['compute_s']:.3f} | {r['memory_s']:.3f} | "
+            f"{r['collective_s']:.3f} | {r['dominant']} | "
+            f"{r['roofline_fraction']:.2f} | {r['model_ratio']:.2f} | "
+            f"{r['live_gib_per_dev']:.1f} |")
+    return hdr + "\n".join(lines)
+
+
+def main(result_dir: str = "results/dryrun_baseline",
+         out_json: str = "results/roofline_table.json") -> None:
+    rows = build_table(result_dir)
+    os.makedirs(os.path.dirname(out_json), exist_ok=True)
+    with open(out_json, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(markdown_table(rows))
+
+
+if __name__ == "__main__":
+    import sys
+    main(*sys.argv[1:])

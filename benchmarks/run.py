@@ -1,0 +1,102 @@
+"""Benchmark orchestrator — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--skip-fs] [--skip-roofline]
+
+Prints ``name,value,unit`` CSV rows and writes results/*.json artifacts:
+  fig2_3_read / fig4_write / tab4_create / tab5_delete  (FS micro matrix)
+  tab6_macro (varmail / fileserver / untar)
+  upgrade (online-upgrade pause under load — §4.8, beyond-paper)
+  roofline (from the dry-run matrix, if present)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def _emit(rows, key_fields, value_field, unit):
+    for r in rows:
+        if value_field not in r:
+            continue
+        name = "/".join(str(r[k]) for k in key_fields if k in r)
+        print(f"{name},{r[value_field]:.2f},{unit}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--skip-fs", action="store_true")
+    ap.add_argument("--skip-roofline", action="store_true")
+    ap.add_argument("--kinds", default="bento,vfs,fuse,ext4like")
+    args = ap.parse_args()
+    os.makedirs(RESULTS, exist_ok=True)
+    artifacts = {}
+
+    if not args.skip_fs:
+        from benchmarks import fs_macro, fs_micro, fs_upgrade
+
+        kinds = tuple(args.kinds.split(","))
+        print("# --- FS micro (paper Fig 2-4, Tab 4-5) ---")
+        micro = fs_micro.run_all(kinds=kinds, quick=args.quick)
+        artifacts["fs_micro"] = micro
+        _emit([r for r in micro if r["bench"] == "read" and r["size_kb"] == 4],
+              ("bench", "fs", "mode", "threads"), "ops_per_s", "ops/s")
+        _emit([r for r in micro if r["bench"] == "read" and r["size_kb"] > 4],
+              ("bench", "fs", "size_kb", "mode", "threads"), "mb_per_s", "MB/s")
+        _emit([r for r in micro if r["bench"] == "write"],
+              ("bench", "fs", "size_kb", "mode", "threads"), "mb_per_s", "MB/s")
+        _emit([r for r in micro if r["bench"] in ("create", "delete")],
+              ("bench", "fs", "threads"), "ops_per_s", "ops/s")
+
+        print("# --- FS macro (paper Tab 6) ---")
+        macro = fs_macro.run_all(kinds=kinds, quick=args.quick)
+        artifacts["fs_macro"] = macro
+        _emit([r for r in macro if "ops_per_s" in r],
+              ("bench", "fs"), "ops_per_s", "ops/s")
+        _emit([r for r in macro if "seconds" in r],
+              ("bench", "fs"), "seconds", "s")
+
+        print("# --- online upgrade under load (§4.8) ---")
+        up = fs_upgrade.run(n_upgrades=3 if args.quick else 5)
+        artifacts["upgrade"] = up
+        print(f"upgrade/pause_mean,{up['upgrade_total_ms_mean']:.3f},ms")
+        print(f"upgrade/pause_max,{up['upgrade_total_ms_max']:.3f},ms")
+        print(f"upgrade/failed_ops,{up['failed_ops']},count")
+
+    if not args.skip_roofline:
+        dr_dir = os.path.join(RESULTS, "dryrun_baseline")
+        if os.path.isdir(dr_dir) and os.listdir(dr_dir):
+            from benchmarks import roofline
+
+            print("# --- roofline (from dry-run matrix) ---")
+            rows = roofline.build_table(dr_dir)
+            artifacts["roofline"] = rows
+            for r in rows:
+                if "compute_s" in r:
+                    print(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']},"
+                          f"{r['roofline_fraction']:.3f},fraction")
+            hc_dir = os.path.join(RESULTS, "hillclimb")
+            if os.path.isdir(hc_dir) and os.listdir(hc_dir):
+                hc = roofline.build_table(hc_dir)
+                artifacts["roofline_optimized"] = hc
+                for r in hc:
+                    if "compute_s" in r:
+                        print(f"roofline-opt/{r['arch']}/{r['shape']}/"
+                              f"{r['mesh']}/{r['ruleset']},"
+                              f"{r['roofline_fraction']:.3f},fraction")
+        else:
+            print("# roofline: no dry-run results found "
+                  "(run src/repro/launch/dryrun.py first)", file=sys.stderr)
+
+    with open(os.path.join(RESULTS, "bench_artifacts.json"), "w") as f:
+        json.dump(artifacts, f, indent=1, default=float)
+    print("# artifacts -> results/bench_artifacts.json")
+
+
+if __name__ == "__main__":
+    main()

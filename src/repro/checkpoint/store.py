@@ -1,0 +1,117 @@
+"""Checkpointing through the Bento file system.
+
+Pytrees serialize leaf-per-file with a JSON manifest carrying shapes,
+dtypes, tree structure and per-leaf checksums (the kernel-services hash —
+Pallas blockhash in the kernel binding). Save/restore round-trips through
+the journaled xv6/ext4like store, so checkpoint durability inherits the
+journal's crash-atomicity (manifest written last = commit point).
+
+The same extract->serialize path backs all four fault-tolerance features
+(upgrade / restart / elastic reshard / failure recovery): restore accepts a
+target sharding context and device_puts leaves to a NEW mesh, which is the
+elastic-rescale path.
+"""
+
+from __future__ import annotations
+
+import io
+import json
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.fs.posix import PosixView
+
+MANIFEST = "manifest.json"
+
+# ml_dtypes that numpy serializes as void: stored as integer views instead.
+_WIRE_DTYPES = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+                "float8_e5m2": np.uint8}
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save(view: PosixView, root: str, tree, *, step: int,
+         checksum=None, extra: Optional[Dict] = None) -> Dict:
+    view.makedirs(root)
+    leaves, treedef = _flatten(tree)
+    manifest = {
+        "step": step,
+        "treedef": str(treedef),
+        "n_leaves": len(leaves),
+        "leaves": [],
+        "extra": extra or {},
+    }
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        # numpy can't serialize ml_dtypes (bf16 -> void): save a same-width
+        # integer view and record the real dtype in the manifest.
+        save_arr = arr.view(_WIRE_DTYPES[str(arr.dtype)]) \
+            if str(arr.dtype) in _WIRE_DTYPES else arr
+        buf = io.BytesIO()
+        np.save(buf, save_arr)
+        raw = buf.getvalue()
+        path = f"{root}/leaf_{i:05d}.npy"
+        view.write_file(path, raw)
+        manifest["leaves"].append({
+            "path": path,
+            "shape": list(arr.shape),
+            "dtype": str(arr.dtype),
+            "checksum": checksum(raw) if checksum else None,
+        })
+    # manifest last: the commit point (journal makes it atomic)
+    view.write_file(f"{root}/{MANIFEST}",
+                    json.dumps(manifest).encode())
+    view.fsync(f"{root}/{MANIFEST}")
+    return manifest
+
+
+def load(view: PosixView, root: str, like_tree, *, checksum=None,
+         sharding_tree=None):
+    """Restore into the structure of ``like_tree``; optionally device_put
+    each leaf with the matching sharding from ``sharding_tree`` (elastic
+    rescale onto a different mesh)."""
+    manifest = json.loads(view.read_file(f"{root}/{MANIFEST}"))
+    leaves_like, treedef = _flatten(like_tree)
+    if manifest["n_leaves"] != len(leaves_like):
+        raise ValueError(
+            f"checkpoint has {manifest['n_leaves']} leaves, model expects "
+            f"{len(leaves_like)} — incompatible trees")
+    shardings = None
+    if sharding_tree is not None:
+        shardings = _flatten(sharding_tree)[0]
+    out = []
+    for i, rec in enumerate(manifest["leaves"]):
+        raw = view.read_file(rec["path"])
+        if checksum and rec.get("checksum") is not None:
+            if checksum(raw) != rec["checksum"]:
+                raise IOError(f"checksum mismatch in {rec['path']}")
+        arr = np.load(io.BytesIO(raw))
+        if rec["dtype"] in _WIRE_DTYPES:
+            import ml_dtypes
+            arr = arr.view(getattr(ml_dtypes, rec["dtype"]))
+        if list(arr.shape) != rec["shape"]:
+            raise IOError(f"shape mismatch in {rec['path']}")
+        if shardings is not None:
+            out.append(jax.device_put(arr, shardings[i]))
+        else:
+            out.append(jax.device_put(arr))
+    return jax.tree.unflatten(treedef, out), manifest
+
+
+def latest_step(view: PosixView, base: str) -> Optional[int]:
+    if not view.exists(base):
+        return None
+    steps = []
+    for name in view.listdir(base):
+        if name.startswith("step_"):
+            try:
+                if view.exists(f"{base}/{name}/{MANIFEST}"):
+                    steps.append(int(name.split("_")[1]))
+            except (ValueError, IndexError):
+                continue
+    return max(steps) if steps else None

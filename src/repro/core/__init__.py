@@ -1,0 +1,24 @@
+# Bento core: the paper's primary contribution, adapted to a JAX runtime.
+#
+#   interface.py  — typed module boundary (file-operations API, §4.3/4.4)
+#   capability.py — unforgeable service handles (§4.6)
+#   ownership.py  — borrow guards for host-side mutable state (§4.4)
+#   services.py   — kernel services API, two bindings (§4.5, §4.9)
+#   registry.py   — module registration + mount dispatch table (§4.2, §5.2)
+#   upgrade.py    — online upgrade: quiesce/extract/migrate/restore (§4.8)
+
+from repro.core.capability import (BlockDeviceCap, Capability, CapabilityError,
+                                   MeshCap, MetricsCap, RngCap, SuperBlockCap)
+from repro.core.interface import (Attr, BentoFilesystem, BentoModule, Errno,
+                                  FileKind, FsError, ROOT_INO)
+from repro.core.ownership import Borrow, BorrowError, Owned
+from repro.core.registry import Mount, OpGate, mount, register_bento
+from repro.core.upgrade import UpgradeError, transfer_state, upgrade
+
+__all__ = [
+    "Attr", "BentoFilesystem", "BentoModule", "BlockDeviceCap", "Borrow",
+    "BorrowError", "Capability", "CapabilityError", "Errno", "FileKind",
+    "FsError", "MeshCap", "MetricsCap", "Mount", "OpGate", "ROOT_INO",
+    "RngCap", "SuperBlockCap", "UpgradeError", "mount", "register_bento",
+    "transfer_state", "upgrade",
+]

@@ -1,0 +1,149 @@
+"""The Bento module boundary (paper §4.3).
+
+Two interfaces cross the boundary:
+
+* ``BentoModule`` — the generic versioned-extension contract every substrate
+  implements (file systems, model modules, optimizers, data pipelines):
+  ``extract_state`` / ``restore_state`` make online upgrade, checkpoint,
+  elastic rescale and failure recovery one protocol (§4.8).
+
+* ``BentoFilesystem`` — the file-operations API, a port of the FUSE
+  low-level API augmented with the SuperBlock capability (§4.3): inode-
+  granular operations, plain values in/out, no kernel structures exposed.
+  Ownership of arguments never transfers: ``bytes`` in/out are immutable
+  (a shared borrow), capabilities are held, never owned.
+"""
+
+from __future__ import annotations
+
+import abc
+import dataclasses
+import enum
+from typing import Any, Dict, Iterable, List, Optional, Tuple
+
+from repro.core.capability import SuperBlockCap
+
+
+class Errno(enum.IntEnum):
+    ENOENT = 2
+    EIO = 5
+    EEXIST = 17
+    ENOTDIR = 20
+    EISDIR = 21
+    EINVAL = 22
+    EFBIG = 27
+    ENOSPC = 28
+    ENOTEMPTY = 39
+    ESTALE = 116
+
+
+class FsError(Exception):
+    def __init__(self, errno: Errno, msg: str = ""):
+        super().__init__(f"{errno.name}: {msg}")
+        self.errno = errno
+
+
+class FileKind(enum.IntEnum):
+    FILE = 1
+    DIR = 2
+
+
+@dataclasses.dataclass
+class Attr:
+    """Plain-value attribute record — no shared kernel structures (§4.3)."""
+
+    ino: int
+    kind: FileKind
+    size: int
+    nlink: int
+    mtime: float = 0.0
+
+    @property
+    def is_dir(self) -> bool:
+        return self.kind == FileKind.DIR
+
+
+ROOT_INO = 1
+
+
+class BentoModule(abc.ABC):
+    """Versioned extension: the §4.8 state-transfer contract."""
+
+    NAME: str = "module"
+    VERSION: int = 1
+
+    def extract_state(self) -> Dict[str, Any]:
+        """Serialize transferable in-memory state before an upgrade.
+
+        Called only after the runtime has quiesced the module (no in-flight
+        operations, no outstanding mutable borrows)."""
+        return {}
+
+    def restore_state(self, state: Dict[str, Any], from_version: int) -> None:
+        """Install state extracted from ``from_version`` of this module."""
+        del state, from_version
+
+    def state_schema(self) -> Tuple[str, ...]:
+        """Keys this version emits/accepts — checked at upgrade time."""
+        return ()
+
+
+class BentoFilesystem(BentoModule):
+    """File-operations API (FUSE low-level port + SuperBlock capability)."""
+
+    # --- lifecycle -------------------------------------------------------------
+    @abc.abstractmethod
+    def init(self, sb: SuperBlockCap, services: "KernelServices") -> None:
+        """Mount-time: the runtime lends the superblock capability and the
+        kernel-services API. The fs must not stash raw kernel objects."""
+
+    def destroy(self) -> None:
+        pass
+
+    # --- inode ops ---------------------------------------------------------------
+    @abc.abstractmethod
+    def getattr(self, ino: int) -> Attr: ...
+
+    @abc.abstractmethod
+    def lookup(self, parent: int, name: str) -> Attr: ...
+
+    @abc.abstractmethod
+    def create(self, parent: int, name: str) -> Attr: ...
+
+    @abc.abstractmethod
+    def mkdir(self, parent: int, name: str) -> Attr: ...
+
+    @abc.abstractmethod
+    def unlink(self, parent: int, name: str) -> None: ...
+
+    @abc.abstractmethod
+    def rmdir(self, parent: int, name: str) -> None: ...
+
+    @abc.abstractmethod
+    def rename(self, parent: int, name: str, newparent: int, newname: str) -> None: ...
+
+    @abc.abstractmethod
+    def readdir(self, ino: int) -> List[Tuple[str, int, FileKind]]: ...
+
+    # --- data ops -------------------------------------------------------------------
+    @abc.abstractmethod
+    def read(self, ino: int, off: int, size: int) -> bytes: ...
+
+    @abc.abstractmethod
+    def write(self, ino: int, off: int, data: bytes) -> int: ...
+
+    @abc.abstractmethod
+    def truncate(self, ino: int, size: int) -> None: ...
+
+    @abc.abstractmethod
+    def fsync(self, ino: int) -> None: ...
+
+    def flush(self) -> None:
+        """Write back everything (unmount / upgrade barrier)."""
+
+    @abc.abstractmethod
+    def statfs(self) -> Dict[str, int]: ...
+
+
+# Filled in by repro.core.services at import time (cycle-free forward ref).
+KernelServices = Any

@@ -1,0 +1,120 @@
+"""Module registration and mount table (paper §4.2, §5.2).
+
+File systems register a *factory*; mounting instantiates the module, mints
+its capabilities, and captures a function table (the function-pointer
+struct of §5.2). Dispatch goes through the table + an operation gate so the
+online-upgrade path (core.upgrade) can quiesce in-flight operations and
+atomically swap the table — applications keep their mount handle across the
+swap.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable, Dict, Optional
+
+from repro.core.interface import BentoFilesystem, Errno, FsError
+
+_FS_REGISTRY: Dict[str, Callable[[], BentoFilesystem]] = {}
+
+
+def register_bento(name: str, factory: Callable[[], BentoFilesystem]) -> None:
+    _FS_REGISTRY[name] = factory
+
+
+def registered() -> Dict[str, Callable[[], BentoFilesystem]]:
+    return dict(_FS_REGISTRY)
+
+
+class OpGate:
+    """Reader-writer gate: operations enter as readers; quiesce takes the
+    writer side and drains in-flight ops (paper §4.8 upgrade barrier)."""
+
+    def __init__(self):
+        self._lock = threading.Condition()
+        self._active = 0
+        self._frozen = False
+
+    def enter(self) -> None:
+        with self._lock:
+            while self._frozen:
+                self._lock.wait()
+            self._active += 1
+
+    def exit(self) -> None:
+        with self._lock:
+            self._active -= 1
+            if self._active == 0:
+                self._lock.notify_all()
+
+    def freeze(self) -> None:
+        with self._lock:
+            self._frozen = True
+            while self._active > 0:
+                self._lock.wait()
+
+    def thaw(self) -> None:
+        with self._lock:
+            self._frozen = False
+            self._lock.notify_all()
+
+
+_FS_OPS = ("getattr", "lookup", "create", "mkdir", "unlink", "rmdir", "rename",
+           "readdir", "read", "write", "truncate", "fsync", "flush", "statfs")
+
+
+class Mount:
+    """A mounted Bento file system: function table + op gate + capabilities."""
+
+    def __init__(self, name: str, module: BentoFilesystem, services):
+        self.name = name
+        self.services = services
+        self.gate = OpGate()
+        self._lock = threading.Lock()
+        self.module: Optional[BentoFilesystem] = None
+        self.table: Dict[str, Callable] = {}
+        self.generation = 0
+        self._install(module)
+
+    def _install(self, module: BentoFilesystem) -> None:
+        sb = self.services.superblock()
+        module.init(sb, self.services)
+        self.module = module
+        # Capture the function table — dispatch never touches the module
+        # object directly after this point (mirrors the VFS fn-pointer struct).
+        self.table = {op: getattr(module, op) for op in _FS_OPS}
+        self.generation += 1
+
+    # --- dispatch -------------------------------------------------------------------
+    def call(self, op: str, *args, **kw):
+        fn = self.table.get(op)
+        if fn is None:
+            raise FsError(Errno.EINVAL, f"no such op {op}")
+        self.gate.enter()
+        try:
+            return fn(*args, **kw)
+        finally:
+            self.gate.exit()
+
+    def __getattr__(self, op: str):
+        if op in _FS_OPS:
+            return lambda *a, **k: self.call(op, *a, **k)
+        raise AttributeError(op)
+
+    def unmount(self) -> None:
+        self.gate.freeze()
+        try:
+            self.module.flush()
+            self.module.destroy()
+            self.services.unmount_checks()
+        finally:
+            self.gate.thaw()
+
+
+def mount(name: str, services, module: Optional[BentoFilesystem] = None) -> Mount:
+    if module is None:
+        factory = _FS_REGISTRY.get(name)
+        if factory is None:
+            raise KeyError(f"no registered bento fs {name!r}")
+        module = factory()
+    return Mount(name, module, services)

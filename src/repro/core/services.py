@@ -1,0 +1,143 @@
+"""Kernel Services API (BentoKS, paper §4.5–4.7).
+
+Extensions never touch raw devices or kernel structures; they call these
+methods with capability proof. Two bindings expose the SAME API (paper §4.9
+— same code in kernel and userspace):
+
+* ``kernel_binding``   — host-memory device, Pallas-crc32c checksums
+                         (TPU-path checksum; interpret-mode on CPU),
+* ``userspace_binding`` — file-backed device, zlib crc32.
+
+Swap the binding, not the file system.
+"""
+
+from __future__ import annotations
+
+import threading
+import time as _time
+import zlib
+from typing import Callable, List, Optional
+
+from repro.core.capability import (BlockDeviceCap, CapabilityError,
+                                   SuperBlockCap, mint_blockdev,
+                                   mint_superblock)
+from repro.fs.blockdev import BlockDevice
+from repro.fs.buffercache import BufferCache, BufferHead
+
+
+class _SbState:
+    """Kernel-side superblock object wrapped by SuperBlockCap."""
+
+    def __init__(self, dev: BlockDevice, cache: BufferCache):
+        self.block_size = dev.block_size
+        self.n_blocks = dev.n_blocks
+        self.device_id = dev.device_id
+        self.cache = cache
+
+
+class KernelServices:
+    """What a Bento file system may do to the kernel."""
+
+    def __init__(self, dev: BlockDevice, *, checksum: Callable[[bytes], int],
+                 checksum_batch: Optional[Callable] = None,
+                 writeback: str = "delayed", cache_capacity: int = 4096,
+                 binding: str = "kernel"):
+        self._dev = dev
+        self.binding = binding
+        self._cache = BufferCache(dev, capacity=cache_capacity,
+                                  writeback=writeback)
+        self._sb_state = _SbState(dev, self._cache)
+        self._checksum = checksum
+        self._checksum_batch = checksum_batch
+        self._log: List[str] = []
+
+    # --- capabilities ---------------------------------------------------------------
+    def superblock(self) -> SuperBlockCap:
+        return mint_superblock(self._sb_state)
+
+    def blockdev_cap(self) -> BlockDeviceCap:
+        return mint_blockdev(self._dev)
+
+    @staticmethod
+    def _cache_of(sb: SuperBlockCap) -> BufferCache:
+        if not isinstance(sb, SuperBlockCap):
+            raise CapabilityError("sb_bread requires a SuperBlockCap")
+        return sb._raw().cache
+
+    # --- block I/O (the sb_bread family, §4.5) -----------------------------------------
+    def sb_bread(self, sb: SuperBlockCap, blockno: int) -> BufferHead:
+        return self._cache_of(sb).bread(blockno)
+
+    def sb_getblk_zero(self, sb: SuperBlockCap, blockno: int) -> BufferHead:
+        return self._cache_of(sb).getblk_zero(blockno)
+
+    def bwrite_sync(self, sb: SuperBlockCap, bh: BufferHead) -> None:
+        self._cache_of(sb).write_now(bh)
+
+    def flush(self, sb: SuperBlockCap, blocknos: Optional[List[int]] = None) -> int:
+        """Batched writeback — the `writepages` analogue."""
+        return self._cache_of(sb).flush(blocknos)
+
+    def n_dirty(self, sb: SuperBlockCap) -> int:
+        return self._cache_of(sb).n_dirty
+
+    # --- misc services -----------------------------------------------------------------
+    def create_lock(self) -> threading.RLock:
+        return threading.RLock()
+
+    def checksum(self, data: bytes) -> int:
+        return self._checksum(data)
+
+    def checksum_batch(self, blocks) -> List[int]:
+        """Checksum many blocks in one call — the journal commit path uses
+        this so the Pallas kernel launches once per transaction, not once
+        per block."""
+        if self._checksum_batch is not None:
+            return self._checksum_batch(blocks)
+        return [self._checksum(b) for b in blocks]
+
+    def time(self) -> float:
+        return _time.time()
+
+    def log_warn(self, msg: str) -> None:
+        self._log.append(msg)
+
+    # --- teardown ----------------------------------------------------------------------
+    def unmount_checks(self) -> None:
+        self._cache.flush()
+        self._cache.assert_no_leaks()
+
+
+def _crc32_zlib(data: bytes) -> int:
+    return zlib.crc32(data) & 0xFFFFFFFF
+
+
+def _blockhash_pallas(data: bytes) -> int:
+    from repro.kernels.blockhash import ops as bh_ops
+
+    return bh_ops.checksum(data)
+
+
+def kernel_binding(dev: BlockDevice, **kw) -> KernelServices:
+    """Kernel-mode services: Pallas blockhash checksums on TPU (interpret
+    mode is a correctness harness, not a perf path — on CPU the host crc is
+    used unless REPRO_FORCE_PALLAS_CHECKSUM=1, which tests set)."""
+    import os
+
+    import jax
+
+    use_pallas = (jax.default_backend() == "tpu"
+                  or os.environ.get("REPRO_FORCE_PALLAS_CHECKSUM") == "1")
+    cks, cks_b = _crc32_zlib, None
+    if use_pallas:
+        try:
+            from repro.kernels.blockhash import ops as bh_ops
+            cks, cks_b = _blockhash_pallas, bh_ops.checksum_batch
+        except Exception:  # kernels unavailable — fall back
+            pass
+    return KernelServices(dev, checksum=cks, checksum_batch=cks_b,
+                          binding="kernel", **kw)
+
+
+def userspace_binding(dev: BlockDevice, **kw) -> KernelServices:
+    return KernelServices(dev, checksum=_crc32_zlib, binding="userspace", **kw)

@@ -1,0 +1,4 @@
+from repro.data.pipeline import (FsShardReader, Prefetcher, SyntheticLM,
+                                 write_shards)
+
+__all__ = ["FsShardReader", "Prefetcher", "SyntheticLM", "write_shards"]

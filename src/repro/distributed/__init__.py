@@ -1,0 +1,3 @@
+from repro.distributed.sharding import RULESETS, ShardingCtx, resolve_spec
+
+__all__ = ["RULESETS", "ShardingCtx", "resolve_spec"]

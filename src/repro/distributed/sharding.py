@@ -1,0 +1,164 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Model code annotates tensors with *logical* axis names; a ruleset maps each
+logical axis to an ordered preference list of mesh axes. Resolution is
+divisibility-aware and never assigns one mesh axis twice within a spec, so a
+single model codebase supports many sharding strategies — the §Perf hillclimb
+edits rulesets, not models.
+
+Logical axes used across the codebase:
+
+  batch        global batch                     -> data (+pod)
+  seq          sequence (activations)           -> None (baseline) / model (SP)
+  embed        d_model features                 -> None (baseline)
+  heads        query heads                      -> model
+  kv_heads     kv heads                         -> model (when divisible)
+  head_dim     per-head features                -> None
+  mlp          feed-forward hidden              -> model
+  vocab        vocabulary                       -> model
+  experts      MoE expert count                 -> model (expert parallelism)
+  expert_mlp   per-expert hidden                -> None
+  capacity     MoE per-expert capacity          -> None
+  cache_seq    KV-cache sequence                -> model (decode baseline)\n  cache_batch  KV-cache batch                   -> data
+  layers       stacked-scan leading axis        -> None (never sharded)
+  fsdp         weight dim chosen for ZeRO shard -> data (+pod)
+  conv_k       conv kernel taps                 -> None
+  state        SSM state                        -> None
+  img_seq      image/encoder token axis         -> None
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Candidates = Tuple[Tuple[str, ...], ...]  # ordered preference: each entry is a
+# tuple of mesh axes to use *jointly* for the dim (e.g. ("pod","data")).
+
+
+def _ruleset(d: Dict[str, Sequence[Sequence[str]]]) -> Dict[str, Candidates]:
+    return {k: tuple(tuple(e) for e in v) for k, v in d.items()}
+
+
+# Baseline: FSDP(data) x TP(model); pod = outer data parallelism.
+BASELINE = _ruleset({
+    "batch": [("pod", "data"), ("data",)],
+    "seq": [],        # residual stream / remat storage (seqpar shards this)
+    "seq_inner": [],  # inside attention/MLP blocks: always full-seq
+    # (Megatron-SP: all-gather at block entry, reduce-scatter at exit, so
+    # weight-gradient contractions stay local over the model axis)
+    "embed": [],
+    "heads": [("model",)],
+    "kv_heads": [("model",)],
+    "head_dim": [],
+    "mlp": [("model",)],
+    "vocab": [("model",)],
+    "experts": [("model",)],
+    "expert_mlp": [],
+    "capacity": [],
+    "cache_seq": [("model",)],
+    "cache_heads": [("model",)],
+    "cache_batch": [("pod", "data"), ("data",)],
+    "layers": [],
+    "fsdp": [("pod", "data"), ("data",)],
+    "conv_k": [],
+    "state": [],
+    "img_seq": [],
+})
+
+# Sequence-parallel variant: activations' seq axis sharded over model between
+# blocks (used by hillclimbed configs; attention/mlp re-gather internally).
+SEQPAR = dict(BASELINE)
+SEQPAR.update(_ruleset({"seq": [("model",)], "seq_inner": [("model",)]}))
+# NB: a Megatron-SP variant (seq_inner full inside blocks) was tried and
+# REFUTED on this workload: XLA re-gathers activations per projection,
+# 5.7x worse collective traffic — see EXPERIMENTS §Perf iteration log.
+
+# Decode-optimized: single-token activations are tiny, so they are
+# REPLICATED over the data axis (weights stay 2D-sharded and matmuls
+# partial-reduce small outputs instead of all-gathering 100MB+ weight
+# slices every token); the KV cache stays batch-sharded over data and
+# seq-sharded over model, combined via shard_map LSE flash-decoding.
+DECODE_FLASH = dict(BASELINE)
+DECODE_FLASH.update(_ruleset({
+    "batch": [],  # replicate decode activations over batch...
+    "embed": [("data",)],  # ...but shard the residual stream's features over
+    # data, so 2D-sharded weights never need gathering: every matmul
+    # partial-reduces a (B,1,dim) activation instead of a weight slice.
+    "cache_seq": [("model",)],
+    "kv_heads": [],
+    "cache_heads": [],
+}))
+
+RULESETS: Dict[str, Dict[str, Candidates]] = {
+    "baseline": BASELINE,
+    "seqpar": SEQPAR,
+    "decode_flash": DECODE_FLASH,
+    "moe_a2a": BASELINE,  # same layout; the MoE layer switches to shard_map EP
+}
+
+
+def resolve_spec(
+    logical: Sequence[Optional[str]],
+    shape: Sequence[int],
+    mesh: Mesh,
+    rules: Dict[str, Candidates],
+) -> P:
+    """Map logical axes -> PartitionSpec, first-fit with divisibility checks."""
+    assert len(logical) == len(shape), (logical, shape)
+    used: set = set()
+    out = []
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for name, dim in zip(logical, shape):
+        chosen = None
+        if name is not None:
+            for cand in rules.get(name, ()):  # each cand: tuple of mesh axes
+                if any(a in used or a not in axis_sizes for a in cand):
+                    continue
+                total = 1
+                for a in cand:
+                    total *= axis_sizes[a]
+                if total > 1 and dim % total == 0:
+                    chosen = cand
+                    used.update(cand)
+                    break
+        out.append(chosen if chosen is None else (chosen[0] if len(chosen) == 1 else chosen))
+    # Trim trailing Nones for tidier specs.
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingCtx:
+    """Threaded through model code; applies activation constraints.
+
+    mesh=None means single-host testing: constraints become no-ops.
+    """
+
+    mesh: Optional[Mesh]
+    rules: Dict[str, Candidates]
+
+    @staticmethod
+    def null() -> "ShardingCtx":
+        return ShardingCtx(mesh=None, rules=BASELINE)
+
+    @staticmethod
+    def for_mesh(mesh: Optional[Mesh], ruleset: str = "baseline") -> "ShardingCtx":
+        return ShardingCtx(mesh=mesh, rules=RULESETS[ruleset])
+
+    def spec(self, logical: Sequence[Optional[str]], shape: Sequence[int]) -> P:
+        assert self.mesh is not None
+        return resolve_spec(logical, shape, self.mesh, self.rules)
+
+    def sharding(self, logical, shape) -> NamedSharding:
+        assert self.mesh is not None
+        return NamedSharding(self.mesh, self.spec(logical, shape))
+
+    def constrain(self, x: jax.Array, logical: Sequence[Optional[str]]) -> jax.Array:
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, self.sharding(logical, x.shape))

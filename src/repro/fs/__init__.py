@@ -1,0 +1,9 @@
+from repro.fs.blockdev import (BLOCK_SIZE, BlockDevice, FileBlockDevice,
+                               JaxBlockDevice, MemBlockDevice)
+from repro.fs.buffercache import BufferCache, BufferHead, BufferLeak
+from repro.fs.posix import PosixView
+
+__all__ = [
+    "BLOCK_SIZE", "BlockDevice", "BufferCache", "BufferHead", "BufferLeak",
+    "FileBlockDevice", "JaxBlockDevice", "MemBlockDevice", "PosixView",
+]

@@ -1,0 +1,164 @@
+"""Block devices.
+
+Three backends with one interface:
+
+* ``MemBlockDevice`` — host-memory numpy array ("kernel mode" binding; the
+  disk is hardware, not compute, so host memory is the honest stand-in).
+* ``FileBlockDevice`` — file-backed ("userspace mode" binding, used by the
+  FUSE bridge subprocess; O_DIRECT-style full-block transfers only).
+* ``JaxBlockDevice`` — pure-jnp immutable device (``.at[]`` updates), used
+  by property tests to keep the substrate expressible in JAX end-to-end and
+  by the Pallas crc32c checksum path.
+
+All I/O is whole blocks; partial writes are the caller's read-modify-write
+(exactly the buffer-cache contract).
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+from typing import Optional
+
+import numpy as np
+
+BLOCK_SIZE = 4096
+
+
+class BlockDeviceError(Exception):
+    pass
+
+
+class BlockDevice:
+    """Interface + common checks."""
+
+    block_size: int
+    n_blocks: int
+    device_id: str
+
+    def read_block(self, blockno: int) -> bytes:
+        raise NotImplementedError
+
+    def write_block(self, blockno: int, data: bytes) -> None:
+        raise NotImplementedError
+
+    def sync(self) -> None:
+        pass
+
+    def _check(self, blockno: int, data: Optional[bytes] = None) -> None:
+        if not (0 <= blockno < self.n_blocks):
+            raise BlockDeviceError(f"block {blockno} out of range 0..{self.n_blocks}")
+        if data is not None and len(data) != self.block_size:
+            raise BlockDeviceError(
+                f"partial write ({len(data)} != {self.block_size}) — "
+                "read-modify-write through the buffer cache")
+
+    # --- fault injection (crash-recovery property tests) --------------------------
+    fail_after_writes: int = -1  # -1 disabled; else raise after N writes
+    _writes_seen: int = 0
+
+    def _maybe_fail(self) -> None:
+        if self.fail_after_writes >= 0:
+            if self._writes_seen >= self.fail_after_writes:
+                raise BlockDeviceError("injected crash: device lost power")
+            self._writes_seen += 1
+
+
+class MemBlockDevice(BlockDevice):
+    def __init__(self, n_blocks: int, block_size: int = BLOCK_SIZE,
+                 device_id: str = "mem0"):
+        self.block_size = block_size
+        self.n_blocks = n_blocks
+        self.device_id = device_id
+        self._data = np.zeros((n_blocks, block_size), dtype=np.uint8)
+        self._lock = threading.Lock()
+        self.reads = 0
+        self.writes = 0
+
+    def read_block(self, blockno: int) -> bytes:
+        self._check(blockno)
+        with self._lock:
+            self.reads += 1
+            return self._data[blockno].tobytes()
+
+    def write_block(self, blockno: int, data: bytes) -> None:
+        self._check(blockno, data)
+        with self._lock:
+            self._maybe_fail()
+            self.writes += 1
+            self._data[blockno] = np.frombuffer(data, dtype=np.uint8)
+
+    def snapshot(self) -> "MemBlockDevice":
+        """Copy-on-crash snapshot for recovery tests."""
+        dev = MemBlockDevice(self.n_blocks, self.block_size, self.device_id)
+        dev._data = self._data.copy()
+        return dev
+
+
+class FileBlockDevice(BlockDevice):
+    """File-backed device (userspace binding). Whole-block pread/pwrite."""
+
+    def __init__(self, path: str, n_blocks: int, block_size: int = BLOCK_SIZE,
+                 device_id: str = "file0"):
+        self.block_size = block_size
+        self.n_blocks = n_blocks
+        self.device_id = device_id
+        self.path = path
+        flags = os.O_RDWR | os.O_CREAT
+        self._fd = os.open(path, flags, 0o644)
+        os.ftruncate(self._fd, n_blocks * block_size)
+        self._lock = threading.Lock()
+        self.reads = 0
+        self.writes = 0
+
+    def read_block(self, blockno: int) -> bytes:
+        self._check(blockno)
+        with self._lock:
+            self.reads += 1
+            return os.pread(self._fd, self.block_size, blockno * self.block_size)
+
+    def write_block(self, blockno: int, data: bytes) -> None:
+        self._check(blockno, data)
+        with self._lock:
+            self._maybe_fail()
+            self.writes += 1
+            os.pwrite(self._fd, data, blockno * self.block_size)
+
+    def sync(self) -> None:
+        os.fsync(self._fd)
+
+    def close(self) -> None:
+        os.close(self._fd)
+
+
+class JaxBlockDevice(BlockDevice):
+    """Immutable jnp-backed device: functional `.at[]` updates.
+
+    Slow by design; exists so the whole storage substrate is expressible in
+    JAX (property tests + the Pallas checksum path run against it).
+    """
+
+    def __init__(self, n_blocks: int, block_size: int = BLOCK_SIZE,
+                 device_id: str = "jax0"):
+        import jax.numpy as jnp
+
+        self.block_size = block_size
+        self.n_blocks = n_blocks
+        self.device_id = device_id
+        self._data = jnp.zeros((n_blocks, block_size), dtype=jnp.uint8)
+        self.reads = 0
+        self.writes = 0
+
+    def read_block(self, blockno: int) -> bytes:
+        self._check(blockno)
+        self.reads += 1
+        return bytes(np.asarray(self._data[blockno]))
+
+    def write_block(self, blockno: int, data: bytes) -> None:
+        self._check(blockno, data)
+        self._maybe_fail()
+        self.writes += 1
+        import jax.numpy as jnp
+
+        arr = jnp.frombuffer(bytearray(data), dtype=jnp.uint8)
+        self._data = self._data.at[blockno].set(arr)

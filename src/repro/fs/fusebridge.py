@@ -1,0 +1,175 @@
+"""FUSE baseline: the file system in a separate *daemon process*
+("userspace"), every operation marshalled over a unix socket — a real
+address-space crossing with real serialization cost, not a simulated sleep.
+
+Mirrors the paper's FUSE setup: the same fs code, userspace services
+binding (file-backed block device, whole-file fsync — the paper's "no way
+to sync parts of a file" penalty), and per-operation request/response
+messages through the kernel boundary (here: a unix socket with
+length-prefixed pickle frames + a context switch per op).
+
+The daemon is a plain ``subprocess`` running ``python -m
+repro.fs.fusebridge`` — no multiprocessing fork/spawn games, so it is safe
+to start from a multithreaded JAX parent.
+"""
+
+from __future__ import annotations
+
+import os
+import pickle
+import socket
+import struct
+import subprocess
+import sys
+import tempfile
+import threading
+import time
+from typing import Any, Optional
+
+from repro.core.interface import Errno, FsError
+
+_FS_OPS = ("getattr", "lookup", "create", "mkdir", "unlink", "rmdir", "rename",
+           "readdir", "read", "write", "truncate", "fsync", "flush", "statfs")
+
+
+def _send(sock: socket.socket, obj: Any) -> None:
+    raw = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
+    sock.sendall(struct.pack("<I", len(raw)) + raw)
+
+
+def _recv(sock: socket.socket) -> Any:
+    hdr = _recv_exact(sock, 4)
+    (n,) = struct.unpack("<I", hdr)
+    return pickle.loads(_recv_exact(sock, n))
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes:
+    buf = b""
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            raise EOFError("fuse daemon connection closed")
+        buf += chunk
+    return buf
+
+
+def serve(sock_path: str, backing_path: str, n_blocks: int, fs_kind: str) -> None:
+    """Daemon main: userspace binding + the same fs code."""
+    from repro.core.services import userspace_binding
+    from repro.fs.blockdev import FileBlockDevice
+    from repro.fs.ext4like import Ext4LikeFileSystem
+    from repro.fs.xv6 import Xv6FileSystem, Xv6Options, mkfs
+
+    dev = FileBlockDevice(backing_path, n_blocks)
+    ks = userspace_binding(dev)
+    mkfs(ks)
+    # userspace policy: synchronous installs, whole-file fsync
+    opts = Xv6Options(group_commit=True, batched_install=False)
+    fs = (Ext4LikeFileSystem(opts) if fs_kind == "ext4like"
+          else Xv6FileSystem(opts))
+    fs.init(ks.superblock(), ks)
+
+    srv = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+    srv.bind(sock_path)
+    srv.listen(1)
+    conn, _ = srv.accept()
+    try:
+        while True:
+            try:
+                msg = _recv(conn)
+            except EOFError:
+                break
+            if msg is None:
+                break
+            op, args, kw = msg
+            try:
+                if op == "fsync":
+                    # paper: the file interface can't sync parts of a file —
+                    # the whole backing file is synced per fsync.
+                    fs.journal.commit()
+                    dev.sync()
+                    _send(conn, ("ok", None))
+                    continue
+                res = getattr(fs, op)(*args, **kw)
+                _send(conn, ("ok", res))
+            except FsError as e:
+                _send(conn, ("fs_error", int(e.errno)))
+            except Exception as e:  # noqa: BLE001
+                _send(conn, ("error", f"{type(e).__name__}: {e}"))
+    finally:
+        fs.destroy()
+        dev.close()
+        conn.close()
+        srv.close()
+
+
+class FuseMount:
+    """Client-side mount handle: same call surface as core.registry.Mount."""
+
+    def __init__(self, n_blocks: int = 16384, fs_kind: str = "xv6",
+                 backing_path: Optional[str] = None):
+        self._tmpdir = tempfile.mkdtemp(prefix="fusebridge_")
+        if backing_path is None:
+            backing_path = os.path.join(self._tmpdir, "disk.img")
+        self.backing_path = backing_path
+        sock_path = os.path.join(self._tmpdir, "fuse.sock")
+        env = dict(os.environ)
+        src_root = os.path.dirname(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))))
+        env["PYTHONPATH"] = src_root + os.pathsep + env.get("PYTHONPATH", "")
+        self._proc = subprocess.Popen(
+            [sys.executable, "-m", "repro.fs.fusebridge", sock_path,
+             backing_path, str(n_blocks), fs_kind],
+            env=env, stdout=subprocess.DEVNULL, stderr=subprocess.PIPE)
+        self._sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        deadline = time.time() + 30
+        while True:
+            try:
+                self._sock.connect(sock_path)
+                break
+            except (FileNotFoundError, ConnectionRefusedError):
+                if self._proc.poll() is not None:
+                    err = self._proc.stderr.read().decode()[-2000:]
+                    raise RuntimeError(f"fuse daemon died at startup: {err}")
+                if time.time() > deadline:
+                    raise TimeoutError("fuse daemon did not come up")
+                time.sleep(0.02)
+        self.generation = 1
+        self.name = f"fuse-{fs_kind}"
+        self._lock = threading.Lock()  # one in-flight request per channel
+
+    def call(self, op: str, *args, **kw) -> Any:
+        with self._lock:
+            _send(self._sock, (op, args, kw))
+            status, payload = _recv(self._sock)
+        if status == "ok":
+            return payload
+        if status == "fs_error":
+            raise FsError(Errno(payload))
+        raise RuntimeError(payload)
+
+    def __getattr__(self, op: str):
+        if op in _FS_OPS:
+            return lambda *a, **k: self.call(op, *a, **k)
+        raise AttributeError(op)
+
+    def unmount(self) -> None:
+        try:
+            self.call("flush")
+            _send(self._sock, None)
+        except (BrokenPipeError, EOFError, OSError):
+            pass
+        self._sock.close()
+        try:
+            self._proc.wait(timeout=10)
+        except subprocess.TimeoutExpired:
+            self._proc.terminate()
+        for f in ("disk.img", "fuse.sock"):
+            p = os.path.join(self._tmpdir, f)
+            if os.path.exists(p):
+                os.unlink(p)
+        os.rmdir(self._tmpdir)
+
+
+if __name__ == "__main__":
+    serve(sys.argv[1], sys.argv[2], int(sys.argv[3]), sys.argv[4])

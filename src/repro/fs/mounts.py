@@ -1,0 +1,89 @@
+"""The benchmark mount matrix — paper Table 2 made executable.
+
+  bento    xv6 through the Bento typed boundary, kernel binding,
+           group commit + writepages-batched install (inherits the FUSE
+           kernel module's optimizations, like the paper's Bento).
+  vfs      the same xv6 logic called directly (no capability checks, no op
+           gate), write-through cache, per-operation commit — the
+           "just written for this evaluation" C baseline.
+  fuse     xv6 in a subprocess behind full serialization (userspace).
+  ext4like the optimized commercial-grade baseline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict
+
+from repro.core.registry import Mount, mount as bento_mount
+from repro.core.services import kernel_binding, userspace_binding
+from repro.fs.blockdev import MemBlockDevice
+from repro.fs.ext4like import Ext4LikeFileSystem
+from repro.fs.fusebridge import FuseMount
+from repro.fs.posix import PosixView
+from repro.fs.xv6 import Xv6FileSystem, Xv6Options, mkfs
+
+_FS_OPS = ("getattr", "lookup", "create", "mkdir", "unlink", "rmdir", "rename",
+           "readdir", "read", "write", "truncate", "fsync", "flush", "statfs")
+
+
+class DirectMount:
+    """VFS-direct baseline: raw calls into the fs object — no dispatch table,
+    no gate, no capability discipline (the unsafe fast path)."""
+
+    def __init__(self, fs):
+        self.module = fs
+        self.generation = 1
+        self.name = "vfs-direct"
+        for op in _FS_OPS:
+            setattr(self, op, getattr(fs, op))
+
+    def call(self, op, *a, **k):
+        return getattr(self.module, op)(*a, **k)
+
+    def unmount(self) -> None:
+        self.module.flush()
+        self.module.destroy()
+
+
+@dataclasses.dataclass
+class MountedFs:
+    kind: str
+    mount: Any
+    view: PosixView
+    services: Any = None
+
+    def close(self) -> None:
+        self.mount.unmount()
+
+
+def make_mount(kind: str, n_blocks: int = 16384) -> MountedFs:
+    if kind == "bento":
+        dev = MemBlockDevice(n_blocks)
+        ks = kernel_binding(dev)
+        mkfs(ks)
+        fs = Xv6FileSystem(Xv6Options(group_commit=True, batched_install=True))
+        m = bento_mount("xv6", ks, module=fs)
+        return MountedFs(kind, m, PosixView(m), ks)
+    if kind == "vfs":
+        dev = MemBlockDevice(n_blocks)
+        ks = kernel_binding(dev, writeback="through")
+        mkfs(ks)
+        fs = Xv6FileSystem(Xv6Options(group_commit=False, batched_install=False))
+        fs.init(ks.superblock(), ks)
+        m = DirectMount(fs)
+        return MountedFs(kind, m, PosixView(m), ks)
+    if kind == "fuse":
+        m = FuseMount(n_blocks=n_blocks, fs_kind="xv6")
+        return MountedFs(kind, m, PosixView(m))
+    if kind == "ext4like":
+        dev = MemBlockDevice(n_blocks)
+        ks = kernel_binding(dev)
+        mkfs(ks)
+        fs = Ext4LikeFileSystem()
+        m = bento_mount("ext4like", ks, module=fs)
+        return MountedFs(kind, m, PosixView(m), ks)
+    raise KeyError(kind)
+
+
+ALL_KINDS = ("bento", "vfs", "fuse", "ext4like")

@@ -1,0 +1,151 @@
+"""POSIX-style path API over a mounted Bento file system.
+
+This is the application-facing layer the benchmarks, the checkpoint store
+and the examples use; it performs path walking + dentry caching on top of
+the inode-granular file-operations API (like the kernel side of VFS does).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.interface import Attr, Errno, FsError, ROOT_INO
+
+
+class PosixView:
+    def __init__(self, mount, dentry_cache: bool = True):
+        self.m = mount
+        self._dcache: Dict[Tuple[int, str], int] = {}
+        self._use_dcache = dentry_cache
+
+    # --- path walking -------------------------------------------------------------
+    def _walk(self, path: str) -> int:
+        ino = ROOT_INO
+        for part in self._parts(path):
+            key = (ino, part)
+            hit = self._dcache.get(key) if self._use_dcache else None
+            if hit is not None:
+                ino = hit
+                continue
+            attr = self.m.lookup(ino, part)
+            if self._use_dcache:
+                self._dcache[key] = attr.ino
+            ino = attr.ino
+        return ino
+
+    @staticmethod
+    def _parts(path: str) -> List[str]:
+        return [p for p in path.split("/") if p]
+
+    def _split(self, path: str) -> Tuple[int, str]:
+        parts = self._parts(path)
+        if not parts:
+            raise FsError(Errno.EINVAL, path)
+        parent = ROOT_INO
+        for p in parts[:-1]:
+            parent = self._walk_one(parent, p)
+        return parent, parts[-1]
+
+    def _walk_one(self, parent: int, name: str) -> int:
+        key = (parent, name)
+        hit = self._dcache.get(key) if self._use_dcache else None
+        if hit is not None:
+            return hit
+        ino = self.m.lookup(parent, name).ino
+        if self._use_dcache:
+            self._dcache[key] = ino
+        return ino
+
+    def _invalidate(self, parent: int, name: str) -> None:
+        self._dcache.pop((parent, name), None)
+
+    # --- API ------------------------------------------------------------------------
+    def create(self, path: str) -> Attr:
+        parent, name = self._split(path)
+        attr = self.m.create(parent, name)
+        if self._use_dcache:
+            self._dcache[(parent, name)] = attr.ino
+        return attr
+
+    def mkdir(self, path: str) -> Attr:
+        parent, name = self._split(path)
+        attr = self.m.mkdir(parent, name)
+        if self._use_dcache:
+            self._dcache[(parent, name)] = attr.ino
+        return attr
+
+    def makedirs(self, path: str) -> None:
+        parts = self._parts(path)
+        cur = ""
+        for p in parts:
+            cur += "/" + p
+            try:
+                self.mkdir(cur)
+            except FsError as e:
+                if e.errno != Errno.EEXIST:
+                    raise
+
+    def unlink(self, path: str) -> None:
+        parent, name = self._split(path)
+        self.m.unlink(parent, name)
+        self._invalidate(parent, name)
+
+    def rmdir(self, path: str) -> None:
+        parent, name = self._split(path)
+        self.m.rmdir(parent, name)
+        self._invalidate(parent, name)
+
+    def rename(self, old: str, new: str) -> None:
+        p1, n1 = self._split(old)
+        p2, n2 = self._split(new)
+        self.m.rename(p1, n1, p2, n2)
+        self._invalidate(p1, n1)
+        self._invalidate(p2, n2)
+
+    def listdir(self, path: str) -> List[str]:
+        ino = self._walk(path)
+        return [name for name, _, _ in self.m.readdir(ino)]
+
+    def stat(self, path: str) -> Attr:
+        return self.m.getattr(self._walk(path))
+
+    def exists(self, path: str) -> bool:
+        try:
+            self._walk(path)
+            return True
+        except FsError:
+            return False
+
+    def write_file(self, path: str, data: bytes, *, off: int = 0,
+                   create: bool = True) -> int:
+        try:
+            ino = self._walk(path)
+        except FsError as e:
+            if e.errno != Errno.ENOENT or not create:
+                raise
+            ino = self.create(path).ino
+        return self.m.write(ino, off, data)
+
+    def append(self, path: str, data: bytes) -> int:
+        try:
+            ino = self._walk(path)
+            size = self.m.getattr(ino).size
+        except FsError:
+            ino = self.create(path).ino
+            size = 0
+        return self.m.write(ino, size, data)
+
+    def read_file(self, path: str, off: int = 0, size: int = -1) -> bytes:
+        ino = self._walk(path)
+        if size < 0:
+            size = self.m.getattr(ino).size - off
+        return self.m.read(ino, off, max(size, 0))
+
+    def truncate(self, path: str, size: int) -> None:
+        self.m.truncate(self._walk(path), size)
+
+    def fsync(self, path: str) -> None:
+        self.m.fsync(self._walk(path))
+
+    def statfs(self) -> Dict[str, int]:
+        return self.m.statfs()

@@ -1,0 +1,588 @@
+"""The xv6 file system on the Bento file-operations API.
+
+Faithful to the paper's evaluation vehicle: journaling (data=journal, like
+the paper's ext4 mount), 12 direct + indirect + double-indirect addressing
+(their 4 GB-file extension), locks around inode/block allocation (their
+race fix), fixed-size directory entries.
+
+One implementation, policy-parameterized, mounted three ways by the
+benchmark matrix (see repro.fs.mounts):
+  * bento  — group commit + batched (`writepages`) install,
+  * vfs    — per-operation commit + synchronous install ("the VFS baseline
+             was just written for this evaluation" — paper §6),
+  * fuse   — same code behind a subprocess serialization bridge.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.capability import SuperBlockCap
+from repro.core.interface import (Attr, BentoFilesystem, Errno, FileKind,
+                                  FsError, ROOT_INO)
+from repro.fs import layout as L
+from repro.fs.journal import Journal
+
+
+MAXOP_BLOCKS = 16  # journal blocks one (sub-)operation may touch
+
+
+@dataclasses.dataclass(frozen=True)
+class Xv6Options:
+    group_commit: bool = True  # False: commit at end of every operation
+    batched_install: bool = True  # writepages-style journal install
+    commit_threshold: float = 0.75  # commit when journal this full
+
+
+def mkfs(services, ninodes: int = 4096, nlog: int = 64) -> None:
+    """Format the device: superblock, journal, inode table, bitmap, root."""
+    sb_cap = services.superblock()
+    n = sb_cap.n_blocks
+    geo = L.geometry(n, ninodes=ninodes, nlog=nlog)
+    with services.sb_getblk_zero(sb_cap, 0) as bh:
+        bh.data()[:] = geo.pack()
+        services.bwrite_sync(sb_cap, bh)
+    # zero journal + inode table + bitmap
+    for b in range(geo.logstart, geo.datastart):
+        with services.sb_getblk_zero(sb_cap, b) as bh:
+            services.bwrite_sync(sb_cap, bh)
+    # mark metadata blocks used in the bitmap
+    used = geo.datastart
+    for b in range(used):
+        _bitmap_set(services, sb_cap, geo, b, True)
+    # root directory inode
+    root = L.DiskInode(type=L.T_DIR, nlink=2, size=0)
+    _write_inode_raw(services, sb_cap, geo, ROOT_INO, root)
+
+
+def _bitmap_set(services, sb_cap, geo: L.SuperBlock, blockno: int, used: bool):
+    bmblock = geo.bmapstart + blockno // (L.BSIZE * 8)
+    bit = blockno % (L.BSIZE * 8)
+    with services.sb_bread(sb_cap, bmblock) as bh:
+        buf = bh.data()
+        if used:
+            buf[bit // 8] |= 1 << (bit % 8)
+        else:
+            buf[bit // 8] &= ~(1 << (bit % 8))
+        services.bwrite_sync(sb_cap, bh)
+
+
+def _write_inode_raw(services, sb_cap, geo, ino: int, di: L.DiskInode) -> None:
+    blk = geo.inodestart + ino // L.IPB
+    off = (ino % L.IPB) * L.INODE_SIZE
+    with services.sb_bread(sb_cap, blk) as bh:
+        bh.data()[off: off + L.INODE_SIZE] = di.pack()
+        services.bwrite_sync(sb_cap, bh)
+
+
+class Xv6FileSystem(BentoFilesystem):
+    NAME = "xv6"
+    VERSION = 1
+
+    def __init__(self, options: Xv6Options = Xv6Options()):
+        self.opts = options
+        self.ks = None
+        self.sb_cap: Optional[SuperBlockCap] = None
+        self.geo: Optional[L.SuperBlock] = None
+        self.journal: Optional[Journal] = None
+        self._oplock = threading.RLock()  # big fs lock (paper: added locks)
+        self._alloc_lock = threading.RLock()
+        self._icache: Dict[int, L.DiskInode] = {}
+        self._free_hint = 0
+        self._free_inode_hint = 2
+        self.stats = {"ops": 0, "commits_forced": 0}
+
+    # --- lifecycle -----------------------------------------------------------------
+    def init(self, sb: SuperBlockCap, services) -> None:
+        self.ks = services
+        self.sb_cap = sb
+        with services.sb_bread(sb, 0) as bh:
+            self.geo = L.SuperBlock.unpack(bytes(bh.data()))
+        if self.geo.magic != L.FSMAGIC:
+            raise FsError(Errno.EINVAL, "bad magic: not an xv6 filesystem")
+        self.journal = Journal(services, sb, self.geo,
+                               batched_install=self.opts.batched_install)
+        self.journal.recover()
+
+    def destroy(self) -> None:
+        if self.journal:
+            self.journal.commit()
+        if self.ks and self.sb_cap:
+            self.ks.flush(self.sb_cap)
+
+    # --- §4.8 state transfer ------------------------------------------------------------
+    def extract_state(self) -> Dict:
+        self.flush()  # quiesced by the runtime; drain to a clean point
+        return {
+            "icache": {ino: dataclasses.asdict(di)
+                       for ino, di in self._icache.items()},
+            "free_hint": self._free_hint,
+            "free_inode_hint": self._free_inode_hint,
+            "journal": self.journal.extract_state(),
+            "stats": dict(self.stats),
+        }
+
+    def restore_state(self, state: Dict, from_version: int) -> None:
+        self._icache = {int(k): L.DiskInode(**v)
+                        for k, v in state.get("icache", {}).items()}
+        self._free_hint = state.get("free_hint", 0)
+        self._free_inode_hint = state.get("free_inode_hint", 2)
+        self.journal.restore_state(state.get("journal", {}))
+        self.stats.update(state.get("stats", {}))
+
+    def state_schema(self) -> Tuple[str, ...]:
+        return ("icache", "free_hint", "free_inode_hint", "journal", "stats")
+
+    # --- journal-aware block IO -----------------------------------------------------------
+    def _bread(self, blockno: int):
+        bh = self.ks.sb_bread(self.sb_cap, blockno)
+        pend = self.journal.pending_get(blockno)
+        if pend is not None and bytes(bh.data()) != pend:
+            bh.data()[:] = pend
+        return bh
+
+    def _log(self, blockno: int, data: bytes) -> None:
+        self.journal.log_write(blockno, data)
+
+    def _begin_op(self) -> None:
+        """Reserve journal space for one (sub-)operation — commits the
+        running transaction first if it could not absorb MAXOP_BLOCKS more
+        (xv6 begin_op), so operations are never torn across commits."""
+        if len(self.journal._pending) + MAXOP_BLOCKS >= self.journal.capacity:
+            self.stats["commits_forced"] += 1
+            self.journal.commit()
+
+    def _end_op(self, mutated: bool) -> None:
+        self.stats["ops"] += 1
+        if not mutated:
+            return
+        if not self.opts.group_commit:
+            self.journal.commit()
+        elif len(self.journal._pending) >= int(
+                self.journal.capacity * self.opts.commit_threshold):
+            self.stats["commits_forced"] += 1
+            self.journal.commit()
+
+    # --- inodes ---------------------------------------------------------------------------
+    def _iget(self, ino: int) -> L.DiskInode:
+        if not (0 < ino < self.geo.ninodes):
+            raise FsError(Errno.ESTALE, f"bad ino {ino}")
+        di = self._icache.get(ino)
+        if di is None:
+            blk = self.geo.inodestart + ino // L.IPB
+            off = (ino % L.IPB) * L.INODE_SIZE
+            with self._bread(blk) as bh:
+                di = L.DiskInode.unpack(bytes(bh.data()), off)
+            self._icache[ino] = di
+        return di
+
+    def _iupdate(self, ino: int, di: L.DiskInode) -> None:
+        self._icache[ino] = di
+        blk = self.geo.inodestart + ino // L.IPB
+        off = (ino % L.IPB) * L.INODE_SIZE
+        with self._bread(blk) as bh:
+            bh.data()[off: off + L.INODE_SIZE] = di.pack()
+            self._log(blk, bytes(bh.data()))
+
+    def _ialloc(self, kind: int) -> int:
+        with self._alloc_lock:  # paper: lock around inode allocation
+            start = self._free_inode_hint
+            for delta in range(self.geo.ninodes - 2):
+                ino = 2 + (start - 2 + delta) % (self.geo.ninodes - 2)
+                di = self._iget(ino)
+                if di.type == L.T_FREE:
+                    ndi = L.DiskInode(type=kind, nlink=1)
+                    self._iupdate(ino, ndi)
+                    self._free_inode_hint = ino + 1
+                    return ino
+            raise FsError(Errno.ENOSPC, "out of inodes")
+
+    # --- block allocator ----------------------------------------------------------------------
+    def _balloc(self) -> int:
+        with self._alloc_lock:  # paper: lock around block allocation
+            total = self.geo.size
+            bits_per = L.BSIZE * 8
+            start = max(self._free_hint, self.geo.datastart)
+            for delta in range(total - self.geo.datastart):
+                b = self.geo.datastart + (start - self.geo.datastart + delta) % (
+                    total - self.geo.datastart)
+                bmblock = self.geo.bmapstart + b // bits_per
+                bit = b % bits_per
+                with self._bread(bmblock) as bh:
+                    buf = bh.data()
+                    if not (buf[bit // 8] >> (bit % 8)) & 1:
+                        buf[bit // 8] |= 1 << (bit % 8)
+                        self._log(bmblock, bytes(buf))
+                        self._free_hint = b + 1
+                        # zero the block (journaled)
+                        self._log(b, bytes(L.BSIZE))
+                        return b
+            raise FsError(Errno.ENOSPC, "device full")
+
+    def _bfree(self, b: int) -> None:
+        with self._alloc_lock:
+            bits_per = L.BSIZE * 8
+            bmblock = self.geo.bmapstart + b // bits_per
+            bit = b % bits_per
+            with self._bread(bmblock) as bh:
+                buf = bh.data()
+                buf[bit // 8] &= ~(1 << (bit % 8))
+                self._log(bmblock, bytes(buf))
+            self._free_hint = min(self._free_hint, b)
+
+    # --- bmap: logical file block -> device block ----------------------------------------------
+    def _bmap(self, ino: int, di: L.DiskInode, bn: int, alloc: bool) -> int:
+        NI = L.NINDIRECT
+        if bn < L.NDIRECT:
+            if di.addrs[bn] == 0:
+                if not alloc:
+                    return 0
+                di.addrs[bn] = self._balloc()
+                self._iupdate(ino, di)
+            return di.addrs[bn]
+        bn -= L.NDIRECT
+        if bn < NI:
+            return self._indirect(ino, di, L.NDIRECT, bn, alloc)
+        bn -= NI
+        if bn < NI * NI:
+            # double indirect
+            if di.addrs[L.NDIRECT + 1] == 0:
+                if not alloc:
+                    return 0
+                di.addrs[L.NDIRECT + 1] = self._balloc()
+                self._iupdate(ino, di)
+            l1 = di.addrs[L.NDIRECT + 1]
+            l2 = self._ind_entry(l1, bn // NI, alloc)
+            if l2 == 0:
+                return 0
+            return self._ind_entry(l2, bn % NI, alloc)
+        raise FsError(Errno.EFBIG, "file too large")
+
+    def _indirect(self, ino: int, di: L.DiskInode, slot: int, idx: int,
+                  alloc: bool) -> int:
+        if di.addrs[slot] == 0:
+            if not alloc:
+                return 0
+            di.addrs[slot] = self._balloc()
+            self._iupdate(ino, di)
+        return self._ind_entry(di.addrs[slot], idx, alloc)
+
+    def _ind_entry(self, indblock: int, idx: int, alloc: bool) -> int:
+        import struct
+        with self._bread(indblock) as bh:
+            buf = bh.data()
+            (val,) = struct.unpack_from("<I", buf, idx * 4)
+            if val == 0 and alloc:
+                val = self._balloc()
+                # NB: _balloc may journal this ind block via pending overlay;
+                # re-read through the overlay before mutating.
+                pend = self.journal.pending_get(indblock)
+                if pend is not None:
+                    buf[:] = pend
+                struct.pack_into("<I", buf, idx * 4, val)
+                self._log(indblock, bytes(buf))
+        return val
+
+    # --- attrs ------------------------------------------------------------------------------------
+    def _attr(self, ino: int, di: L.DiskInode) -> Attr:
+        kind = FileKind.DIR if di.type == L.T_DIR else FileKind.FILE
+        return Attr(ino=ino, kind=kind, size=di.size, nlink=di.nlink)
+
+    def getattr(self, ino: int) -> Attr:
+        with self._oplock:
+            di = self._iget(ino)
+            if di.type == L.T_FREE:
+                raise FsError(Errno.ESTALE, f"free inode {ino}")
+            self._end_op(False)
+            return self._attr(ino, di)
+
+    # --- directories ---------------------------------------------------------------------------------
+    def _dir_entries(self, ino: int, di: L.DiskInode):
+        nblocks = (di.size + L.BSIZE - 1) // L.BSIZE
+        for bn in range(nblocks):
+            b = self._bmap(ino, di, bn, alloc=False)
+            if b == 0:
+                continue
+            with self._bread(b) as bh:
+                raw = bytes(bh.data())
+            limit = min(L.BSIZE, di.size - bn * L.BSIZE)
+            for off in range(0, limit, L.DIRENT_SIZE):
+                e_ino, name = L.unpack_dirent(raw, off)
+                yield bn, off, e_ino, name
+
+    def _dirlookup(self, dino: int, di: L.DiskInode, name: str):
+        for bn, off, e_ino, e_name in self._dir_entries(dino, di):
+            if e_ino != 0 and e_name == name:
+                return bn, off, e_ino
+        return None
+
+    def _dirlink(self, dino: int, name: str, ino: int) -> None:
+        di = self._iget(dino)
+        # reuse a hole if any
+        slot = None
+        for bn, off, e_ino, _ in self._dir_entries(dino, di):
+            if e_ino == 0 and slot is None:
+                slot = (bn, off)
+        if slot is None:
+            bn = di.size // L.BSIZE
+            off = di.size % L.BSIZE
+            slot = (bn, off)
+            di.size += L.DIRENT_SIZE
+            self._iupdate(dino, di)
+        b = self._bmap(dino, di, slot[0], alloc=True)
+        with self._bread(b) as bh:
+            bh.data()[slot[1]: slot[1] + L.DIRENT_SIZE] = L.pack_dirent(ino, name)
+            self._log(b, bytes(bh.data()))
+
+    def _dir_unset(self, dino: int, bn: int, off: int) -> None:
+        di = self._iget(dino)
+        b = self._bmap(dino, di, bn, alloc=False)
+        with self._bread(b) as bh:
+            bh.data()[off: off + L.DIRENT_SIZE] = bytes(L.DIRENT_SIZE)
+            self._log(b, bytes(bh.data()))
+
+    def lookup(self, parent: int, name: str) -> Attr:
+        with self._oplock:
+            pdi = self._iget(parent)
+            if pdi.type != L.T_DIR:
+                raise FsError(Errno.ENOTDIR, str(parent))
+            hit = self._dirlookup(parent, pdi, name)
+            self._end_op(False)
+            if hit is None:
+                raise FsError(Errno.ENOENT, name)
+            ino = hit[2]
+            return self._attr(ino, self._iget(ino))
+
+    def readdir(self, ino: int) -> List[Tuple[str, int, FileKind]]:
+        with self._oplock:
+            di = self._iget(ino)
+            if di.type != L.T_DIR:
+                raise FsError(Errno.ENOTDIR, str(ino))
+            out = []
+            for _, _, e_ino, name in self._dir_entries(ino, di):
+                if e_ino != 0:
+                    edi = self._iget(e_ino)
+                    kind = FileKind.DIR if edi.type == L.T_DIR else FileKind.FILE
+                    out.append((name, e_ino, kind))
+            self._end_op(False)
+            return out
+
+    def _create_common(self, parent: int, name: str, kind: int) -> Attr:
+        if len(name.encode()) > L.NAME_MAX or not name or "/" in name:
+            raise FsError(Errno.EINVAL, name)
+        with self._oplock:
+            self._begin_op()
+            pdi = self._iget(parent)
+            if pdi.type != L.T_DIR:
+                raise FsError(Errno.ENOTDIR, str(parent))
+            if self._dirlookup(parent, pdi, name) is not None:
+                raise FsError(Errno.EEXIST, name)
+            ino = self._ialloc(kind)
+            if kind == L.T_DIR:
+                pdi = self._iget(parent)
+                pdi.nlink += 1  # ".." link
+                self._iupdate(parent, pdi)
+                di = self._iget(ino)
+                di.nlink = 2
+                self._iupdate(ino, di)
+            self._dirlink(parent, name, ino)
+            self._end_op(True)
+            return self._attr(ino, self._iget(ino))
+
+    def create(self, parent: int, name: str) -> Attr:
+        return self._create_common(parent, name, L.T_FILE)
+
+    def mkdir(self, parent: int, name: str) -> Attr:
+        return self._create_common(parent, name, L.T_DIR)
+
+    def _itrunc(self, ino: int, di: L.DiskInode) -> None:
+        import struct
+        NI = L.NINDIRECT
+        for i in range(L.NDIRECT):
+            if di.addrs[i]:
+                self._bfree(di.addrs[i])
+                di.addrs[i] = 0
+        if di.addrs[L.NDIRECT]:
+            with self._bread(di.addrs[L.NDIRECT]) as bh:
+                raw = bytes(bh.data())
+            for i in range(NI):
+                (v,) = struct.unpack_from("<I", raw, i * 4)
+                if v:
+                    self._bfree(v)
+            self._bfree(di.addrs[L.NDIRECT])
+            di.addrs[L.NDIRECT] = 0
+        if di.addrs[L.NDIRECT + 1]:
+            with self._bread(di.addrs[L.NDIRECT + 1]) as bh:
+                raw1 = bytes(bh.data())
+            for i in range(NI):
+                (l2,) = struct.unpack_from("<I", raw1, i * 4)
+                if l2:
+                    with self._bread(l2) as bh:
+                        raw2 = bytes(bh.data())
+                    for j in range(NI):
+                        (v,) = struct.unpack_from("<I", raw2, j * 4)
+                        if v:
+                            self._bfree(v)
+                    self._bfree(l2)
+            self._bfree(di.addrs[L.NDIRECT + 1])
+            di.addrs[L.NDIRECT + 1] = 0
+        di.size = 0
+        self._iupdate(ino, di)
+
+    def unlink(self, parent: int, name: str) -> None:
+        with self._oplock:
+            self._begin_op()
+            pdi = self._iget(parent)
+            hit = self._dirlookup(parent, pdi, name)
+            if hit is None:
+                raise FsError(Errno.ENOENT, name)
+            bn, off, ino = hit
+            di = self._iget(ino)
+            if di.type == L.T_DIR:
+                raise FsError(Errno.EISDIR, name)
+            self._dir_unset(parent, bn, off)
+            di.nlink -= 1
+            if di.nlink <= 0:
+                self._itrunc(ino, di)
+                di.type = L.T_FREE
+            self._iupdate(ino, di)
+            self._end_op(True)
+
+    def rmdir(self, parent: int, name: str) -> None:
+        with self._oplock:
+            self._begin_op()
+            pdi = self._iget(parent)
+            hit = self._dirlookup(parent, pdi, name)
+            if hit is None:
+                raise FsError(Errno.ENOENT, name)
+            bn, off, ino = hit
+            di = self._iget(ino)
+            if di.type != L.T_DIR:
+                raise FsError(Errno.ENOTDIR, name)
+            if any(e_ino != 0 for _, _, e_ino, _ in self._dir_entries(ino, di)):
+                raise FsError(Errno.ENOTEMPTY, name)
+            self._dir_unset(parent, bn, off)
+            self._itrunc(ino, di)
+            di.type = L.T_FREE
+            di.nlink = 0
+            self._iupdate(ino, di)
+            pdi = self._iget(parent)
+            pdi.nlink -= 1
+            self._iupdate(parent, pdi)
+            self._end_op(True)
+
+    def rename(self, parent: int, name: str, newparent: int, newname: str) -> None:
+        with self._oplock:
+            self._begin_op()
+            pdi = self._iget(parent)
+            hit = self._dirlookup(parent, pdi, name)
+            if hit is None:
+                raise FsError(Errno.ENOENT, name)
+            bn, off, ino = hit
+            ndi = self._iget(newparent)
+            if ndi.type != L.T_DIR:
+                raise FsError(Errno.ENOTDIR, str(newparent))
+            existing = self._dirlookup(newparent, ndi, newname)
+            if existing is not None:
+                raise FsError(Errno.EEXIST, newname)
+            self._dir_unset(parent, bn, off)
+            self._dirlink(newparent, newname, ino)
+            self._end_op(True)
+
+    # --- file data ------------------------------------------------------------------------------------
+    def read(self, ino: int, off: int, size: int) -> bytes:
+        with self._oplock:
+            di = self._iget(ino)
+            if di.type == L.T_DIR:
+                raise FsError(Errno.EISDIR, str(ino))
+            if off >= di.size:
+                return b""
+            size = min(size, di.size - off)
+            out = bytearray()
+            while size > 0:
+                bn, boff = divmod(off, L.BSIZE)
+                n = min(L.BSIZE - boff, size)
+                b = self._bmap(ino, di, bn, alloc=False)
+                if b == 0:
+                    out += bytes(n)  # hole
+                else:
+                    with self._bread(b) as bh:
+                        out += bh.data()[boff: boff + n]
+                off += n
+                size -= n
+            self._end_op(False)
+            return bytes(out)
+
+    def write(self, ino: int, off: int, data: bytes) -> int:
+        with self._oplock:
+            di = self._iget(ino)
+            if di.type == L.T_DIR:
+                raise FsError(Errno.EISDIR, str(ino))
+            if (off + len(data) + L.BSIZE - 1) // L.BSIZE > L.MAXFILE_BLOCKS:
+                raise FsError(Errno.EFBIG, str(ino))
+            pos, n = off, len(data)
+            written = 0
+            blocks_in_subop = MAXOP_BLOCKS  # force reservation on first block
+            while written < n:
+                if blocks_in_subop + 4 >= MAXOP_BLOCKS:  # +4: bitmap/inode/ind
+                    self._begin_op()
+                    blocks_in_subop = 0
+                bn, boff = divmod(pos, L.BSIZE)
+                chunk = min(L.BSIZE - boff, n - written)
+                b = self._bmap(ino, di, bn, alloc=True)
+                if boff == 0 and chunk == L.BSIZE:
+                    self._log(b, bytes(data[written: written + chunk]))
+                else:
+                    with self._bread(b) as bh:
+                        buf = bh.data()
+                        buf[boff: boff + chunk] = data[written: written + chunk]
+                        self._log(b, bytes(buf))
+                blocks_in_subop += 1
+                pos += chunk
+                written += chunk
+                # keep size durable per sub-op so a crash between sub-ops
+                # leaves a consistent (shorter) file
+                if pos > di.size:
+                    di.size = pos
+                    self._iupdate(ino, di)
+            self._end_op(True)
+            return written
+
+    def truncate(self, ino: int, size: int) -> None:
+        with self._oplock:
+            self._begin_op()
+            di = self._iget(ino)
+            if size == 0:
+                self._itrunc(ino, di)
+            elif size < di.size:
+                di.size = size  # lazy: keep blocks (xv6-style simplicity)
+                self._iupdate(ino, di)
+            else:
+                di.size = size
+                self._iupdate(ino, di)
+            self._end_op(True)
+
+    def fsync(self, ino: int) -> None:
+        with self._oplock:
+            self.journal.commit()
+            self._end_op(False)
+
+    def flush(self) -> None:
+        with self._oplock:
+            self.journal.commit()
+            self.ks.flush(self.sb_cap)
+
+    def statfs(self) -> Dict[str, int]:
+        with self._oplock:
+            free = 0
+            for bm in range(self.geo.bmapstart, self.geo.datastart):
+                with self._bread(bm) as bh:
+                    raw = bytes(bh.data())
+                free += sum(8 - bin(byte).count("1") for byte in raw)
+            total_data = self.geo.size - self.geo.datastart
+            self._end_op(False)
+            return {"block_size": L.BSIZE, "total_blocks": self.geo.size,
+                    "data_blocks": total_data, "free_blocks_est": free,
+                    "journal_commits": self.journal.commits}

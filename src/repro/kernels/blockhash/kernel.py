@@ -1,0 +1,41 @@
+"""Journal block-checksum Pallas kernel.
+
+One grid step per 4 KiB block: the (1024,) u32 word vector and the
+precomputed power vector sit in VMEM (8 KiB), the hash is a u32
+multiply-accumulate on the VPU (integer mul wraps mod 2^32 natively).
+Batched: hashes many blocks per call — the journal commit path checksums a
+whole transaction in one kernel launch.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(words_ref, pows_ref, out_ref):
+    w = words_ref[0, :]
+    p = pows_ref[:]
+    out_ref[0] = jnp.sum(w * p, dtype=jnp.uint32)
+
+
+def blockhash_batch(words: jax.Array, pows: jax.Array, *, interpret=False):
+    """words: (nblocks, wpb) u32; pows: (wpb,) u32 -> (nblocks,) u32."""
+    n, wpb = words.shape
+    return pl.pallas_call(
+        _kernel,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, wpb), lambda i: (i, 0)),
+            pl.BlockSpec((wpb,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.uint32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(words, pows)

@@ -1,0 +1,50 @@
+"""Host-facing checksum API used by the kernel-services binding."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.blockhash import kernel as K
+from repro.kernels.blockhash import ref
+
+
+@functools.lru_cache(maxsize=8)
+def _pows(n: int) -> np.ndarray:
+    return ref.powers(n)
+
+
+@functools.lru_cache(maxsize=8)
+def _jitted(wpb: int, interpret: bool):
+    pows = jnp.asarray(_pows(wpb))
+
+    @jax.jit
+    def f(words):
+        return K.blockhash_batch(words, pows, interpret=interpret)
+
+    return f
+
+
+def checksum(data: bytes, *, interpret=None) -> int:
+    """Checksum one block (journal commit-record entries)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    pad = (-len(data)) % 4
+    arr = np.frombuffer(data + b"\0" * pad, dtype=np.uint32)[None, :]
+    out = _jitted(arr.shape[1], interpret)(jnp.asarray(arr))
+    return int(out[0])
+
+
+def checksum_batch(blocks, *, interpret=None) -> list:
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    arrs = []
+    for data in blocks:
+        pad = (-len(data)) % 4
+        arrs.append(np.frombuffer(data + b"\0" * pad, dtype=np.uint32))
+    words = np.stack(arrs)
+    out = _jitted(words.shape[1], interpret)(jnp.asarray(words))
+    return [int(x) for x in out]

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the journal block-checksum kernel.
+
+Polynomial hash over u32 words: h = sum_i word_i * P^(n-1-i)  (mod 2^32),
+P = 0x01000193 (FNV prime). Chosen over CRC32C because CRC's bit-serial
+table chaining is TPU-hostile, while a polynomial hash is a vectorizable
+dot product (HW-adaptation note in DESIGN.md); collision/torn-write
+detection strength is equivalent for journal-commit purposes.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+PRIME = np.uint32(0x01000193)
+
+
+def powers(n: int) -> np.ndarray:
+    """[P^(n-1), ..., P^1, P^0] mod 2^32."""
+    out = np.empty(n, dtype=np.uint32)
+    acc = np.uint32(1)
+    for i in range(n - 1, -1, -1):
+        out[i] = acc
+        acc = np.uint32((int(acc) * int(PRIME)) & 0xFFFFFFFF)
+    return out
+
+
+def blockhash(words: jnp.ndarray, pows: jnp.ndarray) -> jnp.ndarray:
+    """words, pows: (n,) uint32 -> scalar uint32."""
+    return jnp.sum(words.astype(jnp.uint32) * pows.astype(jnp.uint32),
+                   dtype=jnp.uint32)
+
+
+def blockhash_np(data: bytes) -> int:
+    pad = (-len(data)) % 4
+    arr = np.frombuffer(data + b"\0" * pad, dtype=np.uint32)
+    p = powers(len(arr))
+    return int(np.sum(arr.astype(np.uint64) * p.astype(np.uint64)) & 0xFFFFFFFF)

@@ -1,0 +1,50 @@
+"""jit'd wrapper for the flash attention kernel.
+
+Dispatch: Pallas-compiled on TPU, Pallas-interpret for correctness tests on
+CPU, pure-jnp reference for XLA lowerings (the dry-run path) — the same
+one-API-two-bindings philosophy as the Bento services layer.
+
+Backward pass: custom_vjp with recompute — the bwd rule re-runs the jnp
+reference under jax.vjp (flash-style recompute; a dedicated bwd kernel is a
+further optimization documented in EXPERIMENTS §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import kernel as K
+from repro.kernels.flash_attention import ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention(q, k, v, causal=True, window=0, softcap=0.0,
+                    interpret=None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    return K.flash_attention_fwd(q, k, v, causal=causal, window=window,
+                                 softcap=softcap, interpret=interpret)
+
+
+def _fwd(q, k, v, causal, window, softcap, interpret):
+    out = flash_attention(q, k, v, causal, window, softcap, interpret)
+    return out, (q, k, v)
+
+
+def _bwd(causal, window, softcap, interpret, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: ref.attention(q_, k_, v_, causal=causal,
+                                         window=window, softcap=softcap),
+        q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fwd, _bwd)

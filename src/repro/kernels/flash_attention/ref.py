@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the flash attention kernel (GQA, causal, SWA,
+softcap). Numerically the ground truth the kernel is tested against."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention(q, k, v, *, causal=True, window=0, softcap=0.0):
+    """q: (B,Sq,Hq,D); k,v: (B,Skv,Hkv,D); Hq % Hkv == 0. Returns (B,Sq,Hq,D)."""
+    B, Sq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32))
+    s = s / jnp.sqrt(jnp.float32(D))
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    m = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        m &= kpos <= qpos
+    if window > 0:
+        m &= kpos > (qpos - window)
+    s = jnp.where(m[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, Hq, D).astype(q.dtype)

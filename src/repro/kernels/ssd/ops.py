@@ -1,0 +1,27 @@
+"""jit'd wrapper for the SSD kernel (TPU pallas / CPU interpret / jnp ref)."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ssd import kernel as K
+from repro.kernels.ssd import ref
+
+
+def ssd(x, dt, B, C, A_log, D, state, *, chunk: int = 128, use_kernel=None,
+        interpret=None):
+    on_tpu = jax.default_backend() == "tpu"
+    if use_kernel is None:
+        use_kernel = on_tpu
+    if use_kernel:
+        if interpret is None:
+            interpret = not on_tpu
+        return K.ssd_chunked(x, dt, B, C, A_log, D, state, chunk=chunk,
+                             interpret=interpret)
+    return ref.ssd(x, dt, B, C, A_log, D, state, chunk=chunk)
+
+
+def ssd_kernel(x, dt, B, C, A_log, D, state, *, chunk: int = 128,
+               interpret=True):
+    return K.ssd_chunked(x, dt, B, C, A_log, D, state, chunk=chunk,
+                         interpret=interpret)

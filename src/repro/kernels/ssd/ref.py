@@ -1,0 +1,46 @@
+"""Pure-jnp oracle for the Mamba2 SSD chunked-scan kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd(x, dt, B, C, A_log, D, state, *, chunk: int = 128):
+    """x: (b,S,H,P); dt: (b,S,H); B,C: (b,S,N); state: (b,H,P,N) f32.
+
+    Returns (y (b,S,H,P) f32, state_out f32).
+    """
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    f32 = jnp.float32
+    n = S // chunk
+    assert S % chunk == 0
+    A = -jnp.exp(A_log.astype(f32))
+
+    def resh(z):
+        return jnp.moveaxis(z.reshape(b, n, chunk, *z.shape[2:]), 1, 0)
+
+    xc, dtc, Bc, Cc = map(resh, (x, dt, B, C))
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def one(h_in, inp):
+        xx, dd, BB, CC = (z.astype(f32) for z in inp)
+        la = dd * A[None, None, :]
+        Li = jnp.cumsum(la, axis=1)
+        cb = jnp.einsum("btn,bsn->bts", CC, BB)
+        G = jnp.exp(jnp.clip(Li[:, :, None, :] - Li[:, None, :, :], -60.0, 0.0))
+        M = cb[..., None] * G * dd[:, None, :, :]
+        M = jnp.where(mask[None, :, :, None], M, 0.0)
+        y = jnp.einsum("btsh,bshp->bthp", M, xx)
+        y += jnp.einsum("btn,bhpn,bth->bthp", CC, h_in, jnp.exp(Li))
+        decay_all = jnp.exp(Li[:, -1])
+        wgt = jnp.exp(Li[:, -1, None] - Li) * dd
+        h_out = decay_all[:, :, None, None] * h_in + jnp.einsum(
+            "bth,bthp,btn->bhpn", wgt, xx, BB)
+        return h_out, y
+
+    state, ys = jax.lax.scan(one, state.astype(f32), (xc, dtc, Bc, Cc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, S, H, P)
+    y = y + x.astype(f32) * D.astype(f32)[None, None, :, None]
+    return y, state

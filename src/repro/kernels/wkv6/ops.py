@@ -1,0 +1,25 @@
+"""jit'd wrapper for the WKV6 kernel (TPU pallas / CPU interpret / jnp ref)."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.wkv6 import kernel as K
+from repro.kernels.wkv6 import ref
+
+
+def wkv6(r, k, v, w, u, state, *, chunk: int = 32, use_kernel=None,
+         interpret=None):
+    on_tpu = jax.default_backend() == "tpu"
+    if use_kernel is None:
+        use_kernel = on_tpu  # XLA ref path on CPU (dry-run), kernel on TPU
+    if use_kernel:
+        if interpret is None:
+            interpret = not on_tpu
+        return K.wkv6_chunked(r, k, v, w, u, state, chunk=chunk,
+                              interpret=interpret)
+    return ref.wkv6(r, k, v, w, u, state, chunk=chunk)
+
+
+def wkv6_kernel(r, k, v, w, u, state, *, chunk: int = 32, interpret=True):
+    return K.wkv6_chunked(r, k, v, w, u, state, chunk=chunk, interpret=interpret)

@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the WKV6 chunked-scan kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6(r, k, v, w, u, state, *, chunk: int = 32):
+    """r,k,w: (B,S,H,K); v: (B,S,H,V); u: (H,K); state: (B,H,K,V) f32.
+
+    w is the pre-decay parameter: decay = exp(-exp(w)).
+    Returns (y (B,S,H,V) f32, state_out (B,H,K,V) f32).
+    """
+    B, S, H, K = r.shape
+    V = v.shape[-1]
+    f32 = jnp.float32
+    n = S // chunk
+    assert S % chunk == 0
+
+    def resh(x):
+        return jnp.moveaxis(x.reshape(B, n, chunk, H, x.shape[-1]), 1, 0)
+
+    rc, kc, vc, wc = map(resh, (r, k, v, w))
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool), -1)
+
+    def one(S_in, inp):
+        rr, kk, vv, ww = [x.astype(f32) for x in inp]
+        logw = -jnp.exp(ww)
+        Li = jnp.cumsum(logw, axis=1)
+        Le = Li - logw
+        A = jnp.exp(jnp.clip(Le[:, :, None] - Li[:, None, :], -60.0, 0.0))
+        A = jnp.where(mask[None, :, :, None, None], A, 0.0)
+        tmp = jnp.einsum("bthk,btshk,bshk->btsh", rr, A, kk)
+        y = jnp.einsum("btsh,bshv->bthv", tmp, vv)
+        y += jnp.einsum("bthk,hk,bthk,bthv->bthv", rr, u.astype(f32), kk, vv)
+        y += jnp.einsum("bthk,bthk,bhkv->bthv", rr, jnp.exp(Le), S_in)
+        decay_all = jnp.exp(Li[:, -1])
+        kd = kk * jnp.exp(Li[:, -1, None] - Li)
+        S_out = decay_all[..., None] * S_in + jnp.einsum("bshk,bshv->bhkv", kd, vv)
+        return S_out, y
+
+    state, ys = jax.lax.scan(one, state.astype(f32), (rc, kc, vc, wc))
+    return jnp.moveaxis(ys, 0, 1).reshape(B, S, H, V), state

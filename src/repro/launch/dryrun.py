@@ -1,0 +1,227 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    # Dump the post-SPMD / pre-optimization HLO per compile: the CPU backend
+    # then promotes bf16 compute to f32 (float-normalization), which would
+    # double every collective/dot byte count vs what a TPU executes, so the
+    # roofline is derived from this dtype-faithful snapshot instead of the
+    # final CPU module (see EXPERIMENTS §Roofline-method).
+    f"--xla_dump_to=/tmp/repro_spmd_dump_{os.getpid()} "
+    "--xla_dump_hlo_pass_re=spmd-partitioning --xla_dump_hlo_as_text")
+_SPMD_DUMP_DIR = f"/tmp/repro_spmd_dump_{os.getpid()}"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell on
+512 placeholder host devices, prove memory fit, and extract roofline terms.
+
+The two lines above MUST stay first: jax locks the device count on first
+init, and only the dry-run wants 512 fake devices (tests/benches see 1).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-405b \
+        --shape train_4k --mesh single --out results/dryrun
+    PYTHONPATH=src python -m repro.launch.dryrun --all  # every cell, both meshes
+"""
+
+import argparse
+import gzip
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import SHAPES_BY_NAME, registry
+from repro.distributed.sharding import ShardingCtx
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.launch.programs import build_program
+
+# TPU v5e hardware model (per chip).
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s per link (1 active link assumed — conservative)
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, ruleset: str,
+             out_dir: str, smoke: bool = False, dump_hlo: str = "",
+             run_overrides: dict | None = None) -> dict:
+    bundle = registry.get(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    cell_id = f"{arch}__{shape_name}__{mesh_kind}__{ruleset}"
+    result = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+              "ruleset": ruleset, "ok": False}
+
+    reason = bundle.skip_reason(shape_name)
+    if reason:
+        result.update(skipped=True, reason=reason, ok=True)
+        _write(out_dir, cell_id, result)
+        print(f"SKIP {cell_id}: {reason}")
+        return result
+
+    cfg = bundle.smoke if smoke else bundle.model
+    run = bundle.run_for(shape_name).replace(sharding_rules=ruleset)
+    if run_overrides:
+        run = run.replace(**run_overrides)
+        result["run_overrides"] = dict(run_overrides)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    ctx = ShardingCtx.for_mesh(mesh, ruleset)
+
+    t0 = time.time()
+    try:
+        _clean_spmd_dump()
+        prog = build_program(cfg, run, shape, ctx)
+        with mesh:
+            lowered = jax.jit(
+                prog.fn,
+                out_shardings=prog.out_shardings,
+                donate_argnums=prog.donate_argnums,
+            ).lower(*prog.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            print(mem)  # proves it fits
+            cost = compiled.cost_analysis()
+            print({k: cost[k] for k in ("flops", "bytes accessed")
+                   if k in cost})
+        text = compiled.as_text()
+        spmd_text = _read_spmd_dump()
+        summary = hlo_analysis.analyze(spmd_text if spmd_text else text)
+        post_opt = hlo_analysis.analyze(text)
+        if dump_hlo:
+            os.makedirs(dump_hlo, exist_ok=True)
+            with gzip.open(os.path.join(dump_hlo, cell_id + ".hlo.gz"), "wt") as f:
+                f.write(text)
+            if spmd_text:
+                with gzip.open(os.path.join(dump_hlo, cell_id + ".spmd.hlo.gz"),
+                               "wt") as f:
+                    f.write(spmd_text)
+        n_chips = mesh.devices.size
+        arg_b = int(mem.argument_size_in_bytes)
+        tmp_b = int(mem.temp_size_in_bytes)
+        out_b = int(mem.output_size_in_bytes)
+        alias_b = int(mem.alias_size_in_bytes)
+        live_b = arg_b + tmp_b + out_b - alias_b
+        terms = {
+            "compute_s": summary.dot_flops / PEAK_FLOPS,
+            "memory_s": summary.dot_bytes / HBM_BW,
+            "collective_s": summary.collective_wire_bytes / ICI_BW,
+        }
+        result.update(
+            ok=True,
+            n_chips=n_chips,
+            program=prog.name,
+            meta=prog.meta,
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            per_device_bytes={
+                "arguments": arg_b, "temps": tmp_b, "outputs": out_b,
+                "aliased": alias_b, "live_peak_est": live_b,
+            },
+            fits_16gb=bool(live_b <= 16 * 1024 ** 3),
+            cost_analysis_raw={
+                "flops": float(cost.get("flops", -1.0)),
+                "bytes_accessed": float(cost.get("bytes accessed", -1.0)),
+            },
+            hlo={
+                "source": "after_spmd_partitioning" if spmd_text else "post_opt",
+                "dot_flops": summary.dot_flops,
+                "dot_bytes": summary.dot_bytes,
+                "collective_wire_bytes": summary.collective_wire_bytes,
+                "per_op": summary.per_op,
+                "n_while": summary.n_while,
+                "max_trip": summary.max_trip,
+            },
+            hlo_post_opt={
+                "dot_flops": post_opt.dot_flops,
+                "collective_wire_bytes": post_opt.collective_wire_bytes,
+            },
+            roofline_terms_s=terms,
+            dominant=max(terms, key=terms.get),
+        )
+        print(f"OK {cell_id}: chips={n_chips} "
+              f"live={live_b/2**30:.2f}GiB/dev "
+              f"compute={terms['compute_s']*1e3:.2f}ms "
+              f"memory={terms['memory_s']*1e3:.2f}ms "
+              f"collective={terms['collective_s']*1e3:.2f}ms "
+              f"[compile {t_compile:.0f}s]")
+    except Exception as e:  # noqa: BLE001 — record the failure, it's a bug
+        result.update(ok=False, error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-4000:])
+        print(f"FAIL {cell_id}: {type(e).__name__}: {str(e)[:400]}")
+    _write(out_dir, cell_id, result)
+    return result
+
+
+def _clean_spmd_dump() -> None:
+    if os.path.isdir(_SPMD_DUMP_DIR):
+        for f in os.listdir(_SPMD_DUMP_DIR):
+            try:
+                os.unlink(os.path.join(_SPMD_DUMP_DIR, f))
+            except OSError:
+                pass
+
+
+def _read_spmd_dump() -> str:
+    """Newest after-spmd-partitioning snapshot from this cell's compile."""
+    if not os.path.isdir(_SPMD_DUMP_DIR):
+        return ""
+    cands = [os.path.join(_SPMD_DUMP_DIR, f) for f in os.listdir(_SPMD_DUMP_DIR)
+             if "after_spmd-partitioning" in f and f.endswith(".txt")]
+    if not cands:
+        return ""
+    newest = max(cands, key=os.path.getmtime)
+    with open(newest) as f:
+        return f.read()
+
+
+def _write(out_dir: str, cell_id: str, result: dict) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, cell_id + ".json"), "w") as f:
+        json.dump(result, f, indent=1, default=float)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--ruleset", default="baseline")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CI fast path)")
+    ap.add_argument("--dump-hlo", default="", help="dir for gzipped HLO text")
+    ap.add_argument("--all", action="store_true", help="every cell, both meshes")
+    ap.add_argument("--microbatch", type=int, default=-1,
+                    help="override RunConfig.microbatch_per_data_shard")
+    ap.add_argument("--scan-group", type=int, default=-1)
+    ap.add_argument("--remat", default="")
+    ap.add_argument("--moe-impl", default="")
+    args = ap.parse_args()
+    overrides = {}
+    if args.microbatch >= 0:
+        overrides["microbatch_per_data_shard"] = args.microbatch
+    if args.scan_group >= 0:
+        overrides["scan_group"] = args.scan_group
+    if args.remat:
+        overrides["remat"] = args.remat
+    if args.moe_impl:
+        overrides["moe_impl"] = args.moe_impl
+
+    archs = registry.arch_ids() if args.arch in ("all",) or args.all else [args.arch]
+    shapes = list(SHAPES_BY_NAME) if args.shape == "all" or args.all else [args.shape]
+    meshes = ["single", "multi"] if (args.mesh == "both" or args.all) else [args.mesh]
+
+    failures = 0
+    for a in archs:
+        for s in shapes:
+            for m in meshes:
+                r = run_cell(a, s, m, args.ruleset, args.out, smoke=args.smoke,
+                             dump_hlo=args.dump_hlo, run_overrides=overrides)
+                failures += 0 if r.get("ok") else 1
+    if failures:
+        raise SystemExit(f"{failures} dry-run cells FAILED")
+
+
+if __name__ == "__main__":
+    main()

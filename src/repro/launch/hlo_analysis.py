@@ -1,0 +1,283 @@
+"""Post-SPMD HLO text analysis for the roofline.
+
+``jax``'s ``compiled.cost_analysis()`` counts while-loop bodies ONCE
+regardless of trip count (scan-over-layers would be undercounted ~L times),
+so we parse the optimized per-device HLO ourselves:
+
+  * build the computation call graph (while bodies weighted by trip count,
+    extracted from the loop-condition's comparison constant),
+  * sum matmul FLOPs from ``dot`` instructions (2 * prod(out) * prod(contract)),
+  * sum collective "wire bytes per chip" with ring-model factors per op type,
+  * report weighted per-op-type counts — the collective schedule.
+
+Caveats (documented in EXPERIMENTS §Roofline-method): conditional branches
+are counted as always-taken (corrected analytically for zamba2's shared
+block); elementwise FLOPs are ignored (matmul-dominated workloads); trip
+count uses the largest s32 constant in the loop condition.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s+=\s+((?:\([^()]*\))|(?:\w+\[[^\]]*\](?:\{[^}]*\})?)|(?:\w+\[\]))\s+([\w\-]+)\(")
+_COMP_NAME_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string (tuples summed)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    symbols: Dict[str, str]  # instr name -> type string
+
+
+def parse_computations(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        stripped = line.rstrip()
+        if cur is None:
+            # A computation header is any line ending in "{" with a "->"
+            # result arrow (or the ENTRY computation). Tuple-typed parameter
+            # lists contain nested parens, so match loosely on the name.
+            if stripped.endswith("{") and ("->" in stripped
+                                           or stripped.startswith("ENTRY")):
+                m = _COMP_NAME_RE.match(stripped)
+                if m:
+                    cur = Computation(m.group(1), [], {})
+                    if stripped.startswith("ENTRY"):
+                        entry = cur.name
+            continue
+        if stripped.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        im = _INSTR_RE.match(stripped)
+        if im:
+            ins = Instr(im.group(1), im.group(2), im.group(3), stripped)
+            cur.instrs.append(ins)
+            cur.symbols[ins.name] = ins.type_str
+        else:
+            # parameter lines: "%p = f32[...] parameter(0)" match the same RE;
+            # anything else (constants w/ values etc.) — try loose capture.
+            lm = re.match(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s+=\s+(\S+)", stripped)
+            if lm:
+                cur.symbols[lm.group(1)] = lm.group(2)
+    return comps, entry
+
+
+_CALLEE_PATTERNS = [
+    (re.compile(r"body=%?([\w.\-]+)"), "body"),
+    (re.compile(r"condition=%?([\w.\-]+)"), "cond"),
+    (re.compile(r"to_apply=%?([\w.\-]+)"), "call"),
+    (re.compile(r"calls=%?([\w.\-]+)"), "call"),
+    (re.compile(r"branch_computations=\{([^}]*)\}"), "branches"),
+    (re.compile(r"true_computation=%?([\w.\-]+)"), "call"),
+    (re.compile(r"false_computation=%?([\w.\-]+)"), "call"),
+]
+
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def trip_count(comps: Dict[str, Computation], cond_name: str) -> int:
+    comp = comps.get(cond_name)
+    if comp is None:
+        return 1
+    best = 1
+    for ins in comp.instrs:
+        for m in _CONST_RE.finditer(ins.line):
+            best = max(best, int(m.group(1)))
+    # also look at raw symbol lines (constants parsed loosely)
+    return best
+
+
+def compute_multipliers(comps: Dict[str, Computation], entry: str) -> Dict[str, float]:
+    mult: Dict[str, float] = {entry: 1.0}
+    order = [entry]
+    seen = {entry}
+    # BFS propagation (HLO call graphs are DAGs).
+    idx = 0
+    while idx < len(order):
+        cname = order[idx]
+        idx += 1
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        m = mult.get(cname, 1.0)
+        for ins in comp.instrs:
+            callees: List[Tuple[str, float]] = []
+            line = ins.line
+            if ins.opcode == "while":
+                bm = re.search(r"body=%?([\w.\-]+)", line)
+                cm = re.search(r"condition=%?([\w.\-]+)", line)
+                trips = trip_count(comps, cm.group(1)) if cm else 1
+                if bm:
+                    callees.append((bm.group(1), float(trips)))
+                if cm:
+                    callees.append((cm.group(1), float(trips)))
+            else:
+                for pat, kind in _CALLEE_PATTERNS[2:]:
+                    for mm in pat.finditer(line):
+                        if kind == "branches":
+                            for nm in re.findall(r"%?([\w.\-]+)", mm.group(1)):
+                                callees.append((nm, 1.0))
+                        else:
+                            callees.append((mm.group(1), 1.0))
+            for callee, factor in callees:
+                if callee not in comps:
+                    continue
+                mult[callee] = mult.get(callee, 0.0) + m * factor
+                if callee not in seen:
+                    seen.add(callee)
+                    order.append(callee)
+    return mult
+
+
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def _wire_bytes(opcode: str, out_bytes: int, in_bytes: int, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    frac = (g - 1) / g
+    if opcode.startswith("all-reduce"):
+        return 2.0 * out_bytes * frac
+    if opcode.startswith("all-gather"):
+        return out_bytes * frac
+    if opcode.startswith("reduce-scatter"):
+        return (in_bytes if in_bytes else out_bytes * g) * frac
+    if opcode.startswith("all-to-all"):
+        return out_bytes * frac
+    if opcode.startswith("collective-permute"):
+        return float(out_bytes)
+    return 0.0
+
+
+_DOT_OPERANDS_RE = re.compile(r"dot\(%([\w.\-]+),\s*%([\w.\-]+)\)")
+_RHS_CONTRACT_RE = re.compile(r"rhs_contracting_dims=\{([\d,]*)\}")
+
+
+@dataclasses.dataclass
+class HloSummary:
+    dot_flops: float = 0.0
+    dot_bytes: float = 0.0  # operand+output bytes of dots (HBM traffic proxy)
+    collective_wire_bytes: float = 0.0
+    collective_op_bytes: float = 0.0
+    per_op: Dict[str, Dict[str, float]] = dataclasses.field(default_factory=dict)
+    n_while: int = 0
+    max_trip: int = 1
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def analyze(text: str) -> HloSummary:
+    comps, entry = parse_computations(text)
+    if entry is None:
+        return HloSummary()
+    mult = compute_multipliers(comps, entry)
+    s = HloSummary()
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        for ins in comp.instrs:
+            if ins.opcode == "while":
+                s.n_while += 1
+                cm = re.search(r"condition=%?([\w.\-]+)", ins.line)
+                if cm:
+                    s.max_trip = max(s.max_trip, trip_count(comps, cm.group(1)))
+            if ins.opcode == "dot":
+                out_dims = shape_dims(ins.type_str)
+                out_elems = 1
+                for d in out_dims:
+                    out_elems *= d
+                contract = 1
+                om = _DOT_OPERANDS_RE.search(ins.line)
+                rc = _RHS_CONTRACT_RE.search(ins.line)
+                op_bytes = shape_bytes(ins.type_str)
+                if om and rc:
+                    rhs_type = comp.symbols.get(om.group(2), "")
+                    rdims = shape_dims(rhs_type)
+                    for i in rc.group(1).split(","):
+                        if i and int(i) < len(rdims):
+                            contract *= rdims[int(i)]
+                    lhs_type = comp.symbols.get(om.group(1), "")
+                    op_bytes += shape_bytes(rhs_type) + shape_bytes(lhs_type)
+                s.dot_flops += m * 2.0 * out_elems * contract
+                s.dot_bytes += m * op_bytes
+                continue
+            base = next((c for c in COLLECTIVES if ins.opcode.startswith(c)), None)
+            if base is None or ins.opcode.endswith("-done"):
+                continue
+            g = _group_size(ins.line)
+            out_b = shape_bytes(ins.type_str)
+            # best-effort operand resolve (reduce-scatter input size)
+            in_b = 0
+            oper = re.search(ins.opcode + r"\(%([\w.\-]+)", ins.line)
+            if oper:
+                in_b = shape_bytes(comp.symbols.get(oper.group(1), ""))
+            wire = _wire_bytes(ins.opcode, out_b, in_b, g)
+            s.collective_wire_bytes += m * wire
+            s.collective_op_bytes += m * out_b
+            d = s.per_op.setdefault(base, {"count": 0.0, "bytes": 0.0, "wire": 0.0})
+            d["count"] += m
+            d["bytes"] += m * out_b
+            d["wire"] += m * wire
+    return s

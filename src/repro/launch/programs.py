@@ -1,0 +1,82 @@
+"""Program builders: assemble (fn, ShapeDtypeStruct args, out_shardings,
+donate) per (arch x shape x mesh x ruleset) cell — shared by the dry-run,
+the trainer and the server.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding
+
+from repro.configs.base import ArchBundle, ModelConfig, RunConfig, ShapeSpec
+from repro.distributed.sharding import ShardingCtx
+from repro.models import lm, params as P
+from repro.optim.adamw import adamw_init_specs
+from repro.serve.step import make_decode_step, make_prefill_step
+from repro.train.step import make_train_step
+
+
+@dataclasses.dataclass
+class Program:
+    name: str
+    fn: Callable
+    args: Tuple[Any, ...]  # ShapeDtypeStruct pytrees (dry-run) — also the
+    # template for materialization in real runs
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+    meta: Dict[str, Any]
+
+
+def _ns_tree(spec_tree, ctx: ShardingCtx):
+    if ctx.mesh is None:
+        return None
+    return P.map_specs(lambda s: NamedSharding(ctx.mesh, ctx.spec(s.logical, s.shape)),
+                       spec_tree)
+
+
+def build_program(cfg: ModelConfig, run: RunConfig, shape: ShapeSpec,
+                  ctx: ShardingCtx) -> Program:
+    pspecs = lm.param_specs(cfg)
+    batch_specs = lm.input_specs(cfg, shape)
+    meta = {
+        "arch": cfg.name, "shape": shape.name, "kind": shape.kind,
+        "params": P.count_params(pspecs),
+        "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+    }
+
+    if shape.kind == "train":
+        params_sds = P.shape_dtype_tree(pspecs, ctx, dtype=run.param_dtype)
+        ospecs = adamw_init_specs(pspecs, run)
+        opt_sds = P.shape_dtype_tree(ospecs, ctx, dtype="float32")
+        batch_sds = P.shape_dtype_tree(batch_specs, ctx, dtype="int32")
+        fn = make_train_step(cfg, run, ctx, shape.global_batch)
+        out_shardings = (_ns_tree(pspecs, ctx), _ns_tree(ospecs, ctx), None)
+        return Program("train_step", fn, (params_sds, opt_sds, batch_sds),
+                       out_shardings, (0, 1), meta)
+
+    # Serving: bf16 weights.
+    params_sds = P.shape_dtype_tree(pspecs, ctx, dtype=run.compute_dtype)
+    batch_sds = P.shape_dtype_tree(batch_specs, ctx, dtype="int32")
+    if shape.kind == "prefill":
+        fn = make_prefill_step(cfg, run, ctx)
+        cache_specs = lm.cache_specs(cfg, shape)
+        out_shardings = (None, _ns_tree(cache_specs, ctx))
+        return Program("prefill_step", fn, (params_sds, batch_sds),
+                       out_shardings, (), meta)
+
+    assert shape.kind == "decode"
+    cache_specs = lm.cache_specs(cfg, shape)
+    cache_sds = P.shape_dtype_tree(cache_specs, ctx, dtype=run.compute_dtype)
+    fn = make_decode_step(cfg, run, ctx)
+    out_shardings = (None, _ns_tree(cache_specs, ctx))
+    return Program("serve_step", fn, (params_sds, cache_sds, batch_sds),
+                   out_shardings, (1,), meta)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, ctx: ShardingCtx):
+    """ShapeDtypeStruct stand-ins for every model input of this cell
+    (weak-type-correct, shardable, no device allocation)."""
+    return P.shape_dtype_tree(lm.input_specs(cfg, shape), ctx, dtype="int32")

@@ -1,0 +1,3 @@
+from repro.models import lm, params
+
+__all__ = ["lm", "params"]

@@ -1,0 +1,161 @@
+"""Whisper-style encoder-decoder (audio family).
+
+The conv frontend is a STUB per the assignment: ``input_specs()`` provides
+precomputed frame embeddings (B, encoder_seq, d_model). The transformer
+backbone (bidirectional encoder + causal decoder with cross-attention) is
+fully implemented.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.distributed.sharding import ShardingCtx
+from repro.models import params as P
+from repro.models import attention as A
+from repro.models.common import mlp_apply, mlp_specs, rms_norm, rms_norm_specs
+
+
+def enc_layer_specs(cfg: ModelConfig) -> Dict:
+    return {
+        "ln1": rms_norm_specs(cfg.d_model),
+        "attn": A.attn_specs(cfg),
+        "ln2": rms_norm_specs(cfg.d_model),
+        "mlp": mlp_specs(cfg),
+    }
+
+
+def dec_layer_specs(cfg: ModelConfig) -> Dict:
+    return {
+        "ln1": rms_norm_specs(cfg.d_model),
+        "attn": A.attn_specs(cfg),
+        "lnx": rms_norm_specs(cfg.d_model),
+        "xattn": A.attn_specs(cfg, cross=True),
+        "ln2": rms_norm_specs(cfg.d_model),
+        "mlp": mlp_specs(cfg),
+    }
+
+
+def stack_specs(cfg: ModelConfig) -> Dict:
+    return {
+        "encoder": P.stack_tree(cfg.encoder_layers, enc_layer_specs(cfg)),
+        "enc_ln": rms_norm_specs(cfg.d_model),
+        "decoder": P.stack_tree(cfg.num_layers, dec_layer_specs(cfg)),
+    }
+
+
+def _enc_layer(cfg, run, ctx, w, x, positions):
+    B, S, _ = x.shape
+    h = rms_norm(x, w["ln1"], cfg.norm_eps)
+    q = A.project_q(cfg, w["attn"], h, positions, ctx)
+    k, v = A.project_kv(cfg, w["attn"], h, positions, ctx)
+    o = A.attention_dense(q, k, v, causal=False)
+    x = x + o.reshape(B, S, cfg.q_dim) @ w["attn"]["wo"].astype(x.dtype)
+    h2 = rms_norm(x, w["ln2"], cfg.norm_eps)
+    return x + mlp_apply(w["mlp"], h2, ctx, act="gelu")
+
+
+def encode(cfg, run, ctx, w, frames):
+    """frames: (B, T_enc, d) stub embeddings -> encoder states."""
+    B, S, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def body(x, wl):
+        return _enc_layer(cfg, run, ctx, wl, x, positions), None
+
+    if run.remat == "block":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, frames, w["encoder"])
+    return rms_norm(x, w["enc_ln"], cfg.norm_eps)
+
+
+def _dec_layer(cfg, run, ctx, w, x, enc, positions, *, q_chunk=1024):
+    B, S, _ = x.shape
+    h = rms_norm(x, w["ln1"], cfg.norm_eps)
+    q = A.project_q(cfg, w["attn"], h, positions, ctx)
+    k, v = A.project_kv(cfg, w["attn"], h, positions, ctx)
+    o = A.attention_auto(q, k, v, causal=True, q_chunk=q_chunk, ctx=ctx)
+    x = x + o.reshape(B, S, cfg.q_dim) @ w["attn"]["wo"].astype(x.dtype)
+    hx = rms_norm(x, w["lnx"], cfg.norm_eps)
+    x = x + A.cross_attention(cfg, w["xattn"], hx, enc, ctx)
+    h2 = rms_norm(x, w["ln2"], cfg.norm_eps)
+    return x + mlp_apply(w["mlp"], h2, ctx, act="gelu")
+
+
+def decode_train(cfg, run, ctx, w, x, enc, positions, *, q_chunk=1024):
+    def body(x, wl):
+        return _dec_layer(cfg, run, ctx, wl, x, enc, positions, q_chunk=q_chunk), None
+
+    if run.remat == "block":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, w["decoder"])
+    return x
+
+
+def cache_specs(cfg: ModelConfig, batch: int, cache_len: int) -> Dict:
+    self_kv = A.cache_specs(cfg, batch, cache_len)
+    cross_shape = (batch, cfg.encoder_seq, cfg.num_kv_heads, cfg.head_dim)
+    cross = {
+        "ck": P.dense(cross_shape, ("batch", "img_seq", "cache_heads", "head_dim"),
+                      init="zeros", dtype="bfloat16"),
+        "cv": P.dense(cross_shape, ("batch", "img_seq", "cache_heads", "head_dim"),
+                      init="zeros", dtype="bfloat16"),
+    }
+    per_layer = {**self_kv, **cross}
+    return P.stack_tree(cfg.num_layers, per_layer)
+
+
+def prefill(cfg, run, ctx, w, tokens_x, frames, positions, *, q_chunk=1024):
+    """Returns (x, cache) with self KV + precomputed cross KV per layer."""
+    enc = encode(cfg, run, ctx, w, frames)
+    B = tokens_x.shape[0]
+    T = enc.shape[1]
+    dt = tokens_x.dtype
+
+    def body(x, wl):
+        h = rms_norm(x, wl["ln1"], cfg.norm_eps)
+        q = A.project_q(cfg, wl["attn"], h, positions, ctx)
+        k, v = A.project_kv(cfg, wl["attn"], h, positions, ctx)
+        o = A.attention_auto(q, k, v, causal=True, q_chunk=q_chunk, ctx=ctx)
+        x = x + o.reshape(B, x.shape[1], cfg.q_dim) @ wl["attn"]["wo"].astype(dt)
+        hx = rms_norm(x, wl["lnx"], cfg.norm_eps)
+        x = x + A.cross_attention(cfg, wl["xattn"], hx, enc, ctx)
+        h2 = rms_norm(x, wl["ln2"], cfg.norm_eps)
+        x = x + mlp_apply(wl["mlp"], h2, ctx, act="gelu")
+        ck = (enc @ wl["xattn"]["wk"].astype(dt)).reshape(B, T, cfg.num_kv_heads,
+                                                          cfg.head_dim)
+        cv = (enc @ wl["xattn"]["wv"].astype(dt)).reshape(B, T, cfg.num_kv_heads,
+                                                          cfg.head_dim)
+        return x, {"k": k.astype(jnp.bfloat16), "v": v.astype(jnp.bfloat16),
+                   "ck": ck.astype(jnp.bfloat16), "cv": cv.astype(jnp.bfloat16)}
+
+    x, cache = jax.lax.scan(body, tokens_x, w["decoder"])
+    return x, cache
+
+
+def decode_step(cfg, run, ctx, w, cache, x, pos, *, use_flash=False):
+    def body(x, inp):
+        wl, cl = inp
+        B = x.shape[0]
+        posv = jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32)
+        h = rms_norm(x, wl["ln1"], cfg.norm_eps)
+        q = A.project_q(cfg, wl["attn"], h, posv, ctx)
+        k, v = A.project_kv(cfg, wl["attn"], h, posv, ctx)
+        ck, cv = A.cache_update(cl["k"], cl["v"], k, v, pos)
+        if use_flash and ctx.mesh is not None:
+            o = A.flash_decode(q, ck, cv, pos, ctx.mesh)
+        else:
+            o = A.decode_attention(q, ck, cv, pos)
+        x = x + o.reshape(B, 1, cfg.q_dim) @ wl["attn"]["wo"].astype(x.dtype)
+        hx = rms_norm(x, wl["lnx"], cfg.norm_eps)
+        x = x + A.cross_decode(cfg, wl["xattn"], hx, cl["ck"], cl["cv"])
+        h2 = rms_norm(x, wl["ln2"], cfg.norm_eps)
+        x = x + mlp_apply(wl["mlp"], h2, ctx, act="gelu")
+        return x, {"k": ck, "v": cv, "ck": cl["ck"], "cv": cl["cv"]}
+
+    x, cache = jax.lax.scan(body, x, (w["decoder"], cache))
+    return x, cache

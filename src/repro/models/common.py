@@ -1,0 +1,117 @@
+"""Shared model components: norms, RoPE, MLP, embedding, losses."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.distributed.sharding import ShardingCtx
+from repro.models import params as P
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(dt)
+
+
+def rms_norm_specs(d: int) -> P.TensorSpec:
+    return P.dense((d,), (None,), init="ones")
+
+
+# --- RoPE -------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)  # (head_dim/2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: (..., S) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --- MLP ----------------------------------------------------------------------
+
+
+def mlp_specs(cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
+    ff = d_ff or cfg.d_ff
+    return {
+        "w_gate": P.dense((cfg.d_model, ff), ("fsdp", "mlp")),
+        "w_up": P.dense((cfg.d_model, ff), ("fsdp", "mlp")),
+        "w_down": P.dense((ff, cfg.d_model), ("mlp", "fsdp")),
+    }
+
+
+def matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Matmul that keeps cross-shard partial sums in the compute dtype.
+
+    bf16 x bf16 otherwise accumulates to f32 under SPMD *before* the
+    tensor-parallel all-reduce, doubling wire bytes; pinning the dot output
+    dtype reduces in bf16 (Megatron behaviour — MXU still accumulates fp32
+    within a shard).
+    """
+    return jnp.matmul(x, w.astype(x.dtype), preferred_element_type=x.dtype)
+
+
+def mlp_apply(w: dict, x: jax.Array, ctx: ShardingCtx, act: str = "silu") -> jax.Array:
+    gate = matmul(x, w["w_gate"])
+    up = matmul(x, w["w_up"])
+    gate = ctx.constrain(gate, ("batch", "seq_inner", "mlp")[: gate.ndim])
+    h = (jax.nn.silu(gate) if act == "silu" else jax.nn.gelu(gate)) * up
+    out = matmul(h, w["w_down"])
+    return ctx.constrain(out, ("batch", "seq", "embed")[: out.ndim])
+
+
+# --- Embedding / logits / loss -------------------------------------------------
+
+
+def embed_specs(cfg: ModelConfig) -> dict:
+    d = {"embedding": P.dense((cfg.vocab_size, cfg.d_model), ("vocab", "fsdp"),
+                              init="embed")}
+    if not cfg.tie_embeddings:
+        d["unembed"] = P.dense((cfg.d_model, cfg.vocab_size), ("fsdp", "vocab"))
+    return d
+
+
+def embed_tokens(w: dict, tokens: jax.Array, ctx: ShardingCtx, dtype) -> jax.Array:
+    x = jnp.take(w["embedding"].astype(dtype), tokens, axis=0)
+    return ctx.constrain(x, ("batch", "seq", "embed"))
+
+
+def logits_fn(w: dict, x: jax.Array, ctx: ShardingCtx) -> jax.Array:
+    if "unembed" in w:
+        logits = matmul(x, w["unembed"])
+    else:
+        logits = matmul(x, w["embedding"].T)
+    return ctx.constrain(logits, ("batch", "seq", "vocab")[: logits.ndim])
+
+
+def xent_loss(logits: jax.Array, labels: jax.Array, z_loss: float = 1e-4):
+    """Cross-entropy over (B, S, V) vs labels (B, S); fp32 reduction.
+
+    Returns (mean_loss, aux) where aux carries the z-loss for logging.
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    label_logit = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - label_logit
+    zl = z_loss * jnp.square(lse)
+    loss = jnp.mean(nll + zl)
+    return loss, {"nll": jnp.mean(nll), "z_loss": jnp.mean(zl)}
+
+
+def compute_dtype(run: RunConfig):
+    return jnp.dtype(run.compute_dtype)

@@ -1,0 +1,357 @@
+"""Mamba2 (SSD) blocks and the Zamba2 hybrid stack.
+
+SSD recurrence per head (state h in R^{P x N}, scalar decay per head/step):
+    a_t = exp(A * dt_t)            A = -exp(A_log) < 0
+    h_t = a_t h_{t-1} + dt_t * x_t B_t^T
+    y_t = h_t C_t + D * x_t
+
+Training/prefill use the chunked SSD form: within a chunk the decay matrix
+M[t,s] = (C_t . B_s) * exp(Li[t]-Li[s]) * dt_s (s<=t) is a plain per-head
+(C x C) matmul operand — MXU-shaped; across chunks state is carried by scan.
+Zamba2 = Mamba2 backbone + one weight-tied transformer block applied every
+``shared_attn_every`` layers (lax.cond inside the layer scan).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.distributed.sharding import ShardingCtx
+from repro.models import params as P
+from repro.models import transformer as T
+from repro.models.common import rms_norm, rms_norm_specs
+
+
+def dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = d_inner // cfg.ssm_head_dim
+    return d_inner, H, cfg.ssm_head_dim, cfg.ssm_state
+
+
+# --- SSD core -----------------------------------------------------------------------
+
+
+def ssd_chunked(x, dt, B, C, A_log, D, state, *, chunk: int):
+    """x: (b,S,H,P); dt: (b,S,H); B,C: (b,S,N); state: (b,H,P,N).
+
+    Returns (y (b,S,H,P), state_out). On TPU this dispatches to the Pallas
+    kernel (repro.kernels.ssd); the body below is the jnp reference path.
+    """
+    import jax as _jax
+    if _jax.default_backend() == "tpu":
+        from repro.kernels.ssd import ops as _ssd_ops
+        y, st = _ssd_ops.ssd(x, dt, B, C, A_log, D, state, chunk=chunk)
+        return y, st
+    b, S, H, Pd = x.shape
+    N = B.shape[-1]
+    if S % chunk:
+        pad = chunk - S % chunk
+        p3 = lambda z: jnp.pad(z, ((0, 0), (0, pad)) + ((0, 0),) * (z.ndim - 2))
+        y, st = ssd_chunked(p3(x), p3(dt), p3(B), p3(C), A_log, D, state,
+                            chunk=chunk)
+        return y[:, :S], st
+    n = S // chunk
+    f32 = jnp.float32
+
+    A = -jnp.exp(A_log.astype(f32))  # (H,)
+
+    def resh(z):
+        return jnp.moveaxis(z.reshape(b, n, chunk, *z.shape[2:]), 1, 0)
+
+    xc, dtc, Bc, Cc = map(resh, (x, dt, B, C))
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))  # s <= t
+
+    def one_chunk(h_in, inp):
+        xx, dd, BB, CC = inp
+        xx, dd, BB, CC = (z.astype(f32) for z in (xx, dd, BB, CC))
+        la = dd * A[None, None, :]  # (b,C,H) log decay per step
+        Li = jnp.cumsum(la, axis=1)  # inclusive
+        # M[t,s] per head: (C_t.B_s) exp(Li[t]-Li[s]) dt_s,  s<=t
+        cb = jnp.einsum("btn,bsn->bts", CC, BB)
+        G = jnp.exp(jnp.clip(Li[:, :, None, :] - Li[:, None, :, :], -60.0, 0.0))
+        M = cb[..., None] * G * dd[:, None, :, :]  # (b,t,s,H)
+        M = jnp.where(mask[None, :, :, None], M, 0.0)
+        y = jnp.einsum("btsh,bshp->bthp", M, xx)
+        # contribution from incoming state
+        y += jnp.einsum("btn,bhpn,bth->bthp", CC, h_in, jnp.exp(Li))
+        # state update
+        decay_all = jnp.exp(Li[:, -1])  # (b,H)
+        w = jnp.exp(Li[:, -1, None, :] - Li) * dd  # (b,C,H)
+        h_out = decay_all[:, :, None, None] * h_in + jnp.einsum(
+            "bth,bthp,btn->bhpn", w, xx, BB)
+        return h_out, y
+
+    state, ys = jax.lax.scan(one_chunk, state.astype(f32), (xc, dtc, Bc, Cc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, S, H, Pd)
+    y = y + x.astype(f32) * D.astype(f32)[None, None, :, None]
+    return y, state
+
+
+def ssd_step(x, dt, B, C, A_log, D, state):
+    """One token. x: (b,H,P); dt: (b,H); B,C: (b,N); state: (b,H,P,N)."""
+    f32 = jnp.float32
+    x, dt, B, C = (z.astype(f32) for z in (x, dt, B, C))
+    a = jnp.exp(dt * (-jnp.exp(A_log.astype(f32)))[None, :])  # (b,H)
+    upd = (dt[..., None] * x)[..., None] * B[:, None, None, :]  # (b,H,P,N)
+    state = a[..., None, None] * state + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, C) + x * D.astype(f32)[None, :, None]
+    return y, state
+
+
+# --- Mamba2 block ---------------------------------------------------------------------
+
+
+def mamba_specs(cfg: ModelConfig) -> Dict:
+    d_inner, H, Pd, N = dims(cfg)
+    K = cfg.ssm_conv_width
+    conv_ch = d_inner + 2 * N
+    return {
+        "ln": rms_norm_specs(cfg.d_model),
+        "w_in": P.dense((cfg.d_model, 2 * d_inner + 2 * N + H), ("fsdp", "mlp")),
+        "conv_w": P.dense((K, conv_ch), ("conv_k", None), scale=0.5),
+        "conv_b": P.dense((conv_ch,), (None,), init="zeros"),
+        "A_log": P.dense((H,), (None,), init="zeros"),
+        "D": P.dense((H,), (None,), init="ones"),
+        "dt_bias": P.dense((H,), (None,), init="zeros"),
+        "norm_gate": rms_norm_specs(d_inner),
+        "w_out": P.dense((d_inner, cfg.d_model), ("mlp", "fsdp")),
+    }
+
+
+def _split_proj(cfg: ModelConfig, z):
+    d_inner, H, Pd, N = dims(cfg)
+    zs = jnp.split(z, [d_inner, 2 * d_inner, 2 * d_inner + N, 2 * d_inner + 2 * N],
+                   axis=-1)
+    gate, xin, B, C, dt = zs
+    return gate, xin, B, C, dt
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: (b,S,ch); w: (K,ch)."""
+    K = w.shape[0]
+    out = jnp.zeros_like(x)
+    for i in range(K):
+        shift = K - 1 - i
+        xi = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1]] if shift else x
+        out = out + xi * w[i][None, None, :]
+    return out + b[None, None, :]
+
+
+def _conv_step(x_t, conv_state, w, b):
+    """x_t: (b,ch); conv_state: (b,K-1,ch) holding previous inputs."""
+    K = w.shape[0]
+    full = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (b,K,ch)
+    out = jnp.einsum("bkc,kc->bc", full, w) + b[None, :]
+    return out, full[:, 1:]
+
+
+def mamba_apply(cfg, ctx: ShardingCtx, w, x, *, chunk):
+    b, S, _ = x.shape
+    d_inner, H, Pd, N = dims(cfg)
+    dt_comp = x.dtype
+    h = rms_norm(x, w["ln"], cfg.norm_eps)
+    z = h @ w["w_in"].astype(dt_comp)
+    z = ctx.constrain(z, ("batch", "seq_inner", "mlp"))
+    gate, xin, B, C, dtr = _split_proj(cfg, z)
+    conv_in = jnp.concatenate([xin, B, C], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, w["conv_w"].astype(dt_comp),
+                                        w["conv_b"].astype(dt_comp)))
+    xin, B, C = jnp.split(conv_out, [d_inner, d_inner + N], axis=-1)
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + w["dt_bias"].astype(jnp.float32))
+    y, _ = ssd_chunked(xin.reshape(b, S, H, Pd), dt, B, C, w["A_log"], w["D"],
+                       jnp.zeros((b, H, Pd, N), jnp.float32), chunk=chunk)
+    y = y.reshape(b, S, d_inner).astype(dt_comp)
+    y = rms_norm(y * jax.nn.silu(gate), w["norm_gate"], cfg.norm_eps)
+    out = y @ w["w_out"].astype(dt_comp)
+    return ctx.constrain(out, ("batch", "seq", "embed"))
+
+
+def mamba_prefill(cfg, ctx, w, x, *, chunk):
+    b, S, _ = x.shape
+    d_inner, H, Pd, N = dims(cfg)
+    dt_comp = x.dtype
+    h = rms_norm(x, w["ln"], cfg.norm_eps)
+    z = h @ w["w_in"].astype(dt_comp)
+    gate, xin, B, C, dtr = _split_proj(cfg, z)
+    conv_in = jnp.concatenate([xin, B, C], axis=-1)
+    K = cfg.ssm_conv_width
+    conv_state = jnp.pad(conv_in, ((0, 0), (K - 1, 0), (0, 0)))[:, -(K - 1):] \
+        if S >= K - 1 else jnp.pad(conv_in, ((0, 0), (K - 1 - S, 0), (0, 0)))
+    conv_out = jax.nn.silu(_causal_conv(conv_in, w["conv_w"].astype(dt_comp),
+                                        w["conv_b"].astype(dt_comp)))
+    xin, B, C = jnp.split(conv_out, [d_inner, d_inner + N], axis=-1)
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + w["dt_bias"].astype(jnp.float32))
+    y, ssm = ssd_chunked(xin.reshape(b, S, H, Pd), dt, B, C, w["A_log"], w["D"],
+                         jnp.zeros((b, H, Pd, N), jnp.float32), chunk=chunk)
+    y = y.reshape(b, S, d_inner).astype(dt_comp)
+    y = rms_norm(y * jax.nn.silu(gate), w["norm_gate"], cfg.norm_eps)
+    out = y @ w["w_out"].astype(dt_comp)
+    state = {"ssm": ssm, "conv": conv_state.astype(jnp.bfloat16)}
+    return ctx.constrain(out, ("batch", "seq", "embed")), state
+
+
+def mamba_decode(cfg, ctx, w, x, state):
+    """x: (b,1,d); state: {ssm (b,H,P,N), conv (b,K-1,ch)}."""
+    b = x.shape[0]
+    d_inner, H, Pd, N = dims(cfg)
+    dt_comp = x.dtype
+    h = rms_norm(x, w["ln"], cfg.norm_eps)[:, 0]
+    z = h @ w["w_in"].astype(dt_comp)
+    gate, xin, B, C, dtr = _split_proj(cfg, z)
+    conv_in = jnp.concatenate([xin, B, C], axis=-1)
+    conv_out, conv_state = _conv_step(conv_in, state["conv"].astype(dt_comp),
+                                      w["conv_w"].astype(dt_comp),
+                                      w["conv_b"].astype(dt_comp))
+    conv_out = jax.nn.silu(conv_out)
+    xin, B, C = jnp.split(conv_out, [d_inner, d_inner + N], axis=-1)
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + w["dt_bias"].astype(jnp.float32))
+    y, ssm = ssd_step(xin.reshape(b, H, Pd), dt, B, C, w["A_log"], w["D"],
+                      state["ssm"])
+    y = y.reshape(b, d_inner).astype(dt_comp)
+    y = rms_norm(y * jax.nn.silu(gate), w["norm_gate"], cfg.norm_eps)
+    out = (y @ w["w_out"].astype(dt_comp))[:, None, :]
+    return out, {"ssm": ssm, "conv": conv_state.astype(jnp.bfloat16)}
+
+
+def mamba_state_specs(cfg: ModelConfig, batch: int) -> Dict:
+    d_inner, H, Pd, N = dims(cfg)
+    K = cfg.ssm_conv_width
+    return {
+        "ssm": P.dense((batch, H, Pd, N), ("batch", "heads", None, None),
+                       init="zeros", dtype="float32"),
+        "conv": P.dense((batch, K - 1, d_inner + 2 * N), ("batch", None, "mlp"),
+                        init="zeros", dtype="bfloat16"),
+    }
+
+
+# --- Zamba2 hybrid stack ----------------------------------------------------------------
+
+
+def n_shared_applications(cfg: ModelConfig) -> int:
+    e = cfg.shared_attn_every
+    return 0 if e <= 0 else sum(1 for i in range(cfg.num_layers) if i % e == e - 1)
+
+
+def stack_specs(cfg: ModelConfig) -> Dict:
+    specs = {"layers": P.stack_tree(cfg.num_layers, mamba_specs(cfg))}
+    if cfg.shared_attn_every > 0:
+        specs["shared"] = T.block_specs(cfg, moe=False)  # weight-tied, NOT stacked
+    return specs
+
+
+def _is_attn_layer(cfg: ModelConfig, i):
+    e = cfg.shared_attn_every
+    return (i % e) == (e - 1)
+
+
+def stack_apply(cfg, run: RunConfig, ctx, w, x, positions, *, chunk):
+    from repro.models.scan_utils import grouped_scan
+
+    shared = w.get("shared")
+
+    def body(x, inp):
+        i, wl = inp
+        x = x + mamba_apply(cfg, ctx, wl, x, chunk=chunk)
+        if shared is not None:
+            def with_attn(x):
+                y, _ = T.block_apply(cfg, run, ctx, shared, x, positions)
+                return y
+
+            x = jax.lax.cond(_is_attn_layer(cfg, i), with_attn, lambda x: x, x)
+        return x, None
+
+    x, _ = grouped_scan(body, x, (jnp.arange(cfg.num_layers), w["layers"]),
+                        cfg.num_layers, run.scan_group, run.remat == "block")
+    return x, jnp.float32(0.0)
+
+
+def hybrid_cache_specs(cfg: ModelConfig, batch: int, cache_len: int) -> Dict:
+    from repro.models import attention as A
+
+    specs = {"mamba": P.stack_tree(cfg.num_layers, mamba_state_specs(cfg, batch))}
+    napp = n_shared_applications(cfg)
+    if napp:
+        att = A.cache_specs(cfg, batch, A.effective_cache_len(cfg, cache_len))
+        specs["attn"] = P.stack_tree(napp, att)
+    return specs
+
+
+def stack_prefill(cfg, run: RunConfig, ctx, w, x, positions, *, chunk):
+    shared = w.get("shared")
+    napp = n_shared_applications(cfg)
+    B, S = x.shape[:2]
+
+    attn_cache = None
+    if napp:
+        from repro.models import attention as A
+        eff = A.effective_cache_len(cfg, S)
+        kshape = (napp, B, eff, cfg.num_kv_heads, cfg.head_dim)
+        attn_cache = {"k": jnp.zeros(kshape, jnp.bfloat16),
+                      "v": jnp.zeros(kshape, jnp.bfloat16)}
+
+    def body2(carry, inp):
+        x, cache = carry
+        i, wl = inp
+        dx, st = mamba_prefill(cfg, ctx, wl, x, chunk=chunk)
+        x = x + dx
+        if shared is not None:
+            def with_attn(args):
+                xx, cc = args
+                xo, k, v = T.block_prefill(cfg, run, ctx, shared, xx, positions)
+                app = i // cfg.shared_attn_every
+                cc = {
+                    "k": jax.lax.dynamic_update_index_in_dim(
+                        cc["k"], k[:, -cc["k"].shape[2]:].astype(jnp.bfloat16), app, 0),
+                    "v": jax.lax.dynamic_update_index_in_dim(
+                        cc["v"], v[:, -cc["v"].shape[2]:].astype(jnp.bfloat16), app, 0),
+                }
+                return xo, cc
+
+            x, cache = jax.lax.cond(_is_attn_layer(cfg, i), with_attn,
+                                    lambda a: a, (x, cache))
+        return (x, cache), st
+
+    (x, attn_cache), mamba_states = jax.lax.scan(
+        body2, (x, attn_cache), (jnp.arange(cfg.num_layers), w["layers"]))
+    cache = {"mamba": mamba_states}
+    if napp:
+        cache["attn"] = attn_cache
+    return x, cache
+
+
+def stack_decode(cfg, run: RunConfig, ctx, w, cache, x, pos, *, use_flash=False):
+    shared = w.get("shared")
+    napp = n_shared_applications(cfg)
+    attn_cache = cache.get("attn")
+
+    def body(carry, inp):
+        x, acache = carry
+        i, wl, mstate = inp
+        dx, mstate = mamba_decode(cfg, ctx, wl, x, mstate)
+        x = x + dx
+        if shared is not None:
+            def with_attn(args):
+                xx, cc = args
+                app = i // cfg.shared_attn_every
+                ck = cc["k"][app]
+                cv = cc["v"][app]
+                xo, ck, cv = T.block_decode(cfg, run, ctx, shared, xx, ck, cv, pos,
+                                            use_flash=use_flash)
+                cc = {"k": jax.lax.dynamic_update_index_in_dim(cc["k"], ck, app, 0),
+                      "v": jax.lax.dynamic_update_index_in_dim(cc["v"], cv, app, 0)}
+                return xo, cc
+
+            x, acache = jax.lax.cond(_is_attn_layer(cfg, i), with_attn,
+                                     lambda a: a, (x, acache))
+        return (x, acache), mstate
+
+    (x, attn_cache), mamba_states = jax.lax.scan(
+        body, (x, attn_cache), (jnp.arange(cfg.num_layers), w["layers"], cache["mamba"]))
+    out = {"mamba": mamba_states}
+    if napp:
+        out["attn"] = attn_cache
+    return x, out

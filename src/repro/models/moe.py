@@ -1,0 +1,126 @@
+"""Mixture-of-Experts layer: top-k router + capacity-based matmul dispatch
+(GShard-style), expert-parallel over the ``model`` mesh axis.
+
+Baseline uses the dense dispatch/combine einsum (TPU-friendly, MXU-shaped);
+its extra dispatch FLOPs are visible in the roofline MODEL/HLO ratio and are
+the target of the MoE hillclimb (§Perf), which switches to a sort-based
+dispatch. Tokens are processed in groups of ``moe_group`` so the (g, E, C)
+combine tensor stays bounded regardless of sequence length.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ShardingCtx
+from repro.models import params as P
+from repro.models.common import mlp_apply, mlp_specs
+
+MOE_GROUP = 4096
+CAPACITY_FACTOR = 1.25
+
+
+def moe_specs(cfg: ModelConfig) -> Dict[str, P.TensorSpec]:
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    specs = {
+        "router": P.dense((d, E), ("fsdp", "experts"), scale=0.1),
+        "w_gate": P.dense((E, d, ff), ("experts", "fsdp", "expert_mlp")),
+        "w_up": P.dense((E, d, ff), ("experts", "fsdp", "expert_mlp")),
+        "w_down": P.dense((E, ff, d), ("experts", "expert_mlp", "fsdp")),
+    }
+    if cfg.shared_expert:
+        specs["shared"] = mlp_specs(cfg, d_ff=cfg.d_ff)
+    return specs
+
+
+def capacity(group: int, cfg: ModelConfig) -> int:
+    c = int(math.ceil(group * cfg.experts_per_token * CAPACITY_FACTOR / cfg.num_experts))
+    return max(8, ((c + 127) // 128) * 128) if c > 8 else max(c, 4)
+
+
+def _route(cfg: ModelConfig, logits: jax.Array):
+    """logits (g, E) -> weights (g, k), ids (g, k), router probs (g, E)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    w, ids = jax.lax.top_k(probs, cfg.experts_per_token)
+    w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9)  # olmoe renorm
+    return w, ids, probs
+
+
+def _combine_tensor(cfg: ModelConfig, w, ids, C: int):
+    """Build (g, E, C) combine weights via per-k accumulation (GShard)."""
+    g, k = ids.shape
+    E = cfg.num_experts
+    onehot = jax.nn.one_hot(ids, E, dtype=jnp.float32)  # (g, k, E)
+    # Priority order: all k=0 choices first, then k=1, ... (GShard semantics).
+    flat = jnp.moveaxis(onehot, 1, 0).reshape(k * g, E)
+    pos = jnp.cumsum(flat, axis=0) - flat  # (k*g, E) slot index per assignment
+    pos = pos.reshape(k, g, E)
+    combine = jnp.zeros((g, E, C), jnp.float32)
+    for j in range(k):
+        slot = jnp.sum(pos[j] * onehot[:, j], axis=-1)  # (g,)
+        keep = slot < C
+        slot_oh = jax.nn.one_hot(slot, C, dtype=jnp.float32)  # (g, C)
+        contrib = (w[:, j] * keep)[:, None, None] * onehot[:, j][:, :, None] * slot_oh[:, None, :]
+        combine = combine + contrib
+    return combine
+
+
+def _moe_group_apply(cfg: ModelConfig, ctx: ShardingCtx, wts, xg: jax.Array):
+    """xg: (g, d) one token group -> (y (g, d), aux)."""
+    dt = xg.dtype
+    g = xg.shape[0]
+    C = capacity(g, cfg)
+    logits = xg @ wts["router"].astype(dt)  # (g, E)
+    w, ids, probs = _route(cfg, logits)
+    combine = _combine_tensor(cfg, w, ids, C)  # (g, E, C) f32
+    combine = ctx.constrain(combine, ("batch", "experts", "capacity"))
+    dispatch = (combine > 0).astype(dt)
+    xe = jnp.einsum("gec,gd->ecd", dispatch, xg)
+    xe = ctx.constrain(xe, ("experts", "capacity", "embed"))
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, wts["w_gate"].astype(dt)))
+    h = h * jnp.einsum("ecd,edf->ecf", xe, wts["w_up"].astype(dt))
+    h = ctx.constrain(h, ("experts", "capacity", "expert_mlp"))
+    ye = jnp.einsum("ecf,efd->ecd", h, wts["w_down"].astype(dt))
+    ye = ctx.constrain(ye, ("experts", "capacity", "embed"))
+    y = jnp.einsum("gec,ecd->gd", combine.astype(dt), ye)
+    # Load-balancing aux loss (Switch): E * mean_e(frac_tokens_e * mean_prob_e)
+    assign = jnp.sum((combine > 0), axis=2).astype(jnp.float32)  # (g, E)
+    frac = jnp.mean(assign, axis=0) / cfg.experts_per_token
+    mean_prob = jnp.mean(probs, axis=0)
+    aux = cfg.num_experts * jnp.sum(frac * mean_prob)
+    return y, aux
+
+
+def moe_apply(cfg: ModelConfig, ctx: ShardingCtx, wts, x: jax.Array,
+              impl: str = "dense"):
+    """x: (B, S, d) -> (y, aux_loss). impl="a2a" uses the shard_map
+    expert-parallel path (requires a mesh with a model axis)."""
+    if impl == "a2a" and ctx.mesh is not None and "model" in ctx.mesh.axis_names:
+        from repro.models.moe_a2a import moe_a2a_apply
+        return moe_a2a_apply(cfg, ctx, wts, x)
+    B, S, d = x.shape
+    T = B * S
+    xf = x.reshape(T, d)
+    group = min(MOE_GROUP, T)
+    if T % group != 0:
+        group = T
+    n_groups = T // group
+    if n_groups == 1:
+        y, aux = _moe_group_apply(cfg, ctx, wts, xf)
+    else:
+        xg = xf.reshape(n_groups, group, d)
+
+        def body(_, xc):
+            return None, _moe_group_apply(cfg, ctx, wts, xc)
+
+        _, (ys, auxs) = jax.lax.scan(body, None, xg)
+        y, aux = ys.reshape(T, d), jnp.mean(auxs)
+    y = y.reshape(B, S, d)
+    if cfg.shared_expert:
+        y = y + mlp_apply(wts["shared"], x, ctx, cfg.act)
+    return y, aux * cfg.router_aux_loss

@@ -1,0 +1,134 @@
+"""Expert-parallel MoE via shard_map + all_to_all (the MoE hillclimb).
+
+The baseline dense-dispatch einsum under auto-SPMD reshards the (g, E, C)
+combine tensor on every group step (~16x the useful routing volume measured
+in the olmoe baseline HLO). This path controls the bytes explicitly:
+
+  1. each model-rank routes its 1/16 slice of the local tokens (routing is
+     replicated work otherwise),
+  2. sort-based packing (no one-hot matmuls): assignments sorted by expert,
+     packed into per-expert capacity buckets (E, C_e, d),
+  3. one all_to_all over the model axis delivers each shard its 4 experts'
+     buckets; expert FFNs run as local grouped matmuls,
+  4. reverse all_to_all + scatter-add combine; one all_gather rejoins the
+     per-rank token slices.
+
+Wire bytes per call per chip ~= 2 x (E x C_e x d) [a2a] + T_loc x d [gather]
+— measured 50x below the baseline's resharding traffic (EXPERIMENTS §Perf).
+Capacity semantics (drops beyond C_e) match the dense baseline.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as PS
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ShardingCtx
+
+CAPACITY_FACTOR = 1.25
+
+
+def _pair_capacity(t_m: int, cfg: ModelConfig) -> int:
+    c = math.ceil(t_m * cfg.experts_per_token * CAPACITY_FACTOR / cfg.num_experts)
+    return max(8, ((c + 7) // 8) * 8)
+
+
+def moe_a2a_apply(cfg: ModelConfig, ctx: ShardingCtx, w, x: jax.Array):
+    """x: (B, S, d) with B sharded over the batch axes. Returns (y, aux)."""
+    mesh = ctx.mesh
+    assert mesh is not None and "model" in mesh.axis_names
+    n_exp_shards = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+    assert cfg.num_experts % n_exp_shards == 0
+    e_loc = cfg.num_experts // n_exp_shards
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    def local_moe(xb, router, w_gate, w_up, w_down):
+        # xb: (B_loc, S, d); experts weights: (e_loc, ...) local shard
+        dt = xb.dtype
+        B_loc, S, d = xb.shape
+        T = B_loc * S
+        m = jax.lax.axis_index("model")
+        t_m = T // n_exp_shards
+        C = _pair_capacity(t_m, cfg)
+        E, k = cfg.num_experts, cfg.experts_per_token
+
+        xt = xb.reshape(T, d)
+        x_m = jax.lax.dynamic_slice_in_dim(xt, m * t_m, t_m, axis=0)  # (t_m, d)
+
+        # 1) route
+        logits = jnp.matmul(x_m, router.astype(dt),
+                            preferred_element_type=jnp.float32)
+        probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+        wk, ids = jax.lax.top_k(probs, k)  # (t_m, k)
+        wk = wk / jnp.maximum(jnp.sum(wk, axis=-1, keepdims=True), 1e-9)
+
+        # 2) sort-based packing into (E, C, d)
+        flat_e = ids.reshape(-1)                      # (t_m*k,)
+        flat_t = jnp.repeat(jnp.arange(t_m), k)
+        flat_w = wk.reshape(-1).astype(jnp.float32)
+        order = jnp.argsort(flat_e, stable=True)
+        se, st_, sw = flat_e[order], flat_t[order], flat_w[order]
+        # position within expert = index - start offset of that expert
+        counts = jnp.bincount(se, length=E)
+        starts = jnp.cumsum(counts) - counts
+        pos = jnp.arange(t_m * k) - starts[se]
+        keep = pos < C
+        slot = jnp.where(keep, pos, C)  # C = spill row (dropped)
+        send = jnp.zeros((E, C + 1, d), dt).at[se, slot].set(xt[st_ + m * t_m])
+        send = send[:, :C]  # (E, C, d)
+
+        # 3) a2a: (E, C, d) -> shard e_loc experts per rank
+        recv = jax.lax.all_to_all(
+            send.reshape(n_exp_shards, e_loc, C, d), "model",
+            split_axis=0, concat_axis=0, tiled=False)
+        # recv: (n_shards_src, e_loc, C, d) -> (e_loc, n_src*C, d)
+        recv = jnp.moveaxis(recv, 0, 1).reshape(e_loc, n_exp_shards * C, d)
+
+        # expert FFNs: grouped matmuls, fully local
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", recv, w_gate.astype(dt),
+                                   preferred_element_type=dt))
+        h = h * jnp.einsum("ecd,edf->ecf", recv, w_up.astype(dt),
+                           preferred_element_type=dt)
+        ye = jnp.einsum("ecf,efd->ecd", h, w_down.astype(dt),
+                        preferred_element_type=dt)
+
+        # 4) reverse a2a + combine
+        ye = jnp.moveaxis(ye.reshape(e_loc, n_exp_shards, C, d), 1, 0)
+        back = jax.lax.all_to_all(ye, "model", split_axis=0, concat_axis=0,
+                                  tiled=False)
+        back = back.reshape(E, C, d)  # my tokens' expert outputs
+        picked = back[se, jnp.clip(slot, 0, C - 1)]
+        picked = jnp.where((keep & True)[:, None], picked, 0)
+        contrib = picked.astype(jnp.float32) * sw[:, None]
+        y_m = jnp.zeros((t_m, d), jnp.float32).at[st_].add(contrib)
+
+        # rejoin rank slices
+        y = jax.lax.all_gather(y_m.astype(dt), "model", axis=0, tiled=True)
+        # aux load-balance loss (Switch), averaged over shards
+        frac = counts.astype(jnp.float32) / jnp.maximum(jnp.sum(counts), 1)
+        mean_prob = jnp.mean(probs, axis=0)
+        aux = E * jnp.sum(frac * mean_prob)
+        aux = jax.lax.pmean(aux, "model")
+        return y.reshape(B_loc, S, d), aux
+
+    bspec = PS(batch_axes if batch_axes else None)
+    fn = shard_map(
+        local_moe, mesh=mesh,
+        in_specs=(PS(batch_axes if batch_axes else None, None, None),
+                  PS(None, None),
+                  PS("model", None, None), PS("model", None, None),
+                  PS("model", None, None)),
+        out_specs=(PS(batch_axes if batch_axes else None, None, None), PS()),
+        check_rep=False,
+    )
+    y, aux = fn(x, w["router"], w["w_gate"], w["w_up"], w["w_down"])
+    if cfg.shared_expert:
+        from repro.models.common import mlp_apply
+        y = y + mlp_apply(w["shared"], x, ctx, cfg.act)
+    return y, aux * cfg.router_aux_loss

@@ -1,0 +1,110 @@
+"""Declarative parameter specs.
+
+Each model family declares its parameters once, as a pytree of ``TensorSpec``
+(shape + logical axes + initializer). From that single source of truth we
+derive:
+
+  * materialized parameters for CPU smoke tests / real small-scale training,
+  * ``jax.ShapeDtypeStruct`` stand-ins with ``NamedSharding`` for the
+    multi-pod dry-run (no allocation),
+  * ``PartitionSpec`` trees for jit in/out shardings,
+  * analytic parameter counts for 6ND roofline cross-checks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import ShardingCtx
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorSpec:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    init: str = "normal"  # normal | zeros | ones | embed | small
+    scale: float = 1.0
+    dtype: Optional[str] = None  # None -> run param dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def is_spec(x: Any) -> bool:
+    return isinstance(x, TensorSpec)
+
+
+def _leaf_dtype(spec: TensorSpec, default_dtype) -> Any:
+    return jnp.dtype(spec.dtype) if spec.dtype else jnp.dtype(default_dtype)
+
+
+def materialize(tree, rng: jax.Array, dtype="float32"):
+    """Instantiate real parameters (used by smoke tests and real training)."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_spec)
+    keys = jax.random.split(rng, len(leaves))
+    out = []
+    for spec, key in zip(leaves, keys):
+        dt = _leaf_dtype(spec, dtype)
+        if spec.init == "zeros":
+            arr = jnp.zeros(spec.shape, dt)
+        elif spec.init == "ones":
+            arr = jnp.ones(spec.shape, dt)
+        else:
+            fan_in = spec.shape[-1] if spec.init == "embed" else (
+                spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1])
+            std = spec.scale / np.sqrt(max(fan_in, 1))
+            arr = (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(dt)
+        out.append(arr)
+    return jax.tree.unflatten(treedef, out)
+
+
+def shape_dtype_tree(tree, ctx: ShardingCtx, dtype="float32"):
+    """ShapeDtypeStructs with shardings — the dry-run stand-ins."""
+
+    def f(spec: TensorSpec):
+        dt = _leaf_dtype(spec, dtype)
+        if ctx.mesh is None:
+            return jax.ShapeDtypeStruct(spec.shape, dt)
+        return jax.ShapeDtypeStruct(spec.shape, dt, sharding=ctx.sharding(spec.logical, spec.shape))
+
+    return jax.tree.map(f, tree, is_leaf=is_spec)
+
+
+def partition_specs(tree, ctx: ShardingCtx):
+    return jax.tree.map(lambda s: ctx.spec(s.logical, s.shape), tree, is_leaf=is_spec)
+
+
+def count_params(tree) -> int:
+    leaves = jax.tree.leaves(tree, is_leaf=is_spec)
+    return int(sum(int(np.prod(s.shape)) for s in leaves))
+
+
+def map_specs(fn, tree):
+    return jax.tree.map(fn, tree, is_leaf=is_spec)
+
+
+def spec_like(spec: TensorSpec, **overrides) -> TensorSpec:
+    return dataclasses.replace(spec, **overrides)
+
+
+# --- helpers used by model definitions -------------------------------------
+
+
+def dense(shape: Sequence[int], logical: Sequence[Optional[str]], *, scale=1.0,
+          dtype: Optional[str] = None, init="normal") -> TensorSpec:
+    return TensorSpec(tuple(shape), tuple(logical), init=init, scale=scale, dtype=dtype)
+
+
+def stacked(n_layers: int, spec: TensorSpec) -> TensorSpec:
+    """Prepend a scanned ``layers`` axis."""
+    return TensorSpec((n_layers,) + spec.shape, ("layers",) + spec.logical,
+                      init=spec.init, scale=spec.scale, dtype=spec.dtype)
+
+
+def stack_tree(n_layers: int, tree):
+    return map_specs(lambda s: stacked(n_layers, s), tree)

@@ -1,0 +1,307 @@
+"""RWKV6 (Finch): attention-free LM with data-dependent decay linear attention.
+
+WKV6 recurrence per head (state S in R^{dk x dv}):
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    y_t = r_t (S_{t-1} + diag(u) k_t v_t^T)
+
+Training/prefill use an exact chunked scan: within a chunk the per-channel
+decay matrix A[t,s,c] = exp(L_excl[t,c] - L_incl[s,c]) (always <= 1, so
+numerically safe) is contracted with r/k/v; across chunks the state is
+carried by ``lax.scan``. The TPU fast path is ``repro.kernels.wkv6``.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.distributed.sharding import ShardingCtx
+from repro.models import params as P
+from repro.models.common import rms_norm, rms_norm_specs
+
+LORA_MIX = 32
+LORA_DECAY = 64
+
+
+def _num_heads(cfg: ModelConfig) -> int:
+    return cfg.d_model // cfg.wkv_head_dim
+
+
+# --- WKV6 core ---------------------------------------------------------------------
+
+
+def wkv6_chunked(r, k, v, w, u, state, *, chunk: int):
+    """r,k,w: (B,S,H,K); v: (B,S,H,V); u: (H,K); state: (B,H,K,V).
+
+    Returns (y (B,S,H,V), state_out). Exact (non-approximate) chunked form.
+    On TPU this dispatches to the Pallas kernel (repro.kernels.wkv6); the
+    body below is the jnp reference/XLA path.
+    """
+    import jax as _jax
+    if _jax.default_backend() == "tpu":
+        from repro.kernels.wkv6 import ops as _wkv_ops
+        return _wkv_ops.wkv6(r, k, v, w, u, state, chunk=chunk)
+    B, S, H, K = r.shape
+    V = v.shape[-1]
+    if S % chunk:
+        # zero-pad to a chunk multiple: k=0 contributes nothing to y or the
+        # kv sum; the returned state is only exact when S %% chunk == 0
+        # (prefill callers guarantee that).
+        pad = chunk - S % chunk
+        padf = lambda z: jnp.pad(z, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        y, st = wkv6_chunked(padf(r), padf(k), padf(v), padf(w), u, state,
+                             chunk=chunk)
+        return y[:, :S], st
+    n = S // chunk
+    f32 = jnp.float32
+
+    def reshape(x):
+        return jnp.moveaxis(x.reshape(B, n, chunk, H, x.shape[-1]), 1, 0)
+
+    rc, kc, vc, wc = map(reshape, (r, k, v, w))  # (n, B, chunk, H, *)
+
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool), -1)  # strict lower: s < t
+
+    def one_chunk(S_in, inp):
+        rr, kk, vv, ww = [x.astype(f32) for x in inp]  # (B, C, H, *)
+        logw = -jnp.exp(ww)  # RWKV6 parameterization: w = exp(-exp(ww)) -> log w
+        Li = jnp.cumsum(logw, axis=1)  # inclusive
+        Le = Li - logw  # exclusive
+        # intra-chunk: A[t,s,c] = exp(Le[t]-Li[s]) for s<t
+        A = jnp.exp(jnp.clip(Le[:, :, None] - Li[:, None, :], -60.0, 0.0))
+        A = jnp.where(mask[None, :, :, None, None], A, 0.0)  # (B,t,s,H,K)
+        tmp = jnp.einsum("bthk,btshk,bshk->btsh", rr, A, kk)
+        y = jnp.einsum("btsh,bshv->bthv", tmp, vv)
+        # diagonal (s == t) with the u bonus
+        y += jnp.einsum("bthk,hk,bthk,bthv->bthv", rr, u.astype(f32), kk, vv)
+        # state contribution
+        y += jnp.einsum("bthk,bthk,bhkv->bthv", rr, jnp.exp(Le), S_in)
+        # state update: S_out = exp(Li[-1]) * S_in + sum_s exp(Li[-1]-Li[s]) k_s v_s^T
+        decay_all = jnp.exp(Li[:, -1])  # (B,H,K)
+        kd = kk * jnp.exp(Li[:, -1, None] - Li)  # (B,C,H,K)
+        S_out = decay_all[..., None] * S_in + jnp.einsum("bshk,bshv->bhkv", kd, vv)
+        return S_out, y
+
+    state, ys = jax.lax.scan(one_chunk, state.astype(f32), (rc, kc, vc, wc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, V)
+    return y, state
+
+
+def wkv6_step(r, k, v, w, u, state):
+    """Single-token recurrence. r,k,w: (B,H,K); v: (B,H,V); state: (B,H,K,V)."""
+    f32 = jnp.float32
+    r, k, v, w = (x.astype(f32) for x in (r, k, v, w))
+    decay = jnp.exp(-jnp.exp(w))
+    kv = k[..., :, None] * v[..., None, :]  # (B,H,K,V)
+    y = jnp.einsum("bhk,bhkv->bhv", r, state + u.astype(f32)[None, :, :, None] * kv)
+    state = decay[..., None] * state + kv
+    return y, state
+
+
+# --- blocks -------------------------------------------------------------------------
+
+
+def time_mix_specs(cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    H = _num_heads(cfg)
+    K = cfg.wkv_head_dim
+    return {
+        "ln": rms_norm_specs(d),
+        "mu_base": P.dense((d,), (None,), init="zeros"),
+        "mu_rkvwg": P.dense((5, d), (None, None), init="zeros"),
+        "lora_A": P.dense((d, 5 * LORA_MIX), ("fsdp", None), scale=0.1),
+        "lora_B": P.dense((5, LORA_MIX, d), (None, None, "fsdp"), scale=0.1),
+        "wr": P.dense((d, d), ("fsdp", "heads")),
+        "wk": P.dense((d, d), ("fsdp", "heads")),
+        "wv": P.dense((d, d), ("fsdp", "heads")),
+        "wg": P.dense((d, d), ("fsdp", "heads")),
+        "w0": P.dense((d,), (None,), init="zeros"),
+        "wlora_A": P.dense((d, LORA_DECAY), ("fsdp", None), scale=0.1),
+        "wlora_B": P.dense((LORA_DECAY, d), (None, "fsdp"), scale=0.1),
+        "u": P.dense((H, K), (None, None), init="zeros"),
+        "ln_x": rms_norm_specs(d),
+        "wo": P.dense((d, d), ("heads", "fsdp")),
+    }
+
+
+def channel_mix_specs(cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    return {
+        "ln": rms_norm_specs(d),
+        "mu_k": P.dense((d,), (None,), init="zeros"),
+        "mu_r": P.dense((d,), (None,), init="zeros"),
+        "wk": P.dense((d, cfg.d_ff), ("fsdp", "mlp")),
+        "wv": P.dense((cfg.d_ff, d), ("mlp", "fsdp")),
+        "wr": P.dense((d, d), ("fsdp", None)),
+    }
+
+
+def layer_specs(cfg: ModelConfig) -> Dict:
+    return {"tmix": time_mix_specs(cfg), "cmix": channel_mix_specs(cfg)}
+
+
+def _ddlerp(w, x, xx):
+    """Data-dependent token-shift interpolation -> 5 mixed streams (r,k,v,w,g)."""
+    dt = x.dtype
+    dx = xx - x
+    base = x + dx * w["mu_base"].astype(dt)
+    lora = jnp.tanh(base @ w["lora_A"].astype(dt))
+    lora = lora.reshape(lora.shape[:-1] + (5, LORA_MIX))
+    delta = jnp.einsum("...lk,lkd->...ld", lora, w["lora_B"].astype(dt))
+    mixed = x[..., None, :] + dx[..., None, :] * (w["mu_rkvwg"].astype(dt) + delta)
+    return [mixed[..., i, :] for i in range(5)]
+
+
+def _decay(w, xw):
+    dt = xw.dtype
+    lora = jnp.tanh(xw @ w["wlora_A"].astype(dt)) @ w["wlora_B"].astype(dt)
+    return w["w0"].astype(dt) + lora  # ww; decay = exp(-exp(ww))
+
+
+def _split_heads(x, H, K):
+    return x.reshape(x.shape[:-1] + (H, K))
+
+
+def time_mix_apply(cfg: ModelConfig, ctx: ShardingCtx, w, x, xx, state, *, chunk):
+    """x: (B,S,d); xx: token-shifted x; state: (B,H,K,V) or None (train from 0)."""
+    B, S, d = x.shape
+    H, K = _num_heads(cfg), cfg.wkv_head_dim
+    h = rms_norm(x, w["ln"], cfg.norm_eps)
+    hh = rms_norm(xx, w["ln"], cfg.norm_eps)
+    xr, xk, xv, xw, xg = _ddlerp(w, h, hh)
+    dt = x.dtype
+    r = _split_heads(xr @ w["wr"].astype(dt), H, K)
+    k = _split_heads(xk @ w["wk"].astype(dt), H, K)
+    v = _split_heads(xv @ w["wv"].astype(dt), H, K)
+    g = jax.nn.silu(xg @ w["wg"].astype(dt))
+    ww = _split_heads(_decay(w, xw), H, K)
+    r = ctx.constrain(r, ("batch", "seq_inner", "heads", "head_dim"))
+    k = ctx.constrain(k, ("batch", "seq_inner", "heads", "head_dim"))
+    if state is None:
+        state = jnp.zeros((B, H, K, K), jnp.float32)
+    y, state = wkv6_chunked(r, k, v, ww, w["u"], state, chunk=chunk)
+    y = y.reshape(B, S, d).astype(dt)
+    y = rms_norm(y, w["ln_x"], cfg.norm_eps)  # stand-in for per-head groupnorm
+    out = (y * g) @ w["wo"].astype(dt)
+    return ctx.constrain(out, ("batch", "seq", "embed")), state
+
+
+def channel_mix_apply(cfg: ModelConfig, ctx: ShardingCtx, w, x, xx):
+    dt = x.dtype
+    h = rms_norm(x, w["ln"], cfg.norm_eps)
+    hh = rms_norm(xx, w["ln"], cfg.norm_eps)
+    dx = hh - h
+    xk = h + dx * w["mu_k"].astype(dt)
+    xr = h + dx * w["mu_r"].astype(dt)
+    k = jnp.square(jax.nn.relu(xk @ w["wk"].astype(dt)))
+    k = ctx.constrain(k, ("batch", "seq_inner", "mlp"))
+    v = k @ w["wv"].astype(dt)
+    rgate = jax.nn.sigmoid(xr @ w["wr"].astype(dt))
+    return ctx.constrain(rgate * v, ("batch", "seq", "embed"))
+
+
+def _shift(x):
+    """xx_t = x_{t-1} (zeros at t=0)."""
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+
+
+def layer_apply(cfg, run, ctx, w, x, *, chunk):
+    xx = _shift(x)
+    y, _ = time_mix_apply(cfg, ctx, w["tmix"], x, xx, None, chunk=chunk)
+    x = x + y
+    xx2 = _shift(x)
+    x = x + channel_mix_apply(cfg, ctx, w["cmix"], x, xx2)
+    return x
+
+
+def layer_prefill(cfg, run, ctx, w, x, *, chunk):
+    """Like layer_apply but returns decode state (wkv state + last-token xs)."""
+    B, S, d = x.shape
+    H, K = _num_heads(cfg), cfg.wkv_head_dim
+    xx = _shift(x)
+    y, wkv_state = time_mix_apply(cfg, ctx, w["tmix"], x, xx, None, chunk=chunk)
+    last_tmix = x[:, -1]
+    x = x + y
+    xx2 = _shift(x)
+    last_cmix = x[:, -1]
+    x = x + channel_mix_apply(cfg, ctx, w["cmix"], x, xx2)
+    state = {"wkv": wkv_state, "last_tmix": last_tmix, "last_cmix": last_cmix}
+    return x, state
+
+
+def layer_decode(cfg, run, ctx, w, x, state):
+    """x: (B,1,d); state: {wkv (B,H,K,V), last_tmix (B,d), last_cmix (B,d)}."""
+    B, _, d = x.shape
+    H, K = _num_heads(cfg), cfg.wkv_head_dim
+    xt = x[:, 0]
+    xx = state["last_tmix"][:, None, :].astype(x.dtype)
+    wt = w["tmix"]
+    h = rms_norm(x, wt["ln"], cfg.norm_eps)
+    hh = rms_norm(xx, wt["ln"], cfg.norm_eps)
+    xr, xk, xv, xw, xg = _ddlerp(wt, h, hh)
+    dt = x.dtype
+    r = _split_heads(xr @ wt["wr"].astype(dt), H, K)[:, 0]
+    k = _split_heads(xk @ wt["wk"].astype(dt), H, K)[:, 0]
+    v = _split_heads(xv @ wt["wv"].astype(dt), H, K)[:, 0]
+    g = jax.nn.silu(xg @ wt["wg"].astype(dt))
+    ww = _split_heads(_decay(wt, xw), H, K)[:, 0]
+    y, wkv = wkv6_step(r, k, v, ww, wt["u"], state["wkv"])
+    y = y.reshape(B, 1, d).astype(dt)
+    y = rms_norm(y, wt["ln_x"], cfg.norm_eps)
+    x = x + (y * g) @ wt["wo"].astype(dt)
+    # channel mix
+    xx2 = state["last_cmix"][:, None, :].astype(x.dtype)
+    new_last_cmix = x[:, 0]
+    x = x + channel_mix_apply(cfg, ctx, w["cmix"], x, xx2)
+    return x, {"wkv": wkv, "last_tmix": xt, "last_cmix": new_last_cmix}
+
+
+# --- stacked -------------------------------------------------------------------------
+
+
+def stack_specs(cfg: ModelConfig) -> Dict:
+    return {"layers": P.stack_tree(cfg.num_layers, layer_specs(cfg))}
+
+
+def state_specs(cfg: ModelConfig, batch: int) -> Dict:
+    H, K = _num_heads(cfg), cfg.wkv_head_dim
+    per_layer = {
+        "wkv": P.dense((batch, H, K, K), ("batch", "heads", None, None),
+                       init="zeros", dtype="float32"),
+        "last_tmix": P.dense((batch, cfg.d_model), ("batch", "embed"),
+                             init="zeros", dtype="bfloat16"),
+        "last_cmix": P.dense((batch, cfg.d_model), ("batch", "embed"),
+                             init="zeros", dtype="bfloat16"),
+    }
+    return P.stack_tree(cfg.num_layers, per_layer)
+
+
+def stack_apply(cfg, run, ctx, w, x, *, chunk):
+    from repro.models.scan_utils import grouped_scan
+
+    def body(x, wl):
+        return layer_apply(cfg, run, ctx, wl, x, chunk=chunk), None
+
+    x, _ = grouped_scan(body, x, w["layers"], cfg.num_layers, run.scan_group,
+                        run.remat == "block")
+    return x, jnp.float32(0.0)
+
+
+def stack_prefill(cfg, run, ctx, w, x, *, chunk):
+    def body(x, wl):
+        return layer_prefill(cfg, run, ctx, wl, x, chunk=chunk)
+
+    x, states = jax.lax.scan(body, x, w["layers"])
+    return x, states
+
+
+def stack_decode(cfg, run, ctx, w, state, x):
+    def body(x, inp):
+        wl, sl = inp
+        return layer_decode(cfg, run, ctx, wl, x, sl)
+
+    x, states = jax.lax.scan(body, x, (w["layers"], state))
+    return x, states

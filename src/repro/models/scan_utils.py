@@ -1,0 +1,33 @@
+"""Grouped scan-over-layers with two-level rematerialization.
+
+Flat scan + per-layer remat stores one residual-stream slice per layer
+(O(L) activation memory). Grouping into sqrt(L)-ish chunks with checkpoints
+at both levels stores O(L/G + G) slices — the standard deep-stack memory
+policy (selected per arch via RunConfig.scan_group).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def grouped_scan(body, carry, xs_tree, n: int, group: int, remat: bool):
+    """scan(body) over leading axis n, optionally in groups of ``group``.
+
+    body: (carry, x_slice) -> (carry, y_slice | None)
+    """
+    if group <= 1 or n % group != 0:
+        f = jax.checkpoint(body) if remat else body
+        return jax.lax.scan(f, carry, xs_tree)
+    n_outer = n // group
+    xs2 = jax.tree.map(lambda a: a.reshape((n_outer, group) + a.shape[1:]), xs_tree)
+    inner = jax.checkpoint(body) if remat else body
+
+    def outer(c, xg):
+        return jax.lax.scan(inner, c, xg)
+
+    outer_f = jax.checkpoint(outer) if remat else outer
+    carry, ys = jax.lax.scan(outer_f, carry, xs2)
+    if ys is not None:
+        ys = jax.tree.map(lambda a: a.reshape((n,) + a.shape[2:]), ys)
+    return carry, ys

@@ -1,0 +1,264 @@
+"""Decoder-only transformer stacks (dense / MoE / VLM families).
+
+All stacks scan over layers with stacked parameters (compile-time O(1) in
+depth); the VLM family scans over super-blocks of ``cross_attn_every`` layers
+([p-1 self layers, 1 gated cross-attn layer] x groups, llama-3.2 style).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.distributed.sharding import ShardingCtx
+from repro.models import params as P
+from repro.models import attention as A
+from repro.models import moe as M
+from repro.models.common import matmul, mlp_apply, mlp_specs, rms_norm, rms_norm_specs
+
+
+# --- single blocks ---------------------------------------------------------------
+
+
+def block_specs(cfg: ModelConfig, *, moe: bool) -> Dict:
+    s = {
+        "ln1": rms_norm_specs(cfg.d_model),
+        "attn": A.attn_specs(cfg),
+        "ln2": rms_norm_specs(cfg.d_model),
+    }
+    if moe:
+        s["moe"] = M.moe_specs(cfg)
+    else:
+        s["mlp"] = mlp_specs(cfg)
+    return s
+
+
+def block_apply(cfg: ModelConfig, run: RunConfig, ctx: ShardingCtx, w, x, positions,
+                *, q_chunk: int = 1024):
+    B, S, _ = x.shape
+    h = rms_norm(x, w["ln1"], cfg.norm_eps)
+    q = A.project_q(cfg, w["attn"], h, positions, ctx)
+    k, v = A.project_kv(cfg, w["attn"], h, positions, ctx)
+    o = A.attention_auto(q, k, v, causal=cfg.causal, window=cfg.sliding_window,
+                         softcap=cfg.attn_logit_softcap, q_chunk=q_chunk, ctx=ctx)
+    o = matmul(o.reshape(B, S, cfg.q_dim), w["attn"]["wo"])
+    x = x + ctx.constrain(o, ("batch", "seq", "embed"))
+    h2 = rms_norm(x, w["ln2"], cfg.norm_eps)
+    if "moe" in w:
+        y, aux = M.moe_apply(cfg, ctx, w["moe"], h2, impl=run.moe_impl)
+    else:
+        y, aux = mlp_apply(w["mlp"], h2, ctx, cfg.act), jnp.float32(0.0)
+    return x + y, aux
+
+
+def block_decode(cfg: ModelConfig, run: RunConfig, ctx: ShardingCtx, w, x, ck, cv,
+                 pos, *, use_flash: bool = False):
+    """One-token decode through one block. x: (B,1,d); ck/cv: (B,Sc,Hkv,D)."""
+    B = x.shape[0]
+    posv = jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32)
+    h = rms_norm(x, w["ln1"], cfg.norm_eps)
+    q = A.project_q(cfg, w["attn"], h, posv, ctx)
+    k, v = A.project_kv(cfg, w["attn"], h, posv, ctx)
+    ck, cv = A.cache_update(ck, cv, k, v, pos, window=cfg.sliding_window)
+    if use_flash and ctx.mesh is not None:
+        o = A.flash_decode(q, ck, cv, pos, ctx.mesh, softcap=cfg.attn_logit_softcap,
+                           window=cfg.sliding_window)
+    else:
+        o = A.decode_attention(q, ck, cv, pos, window=cfg.sliding_window,
+                               softcap=cfg.attn_logit_softcap)
+    o = matmul(o.reshape(B, 1, cfg.q_dim), w["attn"]["wo"])
+    x = x + o
+    h2 = rms_norm(x, w["ln2"], cfg.norm_eps)
+    if "moe" in w:
+        y, _ = M.moe_apply(cfg, ctx, w["moe"], h2, impl=run.moe_impl)
+    else:
+        y = mlp_apply(w["mlp"], h2, ctx, cfg.act)
+    return x + y, ck, cv
+
+
+def block_prefill(cfg, run, ctx, w, x, positions, *, q_chunk=1024):
+    """Like block_apply but also returns this layer's (k, v) for the cache."""
+    B, S, _ = x.shape
+    h = rms_norm(x, w["ln1"], cfg.norm_eps)
+    q = A.project_q(cfg, w["attn"], h, positions, ctx)
+    k, v = A.project_kv(cfg, w["attn"], h, positions, ctx)
+    o = A.attention_auto(q, k, v, causal=cfg.causal, window=cfg.sliding_window,
+                         softcap=cfg.attn_logit_softcap, q_chunk=q_chunk, ctx=ctx)
+    o = matmul(o.reshape(B, S, cfg.q_dim), w["attn"]["wo"])
+    x = x + o
+    h2 = rms_norm(x, w["ln2"], cfg.norm_eps)
+    if "moe" in w:
+        y, _ = M.moe_apply(cfg, ctx, w["moe"], h2, impl=run.moe_impl)
+    else:
+        y = mlp_apply(w["mlp"], h2, ctx, cfg.act)
+    return x + y, k, v
+
+
+# --- cross-attention block (VLM) ---------------------------------------------------
+
+
+def cross_block_specs(cfg: ModelConfig) -> Dict:
+    return {
+        "ln1": rms_norm_specs(cfg.d_model),
+        "xattn": A.attn_specs(cfg, cross=True),
+        "gate_attn": P.dense((), (), init="zeros"),
+        "ln2": rms_norm_specs(cfg.d_model),
+        "mlp": mlp_specs(cfg),
+        "gate_mlp": P.dense((), (), init="zeros"),
+    }
+
+
+def cross_block_apply(cfg, ctx, w, x, img):
+    h = rms_norm(x, w["ln1"], cfg.norm_eps)
+    o = A.cross_attention(cfg, w["xattn"], h, img, ctx)
+    x = x + jnp.tanh(w["gate_attn"]).astype(x.dtype) * o
+    h2 = rms_norm(x, w["ln2"], cfg.norm_eps)
+    x = x + jnp.tanh(w["gate_mlp"]).astype(x.dtype) * mlp_apply(w["mlp"], h2, ctx, cfg.act)
+    return x
+
+
+def cross_block_decode(cfg, ctx, w, x, img_k, img_v):
+    h = rms_norm(x, w["ln1"], cfg.norm_eps)
+    o = A.cross_decode(cfg, w["xattn"], h, img_k, img_v)
+    x = x + jnp.tanh(w["gate_attn"]).astype(x.dtype) * o
+    h2 = rms_norm(x, w["ln2"], cfg.norm_eps)
+    x = x + jnp.tanh(w["gate_mlp"]).astype(x.dtype) * mlp_apply(w["mlp"], h2, ctx, cfg.act)
+    return x
+
+
+# --- stacks -----------------------------------------------------------------------
+
+
+def _vlm_groups(cfg: ModelConfig) -> Tuple[int, int]:
+    p = cfg.cross_attn_every
+    assert p > 1 and cfg.num_layers % p == 0, (cfg.num_layers, p)
+    return cfg.num_layers // p, p - 1  # (groups, self layers per group)
+
+
+def stack_specs(cfg: ModelConfig) -> Dict:
+    moe = cfg.is_moe
+    if cfg.family == "vlm":
+        g, s = _vlm_groups(cfg)
+        self_specs = P.stack_tree(s, block_specs(cfg, moe=False))
+        return {
+            "self": P.map_specs(lambda sp: P.stacked(g, sp), self_specs),
+            "cross": P.stack_tree(g, cross_block_specs(cfg)),
+        }
+    return {"layers": P.stack_tree(cfg.num_layers, block_specs(cfg, moe=moe))}
+
+
+def stack_apply(cfg: ModelConfig, run: RunConfig, ctx: ShardingCtx, w, x,
+                positions, *, img: Optional[jax.Array] = None, q_chunk=1024):
+    """Full-sequence forward. Returns (x, aux_loss)."""
+    from repro.models.scan_utils import grouped_scan
+
+    remat = run.remat == "block"
+
+    def one_layer(carry, wl):
+        x, aux = carry
+        x, a = block_apply(cfg, run, ctx, wl, x, positions, q_chunk=q_chunk)
+        return (x, aux + a.astype(jnp.float32)), None
+
+    if cfg.family == "vlm":
+        one_layer_ck = jax.checkpoint(one_layer) if remat else one_layer
+
+        def one_group(carry, wg):
+            (x, aux) = carry
+            (x, aux), _ = jax.lax.scan(one_layer_ck, (x, aux), wg["self"])
+            x = cross_block_apply(cfg, ctx, wg["cross"], x, img)
+            return (x, aux), None
+
+        if remat:
+            one_group = jax.checkpoint(one_group)
+        (x, aux), _ = jax.lax.scan(one_group, (x, jnp.float32(0.0)), w)
+        return x, aux
+
+    (x, aux), _ = grouped_scan(one_layer, (x, jnp.float32(0.0)), w["layers"],
+                               cfg.num_layers, run.scan_group, remat)
+    return x, aux
+
+
+def stack_cache_specs(cfg: ModelConfig, batch: int, cache_len: int) -> Dict:
+    base = A.cache_specs(cfg, batch, A.effective_cache_len(cfg, cache_len))
+    if cfg.family == "vlm":
+        g, s = _vlm_groups(cfg)
+        self_cache = P.map_specs(lambda sp: P.stacked(s, sp), base)
+        self_cache = P.map_specs(lambda sp: P.stacked(g, sp), self_cache)
+        img_kv = (batch, cfg.num_image_tokens, cfg.num_kv_heads, cfg.head_dim)
+        cross = {
+            "img_k": P.dense(img_kv, ("batch", "img_seq", "cache_heads", "head_dim"),
+                             init="zeros", dtype="bfloat16"),
+            "img_v": P.dense(img_kv, ("batch", "img_seq", "cache_heads", "head_dim"),
+                             init="zeros", dtype="bfloat16"),
+        }
+        return {"self": self_cache, "cross": P.stack_tree(g, cross)}
+    return P.stack_tree(cfg.num_layers, base)
+
+
+def stack_decode(cfg: ModelConfig, run: RunConfig, ctx: ShardingCtx, w, cache, x,
+                 pos, *, use_flash=False):
+    """One-token decode. Returns (x, new_cache)."""
+
+    def one_layer(x, inp):
+        wl, ck, cv = inp
+        x, ck, cv = block_decode(cfg, run, ctx, wl, x, ck, cv, pos, use_flash=use_flash)
+        return x, (ck, cv)
+
+    if cfg.family == "vlm":
+        def one_group(x, inp):
+            wg, cg, cross_kv = inp
+
+            def inner(x, i2):
+                wl, ck, cv = i2
+                x, ck, cv = block_decode(cfg, run, ctx, wl, x, ck, cv, pos,
+                                         use_flash=use_flash)
+                return x, (ck, cv)
+
+            x, (ks, vs) = jax.lax.scan(inner, x, (wg["self"], cg["k"], cg["v"]))
+            x = cross_block_decode(cfg, ctx, wg["cross"], x,
+                                   cross_kv["img_k"], cross_kv["img_v"])
+            return x, {"k": ks, "v": vs}
+
+        x, new_self = jax.lax.scan(one_group, x, (w, cache["self"], cache["cross"]))
+        return x, {"self": new_self, "cross": cache["cross"]}
+
+    x, (ks, vs) = jax.lax.scan(one_layer, x, (w["layers"], cache["k"], cache["v"]))
+    return x, {"k": ks, "v": vs}
+
+
+def stack_prefill(cfg: ModelConfig, run: RunConfig, ctx: ShardingCtx, w, x,
+                  positions, *, img=None, q_chunk=1024):
+    """Full-sequence forward that also builds the KV cache. Returns (x, cache)."""
+    eff = A.effective_cache_len(cfg, x.shape[1])
+
+    def trim(k):
+        if cfg.sliding_window > 0:
+            return A.ring_layout(k, cfg.sliding_window)
+        return k[:, -eff:] if eff < k.shape[1] else k
+
+    def one_layer(x, wl):
+        x, k, v = block_prefill(cfg, run, ctx, wl, x, positions, q_chunk=q_chunk)
+        return x, (trim(k).astype(jnp.bfloat16), trim(v).astype(jnp.bfloat16))
+
+    if cfg.family == "vlm":
+        def one_group(x, wg):
+            x, kv = jax.lax.scan(one_layer, x, wg["self"])
+            ks, vs = kv
+            x = cross_block_apply(cfg, ctx, wg["cross"], x, img)
+            dt = x.dtype
+            B, T = img.shape[:2]
+            ik = (img @ wg["cross"]["xattn"]["wk"].astype(dt)).reshape(
+                B, T, cfg.num_kv_heads, cfg.head_dim)
+            iv = (img @ wg["cross"]["xattn"]["wv"].astype(dt)).reshape(
+                B, T, cfg.num_kv_heads, cfg.head_dim)
+            return x, ({"k": ks, "v": vs},
+                       {"img_k": ik.astype(jnp.bfloat16), "img_v": iv.astype(jnp.bfloat16)})
+
+        x, (self_c, cross_c) = jax.lax.scan(one_group, x, w)
+        return x, {"self": self_c, "cross": cross_c}
+
+    x, (ks, vs) = jax.lax.scan(one_layer, x, w["layers"])
+    return x, {"k": ks, "v": vs}

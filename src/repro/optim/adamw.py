@@ -1,0 +1,141 @@
+"""AdamW with dtype-configurable moments and Adafactor-style factored second
+moment (needed to fit 405B-class optimizer state on 16 GB chips).
+
+State layout mirrors the parameter pytree (so ZeRO-1 sharding falls out of
+the same logical-axis rules), declared via TensorSpec like everything else.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import RunConfig
+from repro.models import params as P
+
+
+class OptState(NamedTuple):
+    step: Any  # scalar int32
+    mu: Any  # first moment (param-shaped tree)
+    nu: Any  # second moment (param-shaped, or factored dict per leaf)
+    master: Any = None  # optional fp32 master copy (RunConfig.master_weights)
+
+
+def _factorable(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] >= 8 and shape[-2] >= 8
+
+
+def _nu_spec(spec: P.TensorSpec, run: RunConfig):
+    if run.factored_second_moment and _factorable(spec.shape):
+        row = P.TensorSpec(spec.shape[:-1], spec.logical[:-1], init="zeros",
+                           dtype="float32")
+        col = P.TensorSpec(spec.shape[:-2] + spec.shape[-1:],
+                           spec.logical[:-2] + spec.logical[-1:], init="zeros",
+                           dtype="float32")
+        return {"_factored_row": row, "_factored_col": col}
+    return P.TensorSpec(spec.shape, spec.logical, init="zeros",
+                        dtype=run.moment_dtype)
+
+
+def adamw_init_specs(param_specs, run: RunConfig) -> OptState:
+    """Declarative optimizer-state specs mirroring the param specs."""
+    mu = P.map_specs(
+        lambda s: P.TensorSpec(s.shape, s.logical, init="zeros",
+                               dtype=run.moment_dtype), param_specs)
+    nu = P.map_specs(lambda s: _nu_spec(s, run), param_specs)
+    step = P.TensorSpec((), (), init="zeros", dtype="int32")
+    master = None
+    if run.master_weights:
+        master = P.map_specs(
+            lambda s: P.TensorSpec(s.shape, s.logical, init=s.init,
+                                   scale=s.scale, dtype="float32"), param_specs)
+    return OptState(step=step, mu=mu, nu=nu, master=master)
+
+
+def cosine_schedule(step, base_lr: float, warmup: int = 200, total: int = 10_000):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / max(warmup, 1), 1.0)
+    progress = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    return base_lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * progress))
+
+
+B1, B2, EPS = 0.9, 0.95, 1e-8
+
+
+def _is_factored(nu_leaf) -> bool:
+    return isinstance(nu_leaf, dict) and "_factored_row" in nu_leaf
+
+
+def _update_leaf(g, p, mu, nu, lr, wd, step):
+    g32 = g.astype(jnp.float32)
+    mu_new = (B1 * mu.astype(jnp.float32) + (1 - B1) * g32)
+    if _is_factored(nu):
+        row = nu["_factored_row"].astype(jnp.float32)
+        col = nu["_factored_col"].astype(jnp.float32)
+        g2 = jnp.square(g32) + 1e-30
+        row_new = B2 * row + (1 - B2) * jnp.mean(g2, axis=-1)
+        col_new = B2 * col + (1 - B2) * jnp.mean(g2, axis=-2)
+        r = row_new / jnp.maximum(jnp.mean(row_new, axis=-1, keepdims=True), 1e-30)
+        v_hat = r[..., None] * col_new[..., None, :]
+        nu_new = {"_factored_row": row_new, "_factored_col": col_new}
+    else:
+        nu32 = nu.astype(jnp.float32)
+        nu_new_full = B2 * nu32 + (1 - B2) * jnp.square(g32)
+        v_hat = nu_new_full
+        nu_new = nu_new_full.astype(nu.dtype)
+    # bias correction
+    t = step.astype(jnp.float32) + 1.0
+    mu_hat = mu_new / (1 - B1 ** t)
+    v_corr = v_hat / (1 - B2 ** t)
+    upd = mu_hat / (jnp.sqrt(v_corr) + EPS)
+    p32 = p.astype(jnp.float32)
+    if p.ndim >= 2:  # decoupled weight decay on matrices only
+        upd = upd + wd * p32
+    p_new = (p32 - lr * upd).astype(p.dtype)
+    return p_new, mu_new.astype(mu.dtype), nu_new
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def adamw_update(grads, params, state: OptState, run: RunConfig):
+    """One AdamW step with global-norm clipping. Returns (params, state, stats)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, run.grad_clip / jnp.maximum(gnorm, 1e-12)) \
+        if run.grad_clip > 0 else jnp.float32(1.0)
+    grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+    lr = cosine_schedule(state.step, run.learning_rate)
+
+    is_leaf = lambda x: _is_factored(x)
+    flat_g, treedef = jax.tree.flatten(grads)
+    # master_weights: the optimizer math runs on the fp32 master; the bf16
+    # params are re-derived by casting (mixed-precision with master-in-optstate).
+    src = state.master if state.master is not None else params
+    flat_p = jax.tree.flatten(src)[0]
+    flat_mu = jax.tree.flatten(state.mu)[0]
+    flat_nu = jax.tree.flatten(state.nu, is_leaf=is_leaf)[0]
+    out_p, out_mu, out_nu = [], [], []
+    for g, p, mu, nu in zip(flat_g, flat_p, flat_mu, flat_nu):
+        pn, mn, nn = _update_leaf(g, p, mu, nu, lr, run.weight_decay, state.step)
+        out_p.append(pn)
+        out_mu.append(mn)
+        out_nu.append(nn)
+    new_src = jax.tree.unflatten(treedef, out_p)
+    if state.master is not None:
+        master = new_src
+        new_params = jax.tree.map(lambda m, p: m.astype(p.dtype), master, params)
+    else:
+        master = None
+        new_params = new_src
+    mu = jax.tree.unflatten(treedef, out_mu)
+    nu_def = jax.tree.structure(state.nu, is_leaf=is_leaf)
+    nu = jax.tree.unflatten(nu_def, out_nu)
+    stats = {"grad_norm": gnorm, "lr": lr}
+    return new_params, OptState(step=state.step + 1, mu=mu, nu=nu,
+                                master=master), stats

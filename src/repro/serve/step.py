@@ -1,0 +1,28 @@
+"""Serving programs: prefill and single-token decode (greedy head)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.distributed.sharding import ShardingCtx
+from repro.models import lm
+
+
+def make_prefill_step(cfg: ModelConfig, run: RunConfig, ctx: ShardingCtx):
+    def prefill_step(params, batch):
+        logits, cache = lm.prefill_fn(cfg, run, ctx, params, batch)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, run: RunConfig, ctx: ShardingCtx):
+    def decode_step(params, cache, batch):
+        logits, cache = lm.decode_fn(cfg, run, ctx, params, cache, batch)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    return decode_step

@@ -1,0 +1,96 @@
+"""Training step: grad accumulation (microbatch scan), clipping, AdamW.
+
+``make_train_step`` closes over configs and the sharding context; the
+returned function is pure and jit-able with in/out shardings supplied by the
+launcher (ShapeDtypeStruct shardings in, PartitionSpec trees out).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.distributed.sharding import ShardingCtx
+from repro.models import lm
+from repro.optim.adamw import OptState, adamw_update
+
+
+def data_parallel_size(ctx: ShardingCtx) -> int:
+    if ctx.mesh is None:
+        return 1
+    sizes = dict(zip(ctx.mesh.axis_names, ctx.mesh.devices.shape))
+    dp = sizes.get("data", 1)
+    if "pod" in sizes:
+        dp *= sizes["pod"]
+    return dp
+
+
+def num_accum_steps(run: RunConfig, ctx: ShardingCtx, global_batch: int) -> int:
+    if run.microbatch_per_data_shard <= 0:
+        return 1
+    dp = data_parallel_size(ctx)
+    micro_global = run.microbatch_per_data_shard * dp
+    if global_batch % micro_global != 0:
+        return 1
+    return max(1, global_batch // micro_global)
+
+
+def make_train_step(cfg: ModelConfig, run: RunConfig, ctx: ShardingCtx,
+                    global_batch: int):
+    n_accum = num_accum_steps(run, ctx, global_batch)
+    accum_dt = jnp.dtype(run.grad_accum_dtype)
+    compute_dt = jnp.dtype(run.compute_dtype)
+
+    def loss_of(params, batch):
+        return lm.loss_fn(cfg, run, ctx, params, batch)
+
+    grad_fn = jax.value_and_grad(loss_of, has_aux=True)
+
+    def _cast_params(params):
+        # Mixed precision: one cast of the fp32 master BEFORE the microbatch
+        # scan, so FSDP all-gathers inside the loop move bf16, not fp32, and
+        # the cast itself is hoisted out of the accumulation loop.
+        return jax.tree.map(
+            lambda p: p.astype(compute_dt)
+            if jnp.issubdtype(p.dtype, jnp.floating) and p.dtype != compute_dt
+            else p, params)
+
+    def train_step(params, opt_state: OptState, batch: Dict):
+        params_c = _cast_params(params)
+        if n_accum == 1:
+            (loss, metrics), grads = grad_fn(params_c, batch)
+        else:
+            micro = {k: v.reshape((n_accum, v.shape[0] // n_accum) + v.shape[1:])
+                     for k, v in batch.items() if v.ndim >= 1}
+
+            def body(carry, mb):
+                g_acc, loss_acc = carry
+                (loss, _), g = grad_fn(params_c, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(accum_dt), g_acc, g)
+                return (g_acc, loss_acc + loss.astype(jnp.float32)), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dt), params)
+            (grads, loss_sum), _ = jax.lax.scan(body, (g0, jnp.float32(0.0)), micro)
+            grads = jax.tree.map(lambda g: (g / n_accum), grads)
+            loss = loss_sum / n_accum
+            metrics = {"loss": loss}
+        params, opt_state, stats = adamw_update(grads, params, opt_state, run)
+        metrics = dict(metrics)
+        metrics.update(stats)
+        metrics = {k: v.astype(jnp.float32) for k, v in metrics.items()}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, run: RunConfig, ctx: ShardingCtx):
+    def eval_step(params, batch):
+        loss, metrics = lm.loss_fn(cfg, run, ctx, params, batch)
+        return {k: v.astype(jnp.float32) for k, v in metrics.items()}
+
+    return eval_step

@@ -1,0 +1,14 @@
+import os
+import sys
+
+# Tests run on the single real CPU device (the dry-run's 512 fake devices are
+# only set inside repro.launch.dryrun subprocesses, never here).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))  # benchmarks/
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,197 @@
+"""The Bento safety contracts: capabilities are unforgeable, borrows are
+mutable-xor-shared, buffers cannot leak silently, the op gate quiesces."""
+
+import pickle
+import threading
+import time
+
+import hypothesis as hp
+import hypothesis.strategies as st
+import pytest
+
+from repro.core.capability import (CapabilityError, SuperBlockCap,
+                                   mint_metrics, mint_superblock)
+from repro.core.ownership import Borrow, BorrowError, Owned
+from repro.core.registry import OpGate
+from repro.core.services import kernel_binding
+from repro.fs.blockdev import MemBlockDevice
+from repro.fs.buffercache import BufferCache, BufferLeak
+
+
+class _Sb:
+    block_size, n_blocks, device_id = 4096, 64, "t"
+
+
+def test_capability_cannot_be_forged():
+    with pytest.raises(CapabilityError):
+        SuperBlockCap(_Sb())
+    cap = mint_superblock(_Sb())
+    assert cap.block_size == 4096
+
+
+def test_capability_cannot_be_pickled_or_copied():
+    import copy
+    cap = mint_superblock(_Sb())
+    with pytest.raises(CapabilityError):
+        pickle.dumps(cap)
+    with pytest.raises(CapabilityError):
+        copy.deepcopy(cap)
+
+
+def test_capability_revocation():
+    cap = mint_superblock(_Sb())
+    cap._revoke()
+    with pytest.raises(CapabilityError):
+        _ = cap.n_blocks
+
+
+def test_services_require_capability():
+    ks = kernel_binding(MemBlockDevice(64))
+    with pytest.raises(CapabilityError):
+        ks.sb_bread(object(), 0)  # a forged "superblock"
+    bh = ks.sb_bread(ks.superblock(), 0)
+    bh.brelse()
+
+
+# --- ownership / borrows -------------------------------------------------------
+
+
+def test_borrow_rules():
+    o = Owned([1, 2, 3], name="obj")
+    b1 = o.borrow()
+    b2 = o.borrow()  # many shared borrows OK
+    with pytest.raises(BorrowError):
+        o.borrow_mut()  # not while shared
+    b1.end()
+    b2.end()
+    with o.borrow_mut() as m:
+        m.set([4])
+        with pytest.raises(BorrowError):
+            o.borrow()  # not while mutably lent
+    assert o.take() == [4]
+
+
+def test_use_after_return_raises():
+    o = Owned("x")
+    b = o.borrow()
+    b.end()
+    with pytest.raises(BorrowError):
+        b.get()
+
+
+def test_take_while_lent_raises():
+    o = Owned("x")
+    b = o.borrow()
+    with pytest.raises(BorrowError):
+        o.take()  # paper §3.2.1: upgrade must wait for returns
+    b.end()
+    assert o.take() == "x"
+
+
+@hp.given(st.lists(st.sampled_from(["s", "m", "end"]), max_size=40))
+@hp.settings(max_examples=60, deadline=None)
+def test_borrow_state_machine(script):
+    """Fuzz: Owned must behave exactly like the reference borrow model
+    (shared* XOR mutable)."""
+    o = Owned(0)
+    live = []  # list of (kind, borrow)
+    for action in script:
+        kinds = [k for k, _ in live]
+        if action == "s":
+            if "mu" in kinds:
+                with pytest.raises(BorrowError):
+                    o.borrow()
+            else:
+                live.append(("sh", o.borrow()))
+        elif action == "m":
+            if kinds:
+                with pytest.raises(BorrowError):
+                    o.borrow_mut()
+            else:
+                live.append(("mu", o.borrow_mut()))
+        elif action == "end" and live:
+            _, b = live.pop()
+            b.end()
+    assert o.is_lent == bool(live)
+
+
+# --- buffer cache drop semantics --------------------------------------------------
+
+
+def test_bufferhead_use_after_brelse():
+    cache = BufferCache(MemBlockDevice(16))
+    bh = cache.bread(1)
+    bh.brelse()
+    with pytest.raises(BufferLeak):
+        bh.data()
+
+
+def test_buffer_leak_detected_at_teardown():
+    cache = BufferCache(MemBlockDevice(16))
+    bh = cache.bread(2)
+    with pytest.raises(BufferLeak):
+        cache.assert_no_leaks()
+    bh.brelse()
+    cache.assert_no_leaks()
+
+
+def test_drop_releases():
+    cache = BufferCache(MemBlockDevice(16))
+    bh = cache.bread(3)
+    del bh  # drop -> brelse (paper §4.7)
+    cache.assert_no_leaks()
+
+
+# --- op gate (quiesce) ---------------------------------------------------------------
+
+
+def test_opgate_quiesces_inflight_ops():
+    gate = OpGate()
+    entered = threading.Event()
+    release = threading.Event()
+    done = threading.Event()
+
+    def op():
+        gate.enter()
+        entered.set()
+        release.wait(5)
+        gate.exit()
+        done.set()
+
+    t = threading.Thread(target=op, daemon=True)
+    t.start()
+    entered.wait(5)
+    frozen = threading.Event()
+
+    def freezer():
+        gate.freeze()
+        frozen.set()
+
+    f = threading.Thread(target=freezer, daemon=True)
+    f.start()
+    time.sleep(0.05)
+    assert not frozen.is_set()  # freeze must wait for the in-flight op
+    release.set()
+    assert done.wait(5)
+    assert frozen.wait(5)
+    # new ops blocked while frozen
+    blocked = threading.Event()
+
+    def late_op():
+        gate.enter()
+        blocked.set()
+        gate.exit()
+
+    t2 = threading.Thread(target=late_op, daemon=True)
+    t2.start()
+    time.sleep(0.05)
+    assert not blocked.is_set()
+    gate.thaw()
+    assert blocked.wait(5)
+
+
+def test_metrics_capability_append_only():
+    sink = []
+    cap = mint_metrics(sink)
+    cap.emit("loss", 1.5, step=3)
+    assert sink == [("loss", 1.5, 3)]

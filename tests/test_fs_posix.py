@@ -1,0 +1,114 @@
+"""POSIX semantics over every mount binding (bento / vfs / fuse / ext4like)."""
+
+import numpy as np
+import pytest
+
+from repro.core.interface import Errno, FsError
+from repro.fs.mounts import ALL_KINDS, make_mount
+
+pytestmark = pytest.mark.parametrize("kind", ALL_KINDS)
+
+
+@pytest.fixture
+def mnt(kind):
+    mf = make_mount(kind, n_blocks=8192)
+    yield mf
+    mf.close()
+
+
+def test_basic_files(mnt, kind):
+    v = mnt.view
+    v.write_file("/x.txt", b"hello")
+    assert v.read_file("/x.txt") == b"hello"
+    v.write_file("/x.txt", b"HE", off=0, create=False)
+    assert v.read_file("/x.txt") == b"HEllo"
+    v.append("/x.txt", b"!")
+    assert v.read_file("/x.txt") == b"HEllo!"
+    assert v.stat("/x.txt").size == 6
+
+
+def test_dirs_and_errors(mnt, kind):
+    v = mnt.view
+    v.makedirs("/a/b/c")
+    assert v.listdir("/a/b") == ["c"]
+    with pytest.raises(FsError) as e:
+        v.read_file("/a/nope")
+    assert e.value.errno == Errno.ENOENT
+    with pytest.raises(FsError) as e:
+        v.mkdir("/a/b")
+    assert e.value.errno == Errno.EEXIST
+    with pytest.raises(FsError) as e:
+        v.rmdir("/a/b")  # not empty
+    assert e.value.errno == Errno.ENOTEMPTY
+    with pytest.raises(FsError) as e:
+        v.unlink("/a/b")  # it's a dir
+    assert e.value.errno == Errno.EISDIR
+    v.rmdir("/a/b/c")
+    v.rmdir("/a/b")
+    assert v.listdir("/a") == []
+
+
+def test_rename(mnt, kind):
+    v = mnt.view
+    v.makedirs("/d1")
+    v.makedirs("/d2")
+    v.write_file("/d1/f", b"payload")
+    v.rename("/d1/f", "/d2/g")
+    assert not v.exists("/d1/f")
+    assert v.read_file("/d2/g") == b"payload"
+
+
+def test_sparse_and_offsets(mnt, kind):
+    v = mnt.view
+    v.create("/sparse")
+    v.write_file("/sparse", b"end", off=100_000, create=False)
+    data = v.read_file("/sparse")
+    assert len(data) == 100_003
+    assert data[:10] == bytes(10)  # hole reads as zeros
+    assert data[-3:] == b"end"
+
+
+def test_large_file_double_indirect(mnt, kind):
+    """> NDIRECT + NINDIRECT blocks exercises the double-indirect path
+    (the paper's 4 GB extension, scaled to this device)."""
+    if kind == "fuse":
+        pytest.skip("slow over the bridge; covered by other mounts")
+    v = mnt.view
+    rng = np.random.default_rng(5)
+    blob = rng.integers(0, 256, (12 + 1024 + 40) * 4096, dtype=np.uint8).tobytes()
+    v.write_file("/big.bin", blob)
+    v.fsync("/big.bin")
+    got = v.read_file("/big.bin")
+    assert got == blob
+    assert v.stat("/big.bin").size == len(blob)
+
+
+def test_unlink_frees_space(mnt, kind):
+    v = mnt.view
+    before = v.statfs()["free_blocks_est"]
+    v.write_file("/tmpfile", b"z" * (64 * 4096))
+    mid = v.statfs()["free_blocks_est"]
+    assert mid < before
+    v.unlink("/tmpfile")
+    after = v.statfs()["free_blocks_est"]
+    assert after >= before - 2  # inode/dir metadata may keep a block
+
+
+def test_many_files_readdir(mnt, kind):
+    v = mnt.view
+    v.makedirs("/many")
+    n = 20 if kind == "fuse" else 150
+    for i in range(n):
+        v.write_file(f"/many/f{i:04d}", b"x")
+    names = v.listdir("/many")
+    assert len(names) == n
+    assert sorted(names) == [f"f{i:04d}" for i in range(n)]
+
+
+def test_truncate(mnt, kind):
+    v = mnt.view
+    v.write_file("/t", b"0123456789")
+    v.truncate("/t", 4)
+    assert v.read_file("/t") == b"0123"
+    v.truncate("/t", 0)
+    assert v.read_file("/t") == b""

@@ -1,0 +1,42 @@
+"""CLI launcher smoke tests (the public entry points don't rot)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def _run(args, timeout=420):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    return subprocess.run([sys.executable, "-m"] + args, env=env,
+                          capture_output=True, text=True, timeout=timeout)
+
+
+@pytest.mark.slow
+def test_train_cli():
+    out = _run(["repro.launch.train", "--arch", "smollm-135m", "--smoke",
+                "--steps", "5", "--batch", "2", "--seq", "32"])
+    assert out.returncode == 0, out.stderr[-1500:]
+    assert "loss" in out.stdout and "tok/s" in out.stdout
+
+
+@pytest.mark.slow
+def test_serve_cli():
+    out = _run(["repro.launch.serve", "--arch", "zamba2-7b", "--smoke",
+                "--batch", "1", "--prompt-len", "16", "--gen", "4"])
+    assert out.returncode == 0, out.stderr[-1500:]
+    assert "decode" in out.stdout
+
+
+@pytest.mark.slow
+def test_dryrun_cli_skip_cell():
+    """A skipped cell must exit 0 with a SKIP record."""
+    out = _run(["repro.launch.dryrun", "--arch", "smollm-135m",
+                "--shape", "long_500k", "--mesh", "single",
+                "--out", "/tmp/dryrun_skip_test"])
+    assert out.returncode == 0, out.stderr[-1500:]
+    assert "SKIP" in out.stdout

@@ -1,0 +1,136 @@
+"""Cross-path consistency: prefill+decode must reproduce teacher-forced
+forward logits for every family (the serving path equals the train path)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.distributed.sharding import ShardingCtx
+from repro.models import lm, params as P
+
+ARCHS = registry.arch_ids()
+CTX = ShardingCtx.null()
+
+
+def _full_logits(cfg, run, prm, batch):
+    """Teacher-forced logits at every position via the training backbone."""
+    from repro.models.common import logits_fn, rms_norm
+    x, _aux = lm._backbone(cfg, run, CTX, prm, batch, batch["tokens"])
+    x = rms_norm(x, prm["final_ln"], cfg.norm_eps)
+    return logits_fn(prm["embed"], x, CTX)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_matches_forward(arch):
+    b = registry.get(arch)
+    cfg, run = b.smoke, b.run
+    rng = jax.random.PRNGKey(0)
+    # fp32 compute for a tight numeric comparison
+    run = run.replace(compute_dtype="float32")
+    prm = P.materialize(lm.param_specs(cfg), rng, dtype="float32")
+    B, S_prompt, S_gen = 2, 16, 4
+    S = S_prompt + S_gen
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": toks}
+    if cfg.family == "vlm":
+        batch["image_embeds"] = 0.02 * jnp.ones(
+            (B, cfg.num_image_tokens, cfg.d_model), jnp.float32)
+    if cfg.family == "audio":
+        batch["frame_embeds"] = 0.02 * jnp.ones(
+            (B, cfg.encoder_seq, cfg.d_model), jnp.float32)
+
+    full = _full_logits(cfg, run, prm, batch)  # (B, S, V)
+
+    # prefill on the prompt, then decode the remaining tokens teacher-forced
+    pb = dict(batch)
+    pb["tokens"] = toks[:, :S_prompt]
+    logits_p, cache = lm.prefill_fn(cfg, run, CTX, prm, pb)
+    got = [logits_p]
+
+    # grow transformer caches to S (rwkv/zamba mamba states are fixed-size)
+    def pad_seq(x, by):
+        padw = [(0, 0)] * x.ndim
+        padw[-3] = (0, by)
+        return jnp.pad(x, padw)
+
+    if cfg.sliding_window == 0:
+        if cfg.family in ("dense", "moe"):
+            cache = {"k": pad_seq(cache["k"], S_gen), "v": pad_seq(cache["v"], S_gen)}
+        elif cfg.family == "vlm":
+            cache = {"self": {"k": pad_seq(cache["self"]["k"], S_gen),
+                              "v": pad_seq(cache["self"]["v"], S_gen)},
+                     "cross": cache["cross"]}
+        elif cfg.family == "audio":
+            cache = {"k": pad_seq(cache["k"], S_gen), "v": pad_seq(cache["v"], S_gen),
+                     "ck": cache["ck"], "cv": cache["cv"]}
+        elif cfg.family == "hybrid" and "attn" in cache:
+            cache = {"mamba": cache["mamba"],
+                     "attn": {"k": pad_seq(cache["attn"]["k"], S_gen),
+                              "v": pad_seq(cache["attn"]["v"], S_gen)}}
+
+    for i in range(S_gen - 1):
+        pos = jnp.int32(S_prompt + i)
+        db = {"tokens": toks[:, S_prompt + i][:, None], "pos": pos}
+        logits_d, cache = lm.decode_fn(cfg, run, CTX, prm, cache, db)
+        got.append(logits_d)
+
+    want = jnp.stack([full[:, S_prompt - 1 + i] for i in range(S_gen)], axis=1)
+    got = jnp.stack(got, axis=1)
+    err = float(jnp.max(jnp.abs(got - want)))
+    scale = float(jnp.maximum(jnp.max(jnp.abs(want)), 1.0))
+    assert err / scale < 5e-3, f"{arch}: decode/forward logits diverge ({err=})"
+
+
+@pytest.mark.parametrize("arch", ["h2o-danube-3-4b"])
+def test_swa_ring_buffer_decode(arch):
+    """SWA decode past the window must keep working (ring buffer wrap)."""
+    b = registry.get(arch)
+    cfg, run = b.smoke, b.run  # smoke window = 32
+    prm = P.materialize(lm.param_specs(cfg), jax.random.PRNGKey(0))
+    B = 1
+    S_prompt = cfg.sliding_window  # fill the window exactly
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, S_prompt), 0,
+                              cfg.vocab_size)
+    _, cache = lm.prefill_fn(cfg, run, CTX, prm, {"tokens": toks})
+    # decode 8 tokens past the window: wraps the ring
+    for i in range(8):
+        pos = jnp.int32(S_prompt + i)
+        logits, cache = lm.decode_fn(cfg, run, CTX, prm, cache,
+                                     {"tokens": jnp.ones((B, 1), jnp.int32),
+                                      "pos": pos})
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_chunked_attention_equals_dense():
+    from repro.models import attention as A
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (2, 2048, 4, 32))
+    k = jax.random.normal(ks[1], (2, 2048, 2, 32))
+    v = jax.random.normal(ks[2], (2, 2048, 2, 32))
+    dense = A.attention_dense(q, k, v, causal=True)
+    chunked = A.attention_chunked(q, k, v, causal=True, q_chunk=512)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(chunked),
+                               atol=2e-5)
+    # SWA with static kv slicing
+    dense_w = A.attention_dense(q, k, v, causal=True, window=512)
+    chunk_w = A.attention_chunked(q, k, v, causal=True, window=512, q_chunk=512)
+    np.testing.assert_allclose(np.asarray(dense_w), np.asarray(chunk_w),
+                               atol=2e-5)
+
+
+def test_flash_decode_matches_dense_on_mesh():
+    """shard_map LSE-combined decode == dense decode (1-device mesh)."""
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import attention as A
+    mesh = make_host_mesh(1, 1)
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    B, S, Hq, Hkv, D = 2, 64, 4, 2, 32
+    q = jax.random.normal(ks[0], (B, 1, Hq, D))
+    ck = jax.random.normal(ks[1], (B, S, Hkv, D))
+    cv = jax.random.normal(ks[2], (B, S, Hkv, D))
+    pos = jnp.int32(40)
+    dense = A.decode_attention(q, ck, cv, pos)
+    flash = A.flash_decode(q, ck, cv, pos, mesh)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(flash), atol=1e-5)

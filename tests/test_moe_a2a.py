@@ -1,0 +1,61 @@
+"""The shard_map expert-parallel MoE (§Perf cell B) vs the dense oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.distributed.sharding import ShardingCtx
+from repro.launch.mesh import make_host_mesh
+from repro.models import moe as M, params as P
+from repro.models.moe_a2a import moe_a2a_apply
+
+
+@pytest.mark.parametrize("arch", ["olmoe-1b-7b", "llama4-scout-17b-a16e"])
+def test_a2a_matches_dense(arch):
+    cfg = registry.get(arch).smoke
+    w = P.materialize(M.moe_specs(cfg), jax.random.PRNGKey(0))
+    mesh = make_host_mesh(1, 1)
+    ctx = ShardingCtx.for_mesh(mesh)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, cfg.d_model)) * 0.5
+    with mesh:
+        y1, a1 = M.moe_apply(cfg, ShardingCtx.null(), w, x, impl="dense")
+        y2, a2 = moe_a2a_apply(cfg, ctx, w, x)
+    np.testing.assert_allclose(np.asarray(y1, np.float32),
+                               np.asarray(y2, np.float32), atol=2e-2)
+    assert abs(float(a1) - float(a2)) < 1e-3
+
+
+def test_a2a_gradients_flow():
+    cfg = registry.get("olmoe-1b-7b").smoke
+    w = P.materialize(M.moe_specs(cfg), jax.random.PRNGKey(0))
+    mesh = make_host_mesh(1, 1)
+    ctx = ShardingCtx.for_mesh(mesh)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 32, cfg.d_model)) * 0.5
+
+    def loss(w):
+        with mesh:
+            y, aux = moe_a2a_apply(cfg, ctx, w, x)
+        return jnp.sum(y.astype(jnp.float32) ** 2) + aux
+
+    g = jax.grad(loss)(w)
+    gnorm = sum(float(jnp.sum(jnp.abs(l.astype(jnp.float32))))
+                for l in jax.tree.leaves(g))
+    assert np.isfinite(gnorm) and gnorm > 0  # grads flow through a2a + sort
+
+
+def test_a2a_capacity_drops_are_bounded():
+    """With capacity factor 1.25 and uniform routing, drops are rare; with
+    adversarially skewed routing, output degrades gracefully (no NaN)."""
+    cfg = registry.get("olmoe-1b-7b").smoke
+    w = P.materialize(M.moe_specs(cfg), jax.random.PRNGKey(0))
+    # bias the router hard toward expert 0
+    w["router"] = w["router"].at[:, 0].add(10.0)
+    mesh = make_host_mesh(1, 1)
+    ctx = ShardingCtx.for_mesh(mesh)
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 64, cfg.d_model))
+    with mesh:
+        y, aux = moe_a2a_apply(cfg, ctx, w, x)
+    assert bool(jnp.all(jnp.isfinite(y)))
+    assert float(aux) > 0  # load-balance loss fires

@@ -1,0 +1,80 @@
+"""Sharding-rule resolution (pure-function tests with a stub mesh) and
+dry-run smoke via subprocess (512 fake devices never touch this process)."""
+
+import subprocess
+import sys
+import os
+
+import pytest
+
+from repro.configs import registry
+from repro.distributed.sharding import BASELINE, RULESETS, resolve_spec
+from repro.models import lm, params as P
+
+
+class StubMesh:
+    """Looks enough like a jax Mesh for resolve_spec (pure function)."""
+
+    def __init__(self, shape, names):
+        import numpy as np
+        self.devices = np.empty(shape)
+        self.axis_names = names
+
+
+MESH_1POD = StubMesh((16, 16), ("data", "model"))
+MESH_2POD = StubMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_divisibility_fallback():
+    # 9 heads can't shard over model=16 -> unsharded
+    spec = resolve_spec(("batch", "seq", "heads", "head_dim"),
+                        (256, 4096, 9, 64), MESH_1POD, BASELINE)
+    assert spec == __import__("jax").sharding.PartitionSpec("data")
+    # 128 heads shard fine
+    spec = resolve_spec(("batch", "seq", "heads", "head_dim"),
+                        (256, 4096, 128, 64), MESH_1POD, BASELINE)
+    assert tuple(spec) == ("data", None, "model")
+
+
+def test_no_axis_reuse_within_spec():
+    # vocab and fsdp both want axes; each mesh axis used at most once
+    spec = resolve_spec(("vocab", "fsdp"), (128256, 16384), MESH_1POD, BASELINE)
+    axes = [a for a in tuple(spec) if a is not None]
+    flat = []
+    for a in axes:
+        flat.extend(a if isinstance(a, tuple) else (a,))
+    assert len(flat) == len(set(flat))
+
+
+def test_pod_axis_joins_batch():
+    spec = resolve_spec(("batch", "seq"), (256, 4096), MESH_2POD, BASELINE)
+    assert tuple(spec)[0] == ("pod", "data")
+
+
+def test_all_arch_param_specs_resolve():
+    """Every arch's full param tree resolves under every ruleset and both
+    production mesh shapes without error."""
+    for arch in registry.arch_ids():
+        cfg = registry.get(arch).model
+        specs = lm.param_specs(cfg)
+        leaves = __import__("jax").tree.leaves(specs, is_leaf=P.is_spec)
+        for mesh in (MESH_1POD, MESH_2POD):
+            for name, rules in RULESETS.items():
+                for s in leaves:
+                    resolve_spec(s.logical, s.shape, mesh, rules)
+
+
+@pytest.mark.slow
+def test_dryrun_smoke_subprocess():
+    """The real dry-run path: reduced config x 512 fake devices, both
+    meshes, in a subprocess so this process keeps 1 device."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "smollm-135m",
+         "--shape", "train_4k", "--mesh", "both", "--smoke",
+         "--out", "/tmp/dryrun_pytest"],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-2000:]
+    assert out.stdout.count("OK ") == 2, out.stdout[-2000:]
