@@ -1,12 +1,20 @@
-"""FS microbenchmarks — paper Figures 2-4 + Tables 4-5.
+"""FS microbenchmarks — paper Figures 2-4 + Tables 4-5, plus the
+BentoQueue batched-vs-scalar mode (beyond-paper).
 
 read  : 4K ops/s + 32K/128K/1M MB/s, sequential+random, 1 and 32 threads
 write : 32K/128K/1M MB/s, seq 1-thread + random 1/32 threads
 create: ops/s, 1/32 threads         delete: ops/s, 1/32 threads
+batched: N-op submission batches through ``Mount.submit`` vs scalar
+         dispatch — reports ops/s for both, the speedup, gate-crossings
+         per batch (must be 1) and checksum_batch launches per flushed
+         write batch (must be 1; run with REPRO_FORCE_PALLAS_CHECKSUM=1
+         to make each launch a real Pallas kernel call).
 
 Mount matrix: bento / vfs / fuse / ext4like (repro.fs.mounts). Op counts are
 bounded (not wall-clock bounded like filebench) so the suite stays CPU-
 friendly; FUSE rows run a reduced op count and report the same ops/s metric.
+
+CLI:  PYTHONPATH=src python -m benchmarks.fs_micro --batched [--kind bento]
 """
 
 from __future__ import annotations
@@ -153,6 +161,75 @@ def bench_delete(kind: str, *, ops_scale: float = 1.0) -> List[Dict]:
     return rows
 
 
+def bench_batched(kind: str = "bento", *, batch: int = 128,
+                  total_ops: int = 8192, write_batch: int = 16,
+                  n_write_batches: int = 32) -> List[Dict]:
+    """Batched submission vs scalar dispatch (the BentoQueue tentpole).
+
+    4KiB-read microbenchmark: ``total_ops`` sequential 4 KiB reads of a
+    warm file, first one scalar call at a time, then in ``batch``-entry
+    submissions (one gate-crossing each). Then a batched-write mode:
+    ``write_batch`` 4 KiB writes + one flush per submission — the flush
+    commits the whole batch as ONE journal transaction, i.e. one
+    checksum_batch launch per batch.
+    """
+    rows: List[Dict] = []
+    mf = make_mount(kind, n_blocks=16384)
+    v = mf.view
+    _mk_file(v, "/readfile", FILE_MB)
+    size = 4096
+    n_off = (FILE_MB << 20) // size
+    gate = getattr(mf.mount, "gate", None)
+
+    # --- scalar 4KiB reads ---------------------------------------------------
+    t0 = time.perf_counter()
+    for i in range(total_ops):
+        v.read_file("/readfile", off=(i % n_off) * size, size=size)
+    scalar_s = time.perf_counter() - t0
+    scalar_ops = total_ops / scalar_s
+
+    # --- batched 4KiB reads --------------------------------------------------
+    g0 = gate.crossings if gate else 0
+    n_batches = total_ops // batch
+    t0 = time.perf_counter()
+    for b in range(n_batches):
+        specs = [("/readfile", ((b * batch + i) % n_off) * size, size)
+                 for i in range(batch)]
+        v.read_many(specs)
+    batched_s = time.perf_counter() - t0
+    batched_ops = (n_batches * batch) / batched_s
+    crossings_per_batch = ((gate.crossings - g0) / n_batches) if gate else None
+
+    rows.append({
+        "bench": "batched_read", "fs": kind, "size_kb": 4, "batch": batch,
+        "scalar_ops_per_s": scalar_ops, "batched_ops_per_s": batched_ops,
+        "speedup": batched_ops / scalar_ops,
+        "gate_crossings_per_batch": crossings_per_batch,
+    })
+
+    # --- batched writes: one flush (= one journal commit = one checksum
+    # launch) per submission batch -------------------------------------------
+    ks = mf.services
+    blob = b"w" * size
+    if ks is not None:
+        c0 = ks.counters["checksum_batch_calls"]
+        t0 = time.perf_counter()
+        for b in range(n_write_batches):
+            items = [("/readfile", ((b * write_batch + i) % n_off) * size, blob)
+                     for i in range(write_batch)]
+            v.write_many(items, create=False, fsync=True)
+        batched_w_s = time.perf_counter() - t0
+        launches = ks.counters["checksum_batch_calls"] - c0
+        rows.append({
+            "bench": "batched_write", "fs": kind, "size_kb": 4,
+            "batch": write_batch,
+            "batched_ops_per_s": n_write_batches * write_batch / batched_w_s,
+            "checksum_batch_per_flush": launches / n_write_batches,
+        })
+    mf.close()
+    return rows
+
+
 def run_all(kinds=ALL_KINDS, quick: bool = False) -> List[Dict]:
     rows: List[Dict] = []
     for kind in kinds:
@@ -162,3 +239,45 @@ def run_all(kinds=ALL_KINDS, quick: bool = False) -> List[Dict]:
         rows += bench_create(kind, ops_scale=scale)
         rows += bench_delete(kind, ops_scale=scale)
     return rows
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--batched", action="store_true",
+                    help="run the batched-vs-scalar BentoQueue mode")
+    ap.add_argument("--kind", default="bento",
+                    help="mount kind for --batched (default: bento)")
+    ap.add_argument("--batch", type=int, default=128)
+    ap.add_argument("--total-ops", type=int, default=8192)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    if args.batched:
+        if args.batch <= 0 or args.total_ops < args.batch:
+            ap.error("--batch must be positive and <= --total-ops")
+        rows = bench_batched(args.kind, batch=args.batch,
+                             total_ops=args.total_ops)
+        for r in rows:
+            if r["bench"] == "batched_read":
+                print(f"batched_read/{r['fs']}/batch{r['batch']}: "
+                      f"scalar {r['scalar_ops_per_s']:.0f} ops/s, "
+                      f"batched {r['batched_ops_per_s']:.0f} ops/s, "
+                      f"speedup {r['speedup']:.2f}x, "
+                      f"gate crossings/batch {r['gate_crossings_per_batch']}")
+            else:
+                print(f"batched_write/{r['fs']}/batch{r['batch']}: "
+                      f"{r['batched_ops_per_s']:.0f} ops/s, "
+                      f"checksum_batch launches/flush "
+                      f"{r['checksum_batch_per_flush']:.2f}")
+        read = next(r for r in rows if r["bench"] == "batched_read")
+        assert read["gate_crossings_per_batch"] in (None, 1.0), \
+            "batched submission must cross the gate exactly once per batch"
+        if read["speedup"] < 2.0:
+            print(f"WARNING: speedup {read['speedup']:.2f}x below the 2x target")
+    else:
+        for r in run_all(quick=args.quick):
+            print(r)
+
+
+if __name__ == "__main__":
+    main()

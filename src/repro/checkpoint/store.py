@@ -25,6 +25,12 @@ from repro.fs.posix import PosixView
 
 MANIFEST = "manifest.json"
 
+# Leaves cross the boundary in bounded submission batches: one crossing per
+# ~chunk instead of per leaf, without buffering the whole checkpoint
+# (serialized bytes would otherwise double peak memory on save).
+_BATCH_BYTES = 64 << 20
+_BATCH_LEAVES = 64
+
 # ml_dtypes that numpy serializes as void: stored as integer views instead.
 _WIRE_DTYPES = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
                 "float8_e5m2": np.uint8}
@@ -46,6 +52,7 @@ def save(view: PosixView, root: str, tree, *, step: int,
         "leaves": [],
         "extra": extra or {},
     }
+    items, pending_bytes = [], 0
     for i, leaf in enumerate(leaves):
         arr = np.asarray(jax.device_get(leaf))
         # numpy can't serialize ml_dtypes (bf16 -> void): save a same-width
@@ -56,13 +63,19 @@ def save(view: PosixView, root: str, tree, *, step: int,
         np.save(buf, save_arr)
         raw = buf.getvalue()
         path = f"{root}/leaf_{i:05d}.npy"
-        view.write_file(path, raw)
+        items.append((path, raw))
+        pending_bytes += len(raw)
         manifest["leaves"].append({
             "path": path,
             "shape": list(arr.shape),
             "dtype": str(arr.dtype),
             "checksum": checksum(raw) if checksum else None,
         })
+        if len(items) >= _BATCH_LEAVES or pending_bytes >= _BATCH_BYTES:
+            view.write_many(items)
+            items, pending_bytes = [], 0
+    if items:
+        view.write_many(items)
     # manifest last: the commit point (journal makes it atomic)
     view.write_file(f"{root}/{MANIFEST}",
                     json.dumps(manifest).encode())
@@ -85,21 +98,26 @@ def load(view: PosixView, root: str, like_tree, *, checksum=None,
     if sharding_tree is not None:
         shardings = _flatten(sharding_tree)[0]
     out = []
-    for i, rec in enumerate(manifest["leaves"]):
-        raw = view.read_file(rec["path"])
-        if checksum and rec.get("checksum") is not None:
-            if checksum(raw) != rec["checksum"]:
-                raise IOError(f"checksum mismatch in {rec['path']}")
-        arr = np.load(io.BytesIO(raw))
-        if rec["dtype"] in _WIRE_DTYPES:
-            import ml_dtypes
-            arr = arr.view(getattr(ml_dtypes, rec["dtype"]))
-        if list(arr.shape) != rec["shape"]:
-            raise IOError(f"shape mismatch in {rec['path']}")
-        if shardings is not None:
-            out.append(jax.device_put(arr, shardings[i]))
-        else:
-            out.append(jax.device_put(arr))
+    # leaves read in bounded submission batches (see _BATCH_LEAVES): one
+    # boundary crossing per chunk, raw bytes live only within their chunk
+    recs = manifest["leaves"]
+    for lo in range(0, len(recs), _BATCH_LEAVES):
+        chunk = recs[lo: lo + _BATCH_LEAVES]
+        raws = view.read_many([rec["path"] for rec in chunk])
+        for i, (rec, raw) in enumerate(zip(chunk, raws), start=lo):
+            if checksum and rec.get("checksum") is not None:
+                if checksum(raw) != rec["checksum"]:
+                    raise IOError(f"checksum mismatch in {rec['path']}")
+            arr = np.load(io.BytesIO(raw))
+            if rec["dtype"] in _WIRE_DTYPES:
+                import ml_dtypes
+                arr = arr.view(getattr(ml_dtypes, rec["dtype"]))
+            if list(arr.shape) != rec["shape"]:
+                raise IOError(f"shape mismatch in {rec['path']}")
+            if shardings is not None:
+                out.append(jax.device_put(arr, shardings[i]))
+            else:
+                out.append(jax.device_put(arr))
     return jax.tree.unflatten(treedef, out), manifest
 
 

@@ -9,16 +9,19 @@
 
 from repro.core.capability import (BlockDeviceCap, Capability, CapabilityError,
                                    MeshCap, MetricsCap, RngCap, SuperBlockCap)
-from repro.core.interface import (Attr, BentoFilesystem, BentoModule, Errno,
-                                  FileKind, FsError, ROOT_INO)
+from repro.core.interface import (Attr, BATCHABLE_OPS, BentoFilesystem,
+                                  BentoModule, CompletionEntry, Errno,
+                                  FileKind, FsError, ROOT_INO, SubmissionEntry)
 from repro.core.ownership import Borrow, BorrowError, Owned
-from repro.core.registry import Mount, OpGate, mount, register_bento
+from repro.core.registry import (BentoQueue, Mount, OpGate, mount,
+                                 register_bento)
 from repro.core.upgrade import UpgradeError, transfer_state, upgrade
 
 __all__ = [
-    "Attr", "BentoFilesystem", "BentoModule", "BlockDeviceCap", "Borrow",
-    "BorrowError", "Capability", "CapabilityError", "Errno", "FileKind",
-    "FsError", "MeshCap", "MetricsCap", "Mount", "OpGate", "ROOT_INO",
-    "RngCap", "SuperBlockCap", "UpgradeError", "mount", "register_bento",
+    "Attr", "BATCHABLE_OPS", "BentoFilesystem", "BentoModule", "BentoQueue",
+    "BlockDeviceCap", "Borrow", "BorrowError", "Capability", "CapabilityError",
+    "CompletionEntry", "Errno", "FileKind", "FsError", "MeshCap", "MetricsCap",
+    "Mount", "OpGate", "ROOT_INO", "RngCap", "SubmissionEntry",
+    "SuperBlockCap", "UpgradeError", "mount", "register_bento",
     "transfer_state", "upgrade",
 ]

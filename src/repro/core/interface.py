@@ -1,4 +1,4 @@
-"""The Bento module boundary (paper §4.3).
+"""The Bento module boundary (paper §4.3), batched.
 
 Two interfaces cross the boundary:
 
@@ -12,6 +12,26 @@ Two interfaces cross the boundary:
   granular operations, plain values in/out, no kernel structures exposed.
   Ownership of arguments never transfers: ``bytes`` in/out are immutable
   (a shared borrow), capabilities are held, never owned.
+
+The native shape of the boundary is a *batch*, io_uring style. Callers
+build a list of ``SubmissionEntry(op, args, user_data)`` records and hand
+them across the boundary once; they get back one ``CompletionEntry`` per
+submission, in submission order. Two rules make the batch a faithful
+extension of the paper's single-op design rather than a new protocol:
+
+* plain values only — entries and completions carry ints/bytes/strs, the
+  same no-kernel-structures rule as scalar ops (§4.3);
+* errors never cross as exceptions — a failing entry (fs error or
+  malformed entry) completes with an ``errno`` and does not poison its
+  neighbours, exactly like a CQE's ``res`` field. ``FsError`` still
+  exists for the scalar convenience methods. Only genuine implementation
+  exceptions (bugs) propagate, as they do through scalar dispatch.
+
+``BentoFilesystem.submit_batch`` is the override hook: the default loops
+scalar ops with per-entry errno capture, so every module is batchable;
+modules that can do better (vectorized reads that hit the buffer cache
+once, one journal transaction per batch, one Pallas checksum launch per
+commit) override it — see ``repro.fs.xv6``.
 """
 
 from __future__ import annotations
@@ -19,6 +39,7 @@ from __future__ import annotations
 import abc
 import dataclasses
 import enum
+import inspect
 from typing import Any, Dict, Iterable, List, Optional, Tuple
 
 from repro.core.capability import SuperBlockCap
@@ -64,6 +85,51 @@ class Attr:
 
 
 ROOT_INO = 1
+
+
+# --- batched boundary records (io_uring-shaped, §4.3 plain values) ---------------
+
+# Ops that may appear in a submission batch. ``init``/``destroy`` are
+# lifecycle-only and ``submit_batch`` itself may not nest.
+BATCHABLE_OPS = frozenset({
+    "getattr", "lookup", "create", "mkdir", "unlink", "rmdir", "rename",
+    "readdir", "read", "write", "truncate", "fsync", "flush", "statfs",
+})
+
+
+@dataclasses.dataclass(slots=True)
+class SubmissionEntry:
+    """One SQE: which op, its plain-value args, and an opaque cookie the
+    caller uses to match the completion (never interpreted by the fs).
+
+    Treat as immutable once submitted (not ``frozen=True`` only because a
+    frozen __init__ costs ~3x on the hot path — batches are built in
+    bulk)."""
+
+    op: str
+    args: Tuple[Any, ...] = ()
+    kwargs: Optional[Dict[str, Any]] = None  # None == {} (skips an alloc)
+    user_data: Any = None
+
+
+@dataclasses.dataclass(slots=True)
+class CompletionEntry:
+    """One CQE: the submission's cookie plus result XOR errno."""
+
+    user_data: Any
+    result: Any = None
+    errno: Optional[Errno] = None
+
+    @property
+    def ok(self) -> bool:
+        return self.errno is None
+
+    def unwrap(self):
+        """Scalar-shim helper: re-raise the errno the way the scalar API
+        would have (the only place batch errors become exceptions again)."""
+        if self.errno is not None:
+            raise FsError(self.errno, f"batched {self.user_data!r}")
+        return self.result
 
 
 class BentoModule(abc.ABC):
@@ -143,6 +209,61 @@ class BentoFilesystem(BentoModule):
 
     @abc.abstractmethod
     def statfs(self) -> Dict[str, int]: ...
+
+    # --- batched boundary ------------------------------------------------------
+    _SIG_CACHE: Dict[Tuple[type, str], inspect.Signature] = {}
+
+    # basic value shapes checked pre-call for the data ops, so a malformed
+    # entry completes EINVAL while a TypeError from inside a correctly-
+    # called op (an implementation bug) propagates loudly, like scalar
+    # dispatch
+    _VALUE_CHECKS = {
+        "write": lambda ba: (isinstance(ba.arguments.get("data"),
+                                        (bytes, bytearray))
+                             and isinstance(ba.arguments.get("off"), int)),
+        "read": lambda ba: (isinstance(ba.arguments.get("off"), int)
+                            and isinstance(ba.arguments.get("size"), int)),
+    }
+
+    def _entry_fits(self, op: str, args, kwargs) -> bool:
+        """Does (args, kwargs) form a well-shaped call of ``op``? Checked
+        BEFORE dispatch: arity/keywords via the cached signature, plus the
+        per-op basic value shapes above."""
+        key = (type(self), op)
+        sig = self._SIG_CACHE.get(key)
+        if sig is None:
+            sig = self._SIG_CACHE[key] = inspect.signature(getattr(self, op))
+        try:
+            ba = sig.bind(*args, **(kwargs or {}))
+        except TypeError:
+            return False
+        check = self._VALUE_CHECKS.get(op)
+        return check is None or check(ba)
+
+    def _dispatch_one(self, entry: SubmissionEntry) -> CompletionEntry:
+        """Run one entry with per-entry errno capture: malformed entries
+        and FsErrors become errnos; implementation exceptions propagate."""
+        if (entry.op not in BATCHABLE_OPS
+                or not self._entry_fits(entry.op, entry.args, entry.kwargs)):
+            return CompletionEntry(entry.user_data, errno=Errno.EINVAL)
+        try:
+            fn = getattr(self, entry.op)
+            return CompletionEntry(entry.user_data,
+                                   result=fn(*entry.args,
+                                             **(entry.kwargs or {})))
+        except FsError as e:
+            return CompletionEntry(entry.user_data, errno=e.errno)
+
+    def submit_batch(self, entries: Iterable[SubmissionEntry]
+                     ) -> List[CompletionEntry]:
+        """Process a submission batch; completions in submission order.
+
+        Default: scalar dispatch with per-entry errno isolation, so every
+        module speaks the batched boundary. Override for vectorized fast
+        paths (amortize locks, cache passes, journal commits, checksum
+        launches across the batch) — completion order must be preserved.
+        """
+        return [self._dispatch_one(e) for e in entries]
 
 
 # Filled in by repro.core.services at import time (cycle-free forward ref).

@@ -1,4 +1,5 @@
-"""Module registration and mount table (paper §4.2, §5.2).
+"""Module registration, mount table, and the batched dispatch gate
+(paper §4.2, §5.2).
 
 File systems register a *factory*; mounting instantiates the module, mints
 its capabilities, and captures a function table (the function-pointer
@@ -6,14 +7,32 @@ struct of §5.2). Dispatch goes through the table + an operation gate so the
 online-upgrade path (core.upgrade) can quiesce in-flight operations and
 atomically swap the table — applications keep their mount handle across the
 swap.
+
+Two dispatch surfaces cross the gate:
+
+* ``Mount.call(op, ...)`` — the scalar path: one gate-crossing, one table
+  lookup, one module call per operation (the paper's §4.3 shape).
+* ``Mount.submit(entries)`` — the batched path: the gate is entered ONCE
+  for the whole batch, then the module's ``submit_batch`` runs every entry.
+  Upgrade quiesce therefore drains whole batches atomically: a table swap
+  can never land between two entries of one batch, so a batch's
+  completions all come from the same module generation (§4.8 guarantee,
+  extended to batches). ``BentoQueue`` is the io_uring-style SQ/CQ
+  convenience wrapper over ``Mount.submit``.
+
+The gate tracks per-thread depth: a module op that re-enters dispatch on
+the same thread (nested ``call``/``submit``) joins its outer crossing
+instead of deadlocking against a concurrent ``freeze``.
 """
 
 from __future__ import annotations
 
+import collections
 import threading
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Deque, Dict, Iterable, List, Optional
 
-from repro.core.interface import BentoFilesystem, Errno, FsError
+from repro.core.interface import (BentoFilesystem, CompletionEntry, Errno,
+                                  FsError, SubmissionEntry)
 
 _FS_REGISTRY: Dict[str, Callable[[], BentoFilesystem]] = {}
 
@@ -28,20 +47,41 @@ def registered() -> Dict[str, Callable[[], BentoFilesystem]]:
 
 class OpGate:
     """Reader-writer gate: operations enter as readers; quiesce takes the
-    writer side and drains in-flight ops (paper §4.8 upgrade barrier)."""
+    writer side and drains in-flight ops (paper §4.8 upgrade barrier).
+
+    Re-entrant per thread: a thread already inside the gate (an op that
+    dispatches a nested op) bumps a thread-local depth instead of waiting —
+    otherwise a nested ``enter`` during ``freeze`` would deadlock: freeze
+    waits for the outer op to exit while the inner enter waits for thaw.
+    ``crossings`` counts outermost entries only, so a submitted batch is
+    exactly one crossing (the batching win, measured in benchmarks).
+    """
 
     def __init__(self):
         self._lock = threading.Condition()
         self._active = 0
         self._frozen = False
+        self._depth = threading.local()
+        self.crossings = 0
 
     def enter(self) -> None:
+        depth = getattr(self._depth, "v", 0)
+        if depth > 0:  # nested on this thread: already counted as active
+            self._depth.v = depth + 1
+            return
         with self._lock:
             while self._frozen:
                 self._lock.wait()
             self._active += 1
+            self.crossings += 1
+        self._depth.v = 1
 
     def exit(self) -> None:
+        depth = getattr(self._depth, "v", 1)
+        if depth > 1:
+            self._depth.v = depth - 1
+            return
+        self._depth.v = 0
         with self._lock:
             self._active -= 1
             if self._active == 0:
@@ -60,7 +100,8 @@ class OpGate:
 
 
 _FS_OPS = ("getattr", "lookup", "create", "mkdir", "unlink", "rmdir", "rename",
-           "readdir", "read", "write", "truncate", "fsync", "flush", "statfs")
+           "readdir", "read", "write", "truncate", "fsync", "flush", "statfs",
+           "submit_batch")
 
 
 class Mount:
@@ -96,6 +137,21 @@ class Mount:
         finally:
             self.gate.exit()
 
+    def submit(self, entries: Iterable[SubmissionEntry]) -> List[CompletionEntry]:
+        """Batched dispatch: ONE gate-crossing for the whole batch.
+
+        The table is read once after entering the gate, so every entry of
+        the batch executes against the same module generation even if an
+        upgrade is waiting to swap it (it drains this batch first).
+        """
+        if not isinstance(entries, list):
+            entries = list(entries)
+        self.gate.enter()
+        try:
+            return self.table["submit_batch"](entries)
+        finally:
+            self.gate.exit()
+
     def __getattr__(self, op: str):
         if op in _FS_OPS:
             return lambda *a, **k: self.call(op, *a, **k)
@@ -109,6 +165,49 @@ class Mount:
             self.services.unmount_checks()
         finally:
             self.gate.thaw()
+
+
+class BentoQueue:
+    """io_uring-style submission/completion queue over a mount handle.
+
+    ``prep`` stages entries in the submission queue; ``submit`` crosses the
+    boundary once for everything staged (auto-submitting when the queue
+    reaches ``depth``); completions accumulate in the completion queue and
+    drain via ``drain`` in submission order. Not thread-safe: like an
+    io_uring, one queue belongs to one submitter (make one per thread —
+    the mount underneath is the shared, thread-safe object).
+    """
+
+    def __init__(self, mount, depth: int = 256):
+        if depth <= 0:
+            raise ValueError("queue depth must be positive")
+        self.mount = mount
+        self.depth = depth
+        self._sq: List[SubmissionEntry] = []
+        self._cq: Deque[CompletionEntry] = collections.deque()
+
+    def prep(self, op: str, *args, user_data: Any = None, **kwargs) -> None:
+        """Stage one submission; auto-submits a full queue."""
+        self._sq.append(SubmissionEntry(op, args, kwargs or None, user_data))
+        if len(self._sq) >= self.depth:
+            self.submit()
+
+    def submit(self) -> int:
+        """Submit everything staged (one gate-crossing); returns the number
+        of completions now waiting."""
+        if self._sq:
+            batch, self._sq = self._sq, []
+            self._cq.extend(self.mount.submit(batch))
+        return len(self._cq)
+
+    def drain(self) -> List[CompletionEntry]:
+        """Take all waiting completions (submission order)."""
+        out = list(self._cq)
+        self._cq.clear()
+        return out
+
+    def __len__(self) -> int:
+        return len(self._sq)
 
 
 def mount(name: str, services, module: Optional[BentoFilesystem] = None) -> Mount:

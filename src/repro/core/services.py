@@ -50,6 +50,12 @@ class KernelServices:
         self._checksum = checksum
         self._checksum_batch = checksum_batch
         self._log: List[str] = []
+        # Batching observability: the fs_micro --batched acceptance check
+        # reads these (one checksum_batch launch per flushed batch, bulk
+        # bread instead of per-block bread).
+        self.counters = {"checksum_calls": 0, "checksum_batch_calls": 0,
+                         "checksum_blocks": 0, "bread_many_calls": 0,
+                         "bread_many_blocks": 0}
 
     # --- capabilities ---------------------------------------------------------------
     def superblock(self) -> SuperBlockCap:
@@ -67,6 +73,15 @@ class KernelServices:
     # --- block I/O (the sb_bread family, §4.5) -----------------------------------------
     def sb_bread(self, sb: SuperBlockCap, blockno: int) -> BufferHead:
         return self._cache_of(sb).bread(blockno)
+
+    def sb_bread_many(self, sb: SuperBlockCap, blocknos) -> List[BufferHead]:
+        """Batched sb_bread: one cache pass for a whole submission batch.
+        Heads come back in request order; each must still be released
+        (brelse / context exit) — ownership rules are per-buffer."""
+        blocknos = list(blocknos)
+        self.counters["bread_many_calls"] += 1
+        self.counters["bread_many_blocks"] += len(blocknos)
+        return self._cache_of(sb).bread_many(blocknos)
 
     def sb_getblk_zero(self, sb: SuperBlockCap, blockno: int) -> BufferHead:
         return self._cache_of(sb).getblk_zero(blockno)
@@ -86,12 +101,16 @@ class KernelServices:
         return threading.RLock()
 
     def checksum(self, data: bytes) -> int:
+        self.counters["checksum_calls"] += 1
         return self._checksum(data)
 
     def checksum_batch(self, blocks) -> List[int]:
         """Checksum many blocks in one call — the journal commit path uses
         this so the Pallas kernel launches once per transaction, not once
         per block."""
+        blocks = list(blocks)
+        self.counters["checksum_batch_calls"] += 1
+        self.counters["checksum_blocks"] += len(blocks)
         if self._checksum_batch is not None:
             return self._checksum_batch(blocks)
         return [self._checksum(b) for b in blocks]
@@ -132,8 +151,9 @@ def kernel_binding(dev: BlockDevice, **kw) -> KernelServices:
     if use_pallas:
         try:
             from repro.kernels.blockhash import ops as bh_ops
+            bh_ops.checksum(b"probe")  # probe at bind time, not commit time
             cks, cks_b = _blockhash_pallas, bh_ops.checksum_batch
-        except Exception:  # kernels unavailable — fall back
+        except Exception:  # kernels unavailable/broken — fall back
             pass
     return KernelServices(dev, checksum=cks, checksum_batch=cks_b,
                           binding="kernel", **kw)

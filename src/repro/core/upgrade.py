@@ -26,6 +26,27 @@ class UpgradeError(Exception):
     pass
 
 
+def _extracted_state(old: BentoModule, new: BentoModule,
+                     migrate: Optional[Callable],
+                     strict_schema: bool) -> Dict[str, Any]:
+    """Extract + migrate + schema-check: the ONE state-transfer front door.
+
+    Both the mount upgrade path and generic module transfer (trainer
+    substrates) go through here, so a new version whose schema expects keys
+    the old version never emitted fails loudly in either path instead of
+    silently restoring partial state."""
+    state = old.extract_state()
+    if migrate is not None:
+        state = migrate(state, old.VERSION, new.VERSION)
+    if strict_schema:
+        missing = set(new.state_schema()) - set(state)
+        if missing:
+            raise UpgradeError(
+                f"state transfer incomplete: {sorted(missing)} missing "
+                f"(old v{old.VERSION} -> new v{new.VERSION})")
+    return state
+
+
 def upgrade(mount: Mount, new_module: BentoFilesystem,
             migrate: Optional[Callable[[Dict, int, int], Dict]] = None,
             strict_schema: bool = True) -> Dict[str, float]:
@@ -38,15 +59,7 @@ def upgrade(mount: Mount, new_module: BentoFilesystem,
     mount.gate.freeze()
     t_quiesce = time.perf_counter() - t0
     try:
-        state = old.extract_state()
-        if migrate is not None:
-            state = migrate(state, old.VERSION, new_module.VERSION)
-        if strict_schema:
-            missing = set(new_module.state_schema()) - set(state)
-            if missing:
-                raise UpgradeError(
-                    f"state transfer incomplete: {sorted(missing)} missing "
-                    f"(old v{old.VERSION} -> new v{new_module.VERSION})")
+        state = _extracted_state(old, new_module, migrate, strict_schema)
         t1 = time.perf_counter()
         sb = mount.services.superblock()
         new_module.init(sb, mount.services)
@@ -67,8 +80,11 @@ def upgrade(mount: Mount, new_module: BentoFilesystem,
 
 
 def transfer_state(old: BentoModule, new: BentoModule,
-                   migrate: Optional[Callable] = None) -> None:
-    state = old.extract_state()
-    if migrate is not None:
-        state = migrate(state, old.VERSION, new.VERSION)
+                   migrate: Optional[Callable] = None,
+                   strict_schema: bool = True) -> None:
+    """Quiesce-free state transfer between module instances (trainer
+    substrates, checkpoint/restart). Applies the same strict_schema check
+    as the mount upgrade path: a trainer upgrade can no more silently drop
+    state keys than a file-system upgrade can."""
+    state = _extracted_state(old, new, migrate, strict_schema)
     new.restore_state(state, old.VERSION)

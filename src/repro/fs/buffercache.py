@@ -96,6 +96,33 @@ class BufferCache:
             self._refs[blockno] += 1
             return BufferHead(blockno, buf, self)
 
+    def bread_many(self, blocknos) -> List[BufferHead]:
+        """Read many blocks under ONE lock acquisition (the batched-boundary
+        analogue of plugging a bio list): same semantics as bread per block,
+        heads returned in the order requested. All-or-nothing: a device
+        error mid-batch releases the refs already taken before re-raising,
+        so a failed bulk read can never strand pinned buffers."""
+        out: List[BufferHead] = []
+        with self._lock:
+            try:
+                for blockno in blocknos:
+                    buf = self._blocks.get(blockno)
+                    if buf is None:
+                        self.misses += 1
+                        buf = bytearray(self.dev.read_block(blockno))
+                        self._insert(blockno, buf)
+                    else:
+                        self.hits += 1
+                        self._blocks.move_to_end(blockno)
+                    self._refs[blockno] += 1
+                    out.append(BufferHead(blockno, buf, self))
+            except BaseException:
+                for bh in out:  # clean (never dirtied) — just unpin
+                    bh._held = False
+                    self._refs[bh.blockno] -= 1
+                raise
+        return out
+
     def getblk_zero(self, blockno: int) -> BufferHead:
         """Get a block without reading it (about to be fully overwritten)."""
         with self._lock:

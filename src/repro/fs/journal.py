@@ -67,6 +67,13 @@ class Journal:
         with self._lock:
             return self._pending.get(blockno)
 
+    def pending_snapshot(self) -> Dict[int, bytes]:
+        """One-lock copy of the overlay for batched readers: a vectorized
+        read path consults this dict instead of taking the journal lock
+        once per block."""
+        with self._lock:
+            return dict(self._pending)
+
     def _commit_locked(self) -> None:
         if not self._pending:
             return

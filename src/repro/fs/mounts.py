@@ -41,6 +41,11 @@ class DirectMount:
     def call(self, op, *a, **k):
         return getattr(self.module, op)(*a, **k)
 
+    def submit(self, entries):
+        # Same batched surface as Mount.submit, minus the gate (this is the
+        # no-discipline baseline): the fs still gets its vectorized paths.
+        return self.module.submit_batch(list(entries))
+
     def unmount(self) -> None:
         self.module.flush()
         self.module.destroy()

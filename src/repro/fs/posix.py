@@ -3,13 +3,24 @@
 This is the application-facing layer the benchmarks, the checkpoint store
 and the examples use; it performs path walking + dentry caching on top of
 the inode-granular file-operations API (like the kernel side of VFS does).
+
+Two call surfaces share the dentry cache:
+
+* scalar calls (``read_file``, ``write_file``, ``stat``, …) — unchanged:
+  one gate-crossing and one dispatch per operation;
+* plural forms (``read_many`` / ``write_many`` / ``stat_many``) — resolve
+  paths through the dentry cache, then cross the module boundary ONCE per
+  batch via ``mount.submit`` (preadv/pwritev over io_uring). Per-entry
+  failures come back as in-list ``FsError`` values when ``strict=False``;
+  by default the first failure raises, matching the scalar API.
 """
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
-from repro.core.interface import Attr, Errno, FsError, ROOT_INO
+from repro.core.interface import (Attr, Errno, FsError, ROOT_INO,
+                                  SubmissionEntry)
 
 
 class PosixView:
@@ -149,3 +160,126 @@ class PosixView:
 
     def statfs(self) -> Dict[str, int]:
         return self.m.statfs()
+
+    # --- batched API (one boundary crossing per batch) ----------------------------
+    @staticmethod
+    def _unwrap(comps, strict: bool):
+        if strict:
+            return [c.unwrap() for c in comps]
+        return [c.result if c.ok else FsError(c.errno, str(c.user_data))
+                for c in comps]
+
+    def _walk_many(self, paths: Sequence[str], *, strict: bool,
+                   create: bool = False) -> List:
+        """Resolve each path to an ino, walking repeats once. In strict
+        mode walk failures raise (matching the scalar API); otherwise the
+        failing slot holds its FsError and the rest proceed."""
+        walked: Dict[str, Union[int, FsError]] = {}
+        out: List = []
+        for p in paths:
+            r = walked.get(p)
+            if r is None:
+                try:
+                    r = self._walk(p)
+                except FsError as e:
+                    if e.errno == Errno.ENOENT and create:
+                        try:
+                            r = self.create(p).ino
+                        except FsError as e2:
+                            if strict:
+                                raise
+                            r = e2
+                    elif strict:
+                        raise
+                    else:
+                        r = e
+                walked[p] = r
+            out.append(r)
+        return out
+
+    def _submit_sparse(self, resolved: List, entry_for, strict: bool) -> List:
+        """Submit entries for the slots that resolved; failed slots keep
+        their FsError in place (per-entry isolation end to end)."""
+        idxs = [i for i, r in enumerate(resolved)
+                if not isinstance(r, FsError)]
+        results = self._unwrap(self.m.submit([entry_for(i) for i in idxs]),
+                               strict)
+        out = list(resolved)
+        for i, res in zip(idxs, results):
+            out[i] = res
+        return out
+
+    def read_many(self, specs: Sequence[Union[str, Tuple[str, int, int]]],
+                  *, strict: bool = True) -> List:
+        """Read many (path | (path, off, size)) specs in one submission.
+
+        A bare path (or size < 0) means "the rest of the file": sizes for
+        those are resolved with one batched getattr round first, so a full-
+        file batch costs two boundary crossings total, not 2N.
+        """
+        norm: List[Tuple[str, int, int]] = [
+            (s, 0, -1) if isinstance(s, str) else (s[0], s[1], s[2])
+            for s in specs]
+        resolved = self._walk_many([p for p, _, _ in norm], strict=strict)
+        sized = sorted({r for (_, _, sz), r in zip(norm, resolved)
+                        if sz < 0 and not isinstance(r, FsError)})
+        if sized:
+            attrs = self.m.submit([SubmissionEntry("getattr", (ino,),
+                                                   user_data=ino)
+                                   for ino in sized])
+            size_of = {}
+            for c in attrs:
+                if c.ok:
+                    size_of[c.user_data] = c.result.size
+                elif strict:
+                    c.unwrap()
+                else:
+                    size_of[c.user_data] = FsError(c.errno, "getattr")
+            for i, ((p, off, sz), r) in enumerate(zip(norm, resolved)):
+                if sz < 0 and not isinstance(r, FsError):
+                    s = size_of[r]
+                    if isinstance(s, FsError):
+                        resolved[i] = s
+                    else:
+                        norm[i] = (p, off, max(s - off, 0))
+        return self._submit_sparse(
+            resolved,
+            lambda i: SubmissionEntry("read",
+                                      (resolved[i], norm[i][1], norm[i][2]),
+                                      user_data=norm[i][0]),
+            strict)
+
+    def write_many(self, items: Sequence[Union[Tuple[str, bytes],
+                                               Tuple[str, int, bytes]]],
+                   *, create: bool = True, fsync: bool = False,
+                   strict: bool = True) -> List:
+        """Write many (path, data) / (path, off, data) items in one
+        submission; with ``fsync=True`` a trailing flush entry commits the
+        whole batch as one journal transaction (one checksum launch)."""
+        norm = [(it[0], 0, it[1]) if len(it) == 2 else it for it in items]
+        resolved = self._walk_many([p for p, _, _ in norm], strict=strict,
+                                   create=create)
+        idxs = [i for i, r in enumerate(resolved)
+                if not isinstance(r, FsError)]
+        entries = [SubmissionEntry("write",
+                                   (resolved[i], norm[i][1], norm[i][2]),
+                                   user_data=norm[i][0]) for i in idxs]
+        if fsync:
+            entries.append(SubmissionEntry("flush", (), user_data="<flush>"))
+        comps = self.m.submit(entries)
+        if fsync:
+            comps[-1].unwrap()  # a failed commit is never ignorable
+            comps = comps[:-1]
+        results = self._unwrap(comps, strict)
+        out = list(resolved)
+        for i, res in zip(idxs, results):
+            out[i] = res
+        return out
+
+    def stat_many(self, paths: Sequence[str], *, strict: bool = True) -> List:
+        resolved = self._walk_many(paths, strict=strict)
+        return self._submit_sparse(
+            resolved,
+            lambda i: SubmissionEntry("getattr", (resolved[i],),
+                                      user_data=paths[i]),
+            strict)

@@ -20,8 +20,9 @@ import threading
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.capability import SuperBlockCap
-from repro.core.interface import (Attr, BentoFilesystem, Errno, FileKind,
-                                  FsError, ROOT_INO)
+from repro.core.interface import (Attr, BentoFilesystem, CompletionEntry,
+                                  Errno, FileKind, FsError, ROOT_INO,
+                                  SubmissionEntry)
 from repro.fs import layout as L
 from repro.fs.journal import Journal
 
@@ -284,6 +285,167 @@ class Xv6FileSystem(BentoFilesystem):
                 struct.pack_into("<I", buf, idx * 4, val)
                 self._log(indblock, bytes(buf))
         return val
+
+    # --- batched boundary: vectorized fast paths ------------------------------------------------
+    #
+    # One submission batch = one fs-lock acquisition, one journal-overlay
+    # snapshot, one bulk buffer-cache pass (sb_bread_many). submit_batch
+    # coalesces same-op runs into the *_many methods below; results lists
+    # carry FsError values in failing slots (per-entry errno isolation).
+
+    _MANY_OPS = {"read": "read_many", "write": "write_many",
+                 "getattr": "getattr_many", "lookup": "lookup_many"}
+
+    def submit_batch(self, entries) -> List[CompletionEntry]:
+        if not isinstance(entries, list):
+            entries = list(entries)
+        comps: List[CompletionEntry] = []
+        i, n = 0, len(entries)
+        while i < n:
+            # keyword-style entries keep scalar dispatch (the *_many paths
+            # are positional); coalesce only positional same-op runs
+            many = (self._MANY_OPS.get(entries[i].op)
+                    if not entries[i].kwargs else None)
+            if many is None:
+                comps.append(self._dispatch_one(entries[i]))
+                i += 1
+                continue
+            j = i
+            while (j < n and entries[j].op == entries[i].op
+                   and not entries[j].kwargs):
+                j += 1
+            run = entries[i:j]
+            results = getattr(self, many)([e.args for e in run])
+            for e, r in zip(run, results):
+                if isinstance(r, FsError):
+                    comps.append(CompletionEntry(e.user_data, errno=r.errno))
+                else:
+                    comps.append(CompletionEntry(e.user_data, result=r))
+            i = j
+        return comps
+
+    def _bmap_ro(self, di: L.DiskInode, bn: int, ind_cache: Dict[int, bytes]) -> int:
+        """Read-only bmap sharing one indirect-block cache across a batch
+        (the scalar _bmap takes a cache-lock round trip per indirect hop)."""
+        NI = L.NINDIRECT
+        if bn < L.NDIRECT:
+            return di.addrs[bn]
+        bn -= L.NDIRECT
+        if bn < NI:
+            l1 = di.addrs[L.NDIRECT]
+            return self._ind_ro(l1, bn, ind_cache) if l1 else 0
+        bn -= NI
+        if bn < NI * NI:
+            l1 = di.addrs[L.NDIRECT + 1]
+            if not l1:
+                return 0
+            l2 = self._ind_ro(l1, bn // NI, ind_cache)
+            return self._ind_ro(l2, bn % NI, ind_cache) if l2 else 0
+        raise FsError(Errno.EFBIG, "file too large")
+
+    def _ind_ro(self, indblock: int, idx: int, ind_cache: Dict[int, bytes]) -> int:
+        import struct
+        raw = ind_cache.get(indblock)
+        if raw is None:
+            with self._bread(indblock) as bh:
+                raw = bytes(bh.data())
+            ind_cache[indblock] = raw
+        return struct.unpack_from("<I", raw, idx * 4)[0]
+
+    def read_many(self, reqs) -> List:
+        """Vectorized read: plan every request's block segments first, then
+        fetch all distinct data blocks in ONE buffer-cache pass and slice.
+        Returns bytes per request, FsError in failing slots."""
+        out: List = []
+        with self._oplock:
+            pend = self.journal.pending_snapshot()
+            ind_cache: Dict[int, bytes] = {}
+            plans: List = []
+            needed = set()
+            for args in reqs:
+                try:
+                    ino, off, size = args
+                    if not isinstance(off, int) or not isinstance(size, int):
+                        raise TypeError("read args are (ino, int off, int size)")
+                    di = self._iget(ino)
+                    if di.type == L.T_DIR:
+                        raise FsError(Errno.EISDIR, str(ino))
+                    segs = []
+                    if off < di.size and size > 0:
+                        size = min(size, di.size - off)
+                        while size > 0:
+                            bn, boff = divmod(off, L.BSIZE)
+                            nn = min(L.BSIZE - boff, size)
+                            b = self._bmap_ro(di, bn, ind_cache)
+                            segs.append((b, boff, nn))
+                            if b and b not in pend:
+                                needed.add(b)
+                            off += nn
+                            size -= nn
+                    plans.append(segs)
+                except FsError as e:
+                    plans.append(e)
+                except (TypeError, ValueError):
+                    plans.append(FsError(Errno.EINVAL, "bad read args"))
+            try:
+                heads = self.ks.sb_bread_many(self.sb_cap, sorted(needed))
+            except Exception as e:  # device error: fail the batch's reads
+                # as per-entry EIO — errors never cross as exceptions
+                io_err = FsError(Errno.EIO, f"batched bread failed: {e}")
+                self.stats["ops"] += len(reqs)
+                return [p if isinstance(p, FsError) else io_err
+                        for p in plans]
+            try:
+                bufs = {bh.blockno: bh.data() for bh in heads}
+                for segs in plans:
+                    if isinstance(segs, FsError):
+                        out.append(segs)
+                        continue
+                    chunks = []
+                    for b, boff, nn in segs:
+                        if b == 0:
+                            chunks.append(bytes(nn))  # hole
+                        else:
+                            src = pend.get(b) or bufs[b]
+                            chunks.append(bytes(src[boff: boff + nn]))
+                    out.append(chunks[0] if len(chunks) == 1 else b"".join(chunks))
+            finally:
+                for bh in heads:
+                    bh.brelse()
+            self.stats["ops"] += len(reqs)
+        return out
+
+    def _scalar_many(self, op: str, reqs) -> List:
+        """Scalar loop under ONE fs-lock acquisition with per-entry errno
+        capture — the shared body of the non-read vectorized paths.
+        Arg-shape errors complete as EINVAL (pre-call bind check);
+        implementation exceptions propagate, like scalar dispatch."""
+        fn = getattr(self, op)
+        out: List = []
+        with self._oplock:
+            for args in reqs:
+                if not isinstance(args, tuple) \
+                        or not self._entry_fits(op, args, None):
+                    out.append(FsError(Errno.EINVAL, f"bad {op} args"))
+                    continue
+                try:
+                    out.append(fn(*args))
+                except FsError as e:
+                    out.append(e)
+        return out
+
+    def write_many(self, reqs) -> List:
+        """Batched write: one fs-lock acquisition; writes land in the open
+        group-commit transaction, so a following fsync/flush entry commits
+        the whole batch with one journal transaction (and one checksum_batch
+        launch). Returns bytes-written per request, FsError where failed."""
+        return self._scalar_many("write", reqs)
+
+    def getattr_many(self, reqs) -> List:
+        return self._scalar_many("getattr", reqs)
+
+    def lookup_many(self, reqs) -> List:
+        return self._scalar_many("lookup", reqs)
 
     # --- attrs ------------------------------------------------------------------------------------
     def _attr(self, ino: int, di: L.DiskInode) -> Attr:

@@ -1,0 +1,417 @@
+"""The BentoQueue batched boundary: submission ordering, per-entry errno
+isolation, one gate-crossing / one checksum-launch per batch, reentrancy
+during quiesce, and upgrade-during-inflight-batch atomicity (§4.8 extended
+to batches)."""
+
+import threading
+import time
+
+import pytest
+
+from repro.core.interface import (BATCHABLE_OPS, CompletionEntry, Errno,
+                                  FsError, SubmissionEntry)
+from repro.core.registry import BentoQueue, OpGate
+from repro.core.upgrade import UpgradeError, transfer_state, upgrade
+from repro.fs.mounts import make_mount
+from repro.fs.xv6 import Xv6FileSystem, Xv6Options
+
+
+@pytest.fixture(params=["bento", "vfs", "ext4like"])
+def mounted(request):
+    mf = make_mount(request.param, n_blocks=8192)
+    yield mf
+    mf.close()
+
+
+# --- ordering + isolation ------------------------------------------------------
+
+
+def test_completions_in_submission_order(mounted):
+    v = mounted.view
+    v.makedirs("/d")
+    v.write_file("/d/f", b"0123456789" * 100)
+    ino = v.stat("/d/f").ino
+    dino = v.stat("/d").ino
+    entries = [
+        SubmissionEntry("read", (ino, 0, 4), user_data=0),
+        SubmissionEntry("getattr", (ino,), user_data=1),
+        SubmissionEntry("lookup", (dino, "f"), user_data=2),
+        SubmissionEntry("write", (ino, 0, b"ABCD"), user_data=3),
+        SubmissionEntry("read", (ino, 0, 4), user_data=4),
+        SubmissionEntry("statfs", (), user_data=5),
+    ]
+    comps = mounted.mount.submit(entries)
+    assert [c.user_data for c in comps] == [0, 1, 2, 3, 4, 5]
+    assert all(c.ok for c in comps)
+    assert comps[0].result == b"0123"
+    assert comps[4].result == b"ABCD"  # sees the write earlier in the batch
+
+
+def test_per_entry_errno_isolation(mounted):
+    """One failing entry must not poison the batch — and the error crosses
+    the boundary as an errno value, not an exception."""
+    v = mounted.view
+    v.write_file("/ok", b"fine")
+    ino = v.stat("/ok").ino
+    comps = mounted.mount.submit([
+        SubmissionEntry("write", (ino, 0, b"AA"), user_data="w1"),
+        SubmissionEntry("read", (123456, 0, 4), user_data="bad-ino"),
+        SubmissionEntry("lookup", (ino, "x"), user_data="not-dir"),
+        SubmissionEntry("frobnicate", (), user_data="bad-op"),
+        SubmissionEntry("read", (ino, 0, 4), user_data="w2"),
+    ])
+    by_ud = {c.user_data: c for c in comps}
+    assert by_ud["w1"].ok and by_ud["w1"].result == 2
+    assert by_ud["bad-ino"].errno in (Errno.ESTALE, Errno.ENOENT)
+    assert by_ud["not-dir"].errno == Errno.ENOTDIR
+    assert by_ud["bad-op"].errno == Errno.EINVAL
+    assert by_ud["w2"].ok and by_ud["w2"].result == b"AAne"
+    with pytest.raises(FsError):
+        by_ud["bad-op"].unwrap()
+
+
+def test_malformed_args_become_einval(mounted):
+    v = mounted.view
+    v.write_file("/m", b"mm")
+    ino = v.stat("/m").ino
+    comps = mounted.mount.submit([
+        SubmissionEntry("read", (1,), user_data=0),       # missing off/size
+        SubmissionEntry("read", (ino, 0, 2.5), user_data=1),  # float size
+        SubmissionEntry("read", (ino, 0.0, 2), user_data=2),  # float off
+        SubmissionEntry("statfs", (), user_data=3),
+    ])
+    assert comps[0].errno == Errno.EINVAL
+    assert comps[1].errno == Errno.EINVAL
+    assert comps[2].errno == Errno.EINVAL
+    assert comps[3].ok
+
+
+def test_malformed_write_payload_isolated_on_every_fs(mounted):
+    """A write entry whose payload isn't bytes must complete with EINVAL on
+    every implementation (incl. ext4like's coalescing path), never raise."""
+    v = mounted.view
+    v.write_file("/t", b"base")
+    ino = v.stat("/t").ino
+    comps = mounted.mount.submit([
+        SubmissionEntry("write", (ino, 0, 123), user_data="int-payload"),
+        SubmissionEntry("write", (5,), user_data="short-args"),
+        SubmissionEntry("write", (ino, 0, b"OK"), user_data="good"),
+    ])
+    assert [c.user_data for c in comps] == ["int-payload", "short-args", "good"]
+    assert comps[0].errno == Errno.EINVAL
+    assert comps[1].errno == Errno.EINVAL
+    assert comps[2].ok and v.read_file("/t") == b"OKse"
+
+
+def test_kwargs_entries_work_on_concrete_fs(mounted):
+    """BentoQueue.prep-style keyword entries must not be broken by the
+    run-coalescing fast path."""
+    v = mounted.view
+    v.write_file("/k", b"kwargs!")
+    ino = v.stat("/k").ino
+    comps = mounted.mount.submit([
+        SubmissionEntry("read", (ino,), {"off": 0, "size": 6}, "kw"),
+        SubmissionEntry("read", (ino, 0, 6), user_data="pos"),
+        SubmissionEntry("write", (ino,), {"off": 0, "data": b"KWARGS"}, "kww"),
+    ])
+    assert comps[0].ok and comps[0].result == b"kwargs"
+    assert comps[1].ok and comps[1].result == b"kwargs"
+    assert comps[2].ok and comps[2].result == 6
+    assert v.read_file("/k") == b"KWARGS!"
+
+
+def test_posix_nonstrict_isolates_walk_failures(mounted):
+    """strict=False: a missing path comes back as an in-list FsError and
+    the valid entries still complete (the docstring's contract)."""
+    v = mounted.view
+    v.write_file("/have", b"data")
+    got = v.read_many(["/missing", "/have", ("/missing", 0, 2)], strict=False)
+    assert isinstance(got[0], FsError) and got[0].errno == Errno.ENOENT
+    assert got[1] == b"data"
+    assert isinstance(got[2], FsError)
+    st = v.stat_many(["/have", "/missing"], strict=False)
+    assert st[0].size == 4 and isinstance(st[1], FsError)
+    wr = v.write_many([("/no/such/dir/f", b"x"), ("/have", 0, b"DATA")],
+                      strict=False)
+    assert isinstance(wr[0], FsError) and wr[1] == 4
+    assert v.read_file("/have") == b"DATA"
+    with pytest.raises(FsError):
+        v.read_many(["/missing"])  # strict default still raises
+
+
+def test_ext4like_lookup_many_counts_per_entry():
+    mf = make_mount("ext4like", n_blocks=4096)
+    v = mf.view
+    v.makedirs("/d")
+    for c in "abc":
+        v.write_file(f"/d/{c}", b"x")
+    fs = mf.mount.module
+    dino = v.stat("/d").ino
+    ops0 = fs.stats["ops"]
+    fs.lookup_many([(dino, "a"), (dino, "b"), (dino, "c")])
+    assert fs.stats["ops"] - ops0 == 3
+    mf.close()
+
+
+def test_device_error_mid_batch_is_per_entry_eio_and_leaks_nothing():
+    """A device error during the bulk cache pass must complete the batch's
+    reads with EIO (no exception across the boundary) and release every
+    buffer ref (unmount's leak detector is the proof)."""
+    mf = make_mount("bento", n_blocks=2048)
+    v = mf.view
+    v.write_file("/f", b"x" * 8192)
+    v.fsync("/f")
+    ino = v.stat("/f").ino
+    fs = mf.mount.module
+    fs._iget(ino).addrs[0] = 999999  # corrupt: points past the device
+    comps = mf.mount.submit([
+        SubmissionEntry("read", (ino, 0, 4096), user_data="bad-block"),
+        SubmissionEntry("read", (ino, 4096, 4096), user_data="same-run"),
+        SubmissionEntry("getattr", (ino,), user_data="next-run"),
+    ])
+    assert comps[0].errno == Errno.EIO
+    assert comps[1].errno == Errno.EIO  # same bulk pass: attribution is EIO
+    assert comps[2].ok                  # later run unaffected
+    fs._iget(ino).addrs[0] = 0          # un-corrupt so unmount flushes clean
+    mf.close()                          # assert_no_leaks fires here if stranded
+
+
+def test_fuse_bridge_batched_round_trip():
+    """The FUSE daemon speaks the batched boundary: entry/completion
+    records pickle across the socket, one round-trip per batch, per-entry
+    errno isolation intact, fsync/flush entries trigger the device sync."""
+    mf = make_mount("fuse", n_blocks=2048)
+    v = mf.view
+    v.write_file("/f", b"fusebatch")
+    ino = v.stat("/f").ino
+    comps = mf.mount.submit([
+        SubmissionEntry("read", (ino, 0, 4), user_data="r"),
+        SubmissionEntry("read", (424242, 0, 4), user_data="bad"),
+        SubmissionEntry("write", (ino, 0, b"FUSE"), user_data="w"),
+        SubmissionEntry("flush", (), user_data="f"),
+    ])
+    assert [c.user_data for c in comps] == ["r", "bad", "w", "f"]
+    assert comps[0].ok and comps[0].result == b"fuse"
+    assert not comps[1].ok and comps[1].errno is not None
+    assert comps[2].ok and comps[2].result == 4
+    assert v.read_file("/f") == b"FUSEbatch"
+    assert v.read_many([("/f", 0, 9)]) == [b"FUSEbatch"]
+    assert v.write_many([("/f", 4, b"BATCH")], fsync=True) == [5]
+    mf.close()
+
+
+def test_batchable_ops_exclude_lifecycle():
+    assert "init" not in BATCHABLE_OPS
+    assert "destroy" not in BATCHABLE_OPS
+    assert "submit_batch" not in BATCHABLE_OPS  # no nesting
+
+
+# --- gate-crossing + checksum amortization -------------------------------------
+
+
+def test_one_gate_crossing_per_batch():
+    mf = make_mount("bento", n_blocks=4096)
+    v = mf.view
+    v.write_file("/f", b"x" * 65536)
+    ino = v.stat("/f").ino
+    gate = mf.mount.gate
+    g0 = gate.crossings
+    mf.mount.submit([SubmissionEntry("read", (ino, i * 4096, 4096))
+                     for i in range(16)])
+    assert gate.crossings - g0 == 1
+    g0 = gate.crossings
+    for i in range(16):
+        mf.mount.call("read", ino, i * 4096, 4096)
+    assert gate.crossings - g0 == 16
+    mf.close()
+
+
+def test_one_checksum_batch_launch_per_flushed_batch():
+    """A batch of writes + flush commits as ONE journal transaction: one
+    checksum_batch call (one Pallas launch in the kernel binding)."""
+    mf = make_mount("bento", n_blocks=4096)
+    v = mf.view
+    v.write_file("/f", b"z" * (64 * 4096))
+    v.fsync("/f")
+    ks = mf.services
+    for _ in range(3):
+        c0 = ks.counters["checksum_batch_calls"]
+        items = [("/f", i * 4096, b"w" * 4096) for i in range(8)]
+        v.write_many(items, create=False, fsync=True)
+        assert ks.counters["checksum_batch_calls"] - c0 == 1
+    mf.close()
+
+
+def test_bulk_bread_used_by_batched_reads():
+    mf = make_mount("bento", n_blocks=4096)
+    v = mf.view
+    v.write_file("/f", b"r" * (32 * 4096))
+    v.fsync("/f")
+    ks = mf.services
+    b0 = ks.counters["bread_many_calls"]
+    v.read_many([("/f", i * 4096, 4096) for i in range(32)])
+    assert ks.counters["bread_many_calls"] - b0 == 1
+    mf.close()
+
+
+# --- OpGate reentrancy (satellite: nested dispatch during quiesce) --------------
+
+
+def test_opgate_reentrant_enter_does_not_deadlock_against_freeze():
+    gate = OpGate()
+    inner_done = threading.Event()
+    outer_entered = threading.Event()
+    proceed = threading.Event()
+
+    def op():
+        gate.enter()
+        outer_entered.set()
+        proceed.wait(5)
+        gate.enter()   # nested (same thread) — must not block on freeze
+        gate.exit()
+        inner_done.set()
+        gate.exit()
+
+    t = threading.Thread(target=op, daemon=True)
+    t.start()
+    outer_entered.wait(5)
+    frozen = threading.Event()
+
+    def freezer():
+        gate.freeze()
+        frozen.set()
+
+    f = threading.Thread(target=freezer, daemon=True)
+    f.start()
+    time.sleep(0.05)          # freezer is now waiting on the in-flight op
+    proceed.set()
+    assert inner_done.wait(5), "nested enter deadlocked against freeze"
+    assert frozen.wait(5)
+    gate.thaw()
+    t.join(5)
+    f.join(5)
+
+
+def test_nested_mount_call_during_concurrent_upgrade():
+    """An fs op that re-enters Mount.call on the same thread must survive a
+    concurrent upgrade trying to quiesce."""
+    mf = make_mount("bento", n_blocks=4096)
+    v = mf.view
+    v.write_file("/f", b"seed")
+    ino = v.stat("/f").ino
+    m = mf.mount
+    results = []
+
+    def nested_op():
+        def inner():
+            return m.call("read", ino, 0, 4)
+        m.gate.enter()
+        try:
+            time.sleep(0.1)  # let the upgrade start freezing
+            results.append(inner())
+        finally:
+            m.gate.exit()
+
+    t = threading.Thread(target=nested_op, daemon=True)
+    t.start()
+    time.sleep(0.02)
+    upgrade(m, Xv6FileSystem(Xv6Options()))
+    t.join(5)
+    assert not t.is_alive()
+    assert results == [b"seed"]
+    mf.close()
+
+
+# --- upgrade-during-inflight-batch (§4.8 swap guarantee, batched) ---------------
+
+
+def test_upgrade_during_inflight_batch_no_lost_or_duplicated_completions():
+    mf = make_mount("bento", n_blocks=8192)
+    v = mf.view
+    v.write_file("/f", b"d" * (128 * 4096))
+    v.fsync("/f")
+    ino = v.stat("/f").ino
+    m = mf.mount
+    gen0 = m.generation
+    n = 512
+    comps = []
+    started = threading.Event()
+
+    def submitter():
+        entries = [SubmissionEntry("read", (ino, (i % 128) * 4096, 4096),
+                                   user_data=i) for i in range(n)]
+        started.set()
+        comps.extend(m.submit(entries))
+
+    t = threading.Thread(target=submitter, daemon=True)
+    t.start()
+    started.wait(5)
+    stats = upgrade(m, Xv6FileSystem(Xv6Options()))
+    t.join(10)
+    assert not t.is_alive()
+    # exactly one table swap; the batch drained atomically around it
+    assert m.generation == gen0 + 1
+    assert stats["total_s"] < 10
+    # no lost, no duplicated completions; order preserved
+    assert [c.user_data for c in comps] == list(range(n))
+    assert all(c.ok for c in comps)
+    # mount still serves post-upgrade, batched and scalar
+    assert v.read_file("/f", 0, 4) == b"dddd"
+    assert m.submit([SubmissionEntry("statfs", ())])[0].ok
+    mf.close()
+
+
+# --- BentoQueue wrapper ---------------------------------------------------------
+
+
+def test_bento_queue_auto_submit_and_drain():
+    mf = make_mount("bento", n_blocks=4096)
+    v = mf.view
+    v.write_file("/f", b"q" * 4096)
+    ino = v.stat("/f").ino
+    q = BentoQueue(mf.mount, depth=4)
+    for i in range(10):
+        q.prep("read", ino, i, 1, user_data=i)
+    assert len(q) == 2          # 8 auto-submitted in two full batches
+    q.submit()
+    comps = q.drain()
+    assert [c.user_data for c in comps] == list(range(10))
+    assert all(isinstance(c, CompletionEntry) and c.result == b"q"
+               for c in comps)
+    assert q.drain() == []
+    mf.close()
+
+
+# --- transfer_state strict schema (satellite) -----------------------------------
+
+
+def test_transfer_state_enforces_schema():
+    class ModA:
+        NAME, VERSION = "a", 1
+
+        def extract_state(self):
+            return {"w": 1}
+
+        def state_schema(self):
+            return ("w",)
+
+        def restore_state(self, state, from_version):
+            self.got = state
+
+    class ModB(ModA):
+        VERSION = 2
+
+        def state_schema(self):
+            return ("w", "momentum")  # v1 never emitted "momentum"
+
+    with pytest.raises(UpgradeError):
+        transfer_state(ModA(), ModB())
+    # non-strict keeps the old permissive behaviour
+    b = ModB()
+    transfer_state(ModA(), b, strict_schema=False)
+    assert b.got == {"w": 1}
+    # migrate hook can fill the gap — then strict passes
+    b2 = ModB()
+    transfer_state(ModA(), b2,
+                   migrate=lambda s, o, n: {**s, "momentum": 0})
+    assert b2.got == {"w": 1, "momentum": 0}

@@ -5,9 +5,14 @@ import pickle
 import threading
 import time
 
-import hypothesis as hp
-import hypothesis.strategies as st
 import pytest
+
+try:  # optional: property tests skip cleanly when hypothesis is absent
+    import hypothesis as hp
+    import hypothesis.strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core.capability import (CapabilityError, SuperBlockCap,
                                    mint_metrics, mint_superblock)
@@ -88,11 +93,20 @@ def test_take_while_lent_raises():
     assert o.take() == "x"
 
 
-@hp.given(st.lists(st.sampled_from(["s", "m", "end"]), max_size=40))
-@hp.settings(max_examples=60, deadline=None)
-def test_borrow_state_machine(script):
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+def test_borrow_state_machine():
     """Fuzz: Owned must behave exactly like the reference borrow model
     (shared* XOR mutable)."""
+
+    @hp.given(st.lists(st.sampled_from(["s", "m", "end"]), max_size=40))
+    @hp.settings(max_examples=60, deadline=None)
+    def run(script):
+        _check_borrow_script(script)
+
+    run()
+
+
+def _check_borrow_script(script):
     o = Owned(0)
     live = []  # list of (kind, borrow)
     for action in script:

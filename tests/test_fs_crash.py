@@ -5,9 +5,11 @@ recovered content must be the fsync'd version or a *later committed*
 version (group commit may durably commit subsequent writes on its own).
 """
 
-import hypothesis as hp
-import hypothesis.strategies as st
 import pytest
+
+# the whole module is property-based: skip cleanly when hypothesis is absent
+hp = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
 
 from repro.core.services import kernel_binding
 from repro.fs.blockdev import BlockDeviceError, MemBlockDevice
