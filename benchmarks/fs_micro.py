@@ -5,10 +5,14 @@ read  : 4K ops/s + 32K/128K/1M MB/s, sequential+random, 1 and 32 threads
 write : 32K/128K/1M MB/s, seq 1-thread + random 1/32 threads
 create: ops/s, 1/32 threads         delete: ops/s, 1/32 threads
 batched: N-op submission batches through ``Mount.submit`` vs scalar
-         dispatch — reports ops/s for both, the speedup, gate-crossings
-         per batch (must be 1) and checksum_batch launches per flushed
-         write batch (must be 1; run with REPRO_FORCE_PALLAS_CHECKSUM=1
-         to make each launch a real Pallas kernel call).
+         dispatch — 4 KiB reads, flushed writes, batched create/delete
+         (``create_many``/``unlink_many``) and chained create+write+fsync
+         (SQE_LINK). Reports ops/s for both sides, the speedup, gate-
+         crossings per batch (must be 1) and checksum_batch launches per
+         flushed batch (must be 1; run with REPRO_FORCE_PALLAS_CHECKSUM=1
+         to make each launch a real Pallas kernel call). ``--seed`` pins
+         the payload rng for reproducible runs; the counter tripwires
+         assert, so a silent scalar fallback fails the run (CI smoke).
 
 Mount matrix: bento / vfs / fuse / ext4like (repro.fs.mounts). Op counts are
 bounded (not wall-clock bounded like filebench) so the suite stays CPU-
@@ -31,8 +35,8 @@ FILE_MB = 4
 N_THREADS = 32
 
 
-def _mk_file(view, path: str, mb: int) -> None:
-    blob = np.random.default_rng(7).integers(0, 256, mb << 20, dtype=np.uint8)
+def _mk_file(view, path: str, mb: int, seed: int = 7) -> None:
+    blob = np.random.default_rng(seed).integers(0, 256, mb << 20, dtype=np.uint8)
     view.write_file(path, blob.tobytes())
     view.fsync(path)
 
@@ -163,7 +167,8 @@ def bench_delete(kind: str, *, ops_scale: float = 1.0) -> List[Dict]:
 
 def bench_batched(kind: str = "bento", *, batch: int = 128,
                   total_ops: int = 8192, write_batch: int = 16,
-                  n_write_batches: int = 32) -> List[Dict]:
+                  n_write_batches: int = 32, meta_ops: int = 512,
+                  meta_batch: int = 64, seed: int = 7) -> List[Dict]:
     """Batched submission vs scalar dispatch (the BentoQueue tentpole).
 
     4KiB-read microbenchmark: ``total_ops`` sequential 4 KiB reads of a
@@ -171,12 +176,16 @@ def bench_batched(kind: str = "bento", *, batch: int = 128,
     submissions (one gate-crossing each). Then a batched-write mode:
     ``write_batch`` 4 KiB writes + one flush per submission — the flush
     commits the whole batch as ONE journal transaction, i.e. one
-    checksum_batch launch per batch.
+    checksum_batch launch per batch. Then the metadata modes: batched
+    create/delete (``create_many``/``unlink_many``, one submission and one
+    directory scan per ``meta_batch`` names) and chained
+    create+write+fsync (SQE_LINK triples, one flush commit per batch) —
+    each against its scalar-loop twin.
     """
     rows: List[Dict] = []
     mf = make_mount(kind, n_blocks=16384)
     v = mf.view
-    _mk_file(v, "/readfile", FILE_MB)
+    _mk_file(v, "/readfile", FILE_MB, seed=seed)
     size = 4096
     n_off = (FILE_MB << 20) // size
     gate = getattr(mf.mount, "gate", None)
@@ -226,6 +235,88 @@ def bench_batched(kind: str = "bento", *, batch: int = 128,
             "batched_ops_per_s": n_write_batches * write_batch / batched_w_s,
             "checksum_batch_per_flush": launches / n_write_batches,
         })
+
+    # --- batched create/delete: create_many / unlink_many vs scalar loops ----
+    v.makedirs("/cs")
+    v.makedirs("/cb")
+    t0 = time.perf_counter()
+    for i in range(meta_ops):
+        v.create(f"/cs/f{i:06d}")
+    v.fsync("/cs")
+    scalar_c_s = time.perf_counter() - t0
+    n_meta_batches = max(1, meta_ops // meta_batch)
+    g0 = gate.crossings if gate else 0
+    t0 = time.perf_counter()
+    for b in range(n_meta_batches):
+        v.create_many([f"/cb/f{b * meta_batch + i:06d}"
+                       for i in range(meta_batch)])
+    v.fsync("/cb")
+    batched_c_s = time.perf_counter() - t0
+    # one create_many submission per batch + the trailing fsync crossing
+    create_crossings = ((gate.crossings - g0 - 1) / n_meta_batches
+                        if gate else None)
+    rows.append({
+        "bench": "batched_create", "fs": kind, "batch": meta_batch,
+        "scalar_ops_per_s": meta_ops / scalar_c_s,
+        "batched_ops_per_s": n_meta_batches * meta_batch / batched_c_s,
+        "speedup": (n_meta_batches * meta_batch / batched_c_s)
+        / (meta_ops / scalar_c_s),
+        "gate_crossings_per_batch": create_crossings,
+    })
+
+    t0 = time.perf_counter()
+    for i in range(meta_ops):
+        v.unlink(f"/cs/f{i:06d}")
+    scalar_d_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for b in range(n_meta_batches):
+        v.unlink_many([f"/cb/f{b * meta_batch + i:06d}"
+                       for i in range(meta_batch)])
+    batched_d_s = time.perf_counter() - t0
+    rows.append({
+        "bench": "batched_delete", "fs": kind, "batch": meta_batch,
+        "scalar_ops_per_s": meta_ops / scalar_d_s,
+        "batched_ops_per_s": n_meta_batches * meta_batch / batched_d_s,
+        "speedup": (n_meta_batches * meta_batch / batched_d_s)
+        / (meta_ops / scalar_d_s),
+    })
+
+    # --- chained create+write+fsync: SQE_LINK pairs + one flush commit per
+    # batch. Chain batches are sized to fit ONE journal transaction (every
+    # file's create+write lands in the same group commit — that is the
+    # crash-atomicity unit: ~1 data + shared meta blocks per file must stay
+    # under the journal's 0.75*capacity commit threshold), so the flush is
+    # the only checksum launch.
+    chain_batch = min(32, meta_batch)
+    n_chain_batches = max(1, meta_ops // chain_batch)
+    v.makedirs("/ks")
+    v.makedirs("/kb")
+    payload = b"p" * 1024
+    t0 = time.perf_counter()
+    for i in range(meta_ops):
+        path = f"/ks/f{i:06d}"
+        v.create(path)
+        v.write_file(path, payload, create=False)
+        v.fsync(path)
+    scalar_k_s = time.perf_counter() - t0
+    ks = mf.services
+    c0 = ks.counters["checksum_batch_calls"] if ks else 0
+    t0 = time.perf_counter()
+    for b in range(n_chain_batches):
+        v.create_and_write_many(
+            [(f"/kb/f{b * chain_batch + i:06d}", payload)
+             for i in range(chain_batch)], fsync=True)
+    chained_s = time.perf_counter() - t0
+    launches_per_batch = ((ks.counters["checksum_batch_calls"] - c0)
+                          / n_chain_batches if ks else None)
+    rows.append({
+        "bench": "chained_cwf", "fs": kind, "batch": chain_batch,
+        "scalar_ops_per_s": meta_ops / scalar_k_s,
+        "batched_ops_per_s": n_chain_batches * chain_batch / chained_s,
+        "speedup": (n_chain_batches * chain_batch / chained_s)
+        / (meta_ops / scalar_k_s),
+        "checksum_batch_per_flush": launches_per_batch,
+    })
     mf.close()
     return rows
 
@@ -250,30 +341,48 @@ def main() -> None:
                     help="mount kind for --batched (default: bento)")
     ap.add_argument("--batch", type=int, default=128)
     ap.add_argument("--total-ops", type=int, default=8192)
+    ap.add_argument("--seed", type=int, default=7,
+                    help="rng seed for benchmark payloads (reproducibility)")
     ap.add_argument("--quick", action="store_true")
     args = ap.parse_args()
     if args.batched:
         if args.batch <= 0 or args.total_ops < args.batch:
             ap.error("--batch must be positive and <= --total-ops")
-        rows = bench_batched(args.kind, batch=args.batch,
-                             total_ops=args.total_ops)
+        total_ops = args.total_ops // 4 if args.quick else args.total_ops
+        batch = min(args.batch, total_ops)  # --quick shrinks ops, not args
+        meta_ops = 128 if args.quick else 512
+        rows = bench_batched(args.kind, batch=batch, total_ops=total_ops,
+                             meta_ops=meta_ops,
+                             meta_batch=min(64, meta_ops), seed=args.seed)
         for r in rows:
-            if r["bench"] == "batched_read":
-                print(f"batched_read/{r['fs']}/batch{r['batch']}: "
-                      f"scalar {r['scalar_ops_per_s']:.0f} ops/s, "
-                      f"batched {r['batched_ops_per_s']:.0f} ops/s, "
-                      f"speedup {r['speedup']:.2f}x, "
-                      f"gate crossings/batch {r['gate_crossings_per_batch']}")
+            line = f"{r['bench']}/{r['fs']}/batch{r['batch']}:"
+            if "scalar_ops_per_s" in r:
+                line += (f" scalar {r['scalar_ops_per_s']:.0f} ops/s,"
+                         f" batched {r['batched_ops_per_s']:.0f} ops/s,"
+                         f" speedup {r['speedup']:.2f}x")
             else:
-                print(f"batched_write/{r['fs']}/batch{r['batch']}: "
-                      f"{r['batched_ops_per_s']:.0f} ops/s, "
-                      f"checksum_batch launches/flush "
-                      f"{r['checksum_batch_per_flush']:.2f}")
-        read = next(r for r in rows if r["bench"] == "batched_read")
-        assert read["gate_crossings_per_batch"] in (None, 1.0), \
-            "batched submission must cross the gate exactly once per batch"
-        if read["speedup"] < 2.0:
-            print(f"WARNING: speedup {read['speedup']:.2f}x below the 2x target")
+                line += f" {r['batched_ops_per_s']:.0f} ops/s"
+            if r.get("gate_crossings_per_batch") is not None:
+                line += (f", gate crossings/batch "
+                         f"{r['gate_crossings_per_batch']:.2f}")
+            if r.get("checksum_batch_per_flush") is not None:
+                line += (f", checksum_batch launches/flush "
+                         f"{r['checksum_batch_per_flush']:.2f}")
+            print(line)
+        # perf-path bitrot tripwires (CI runs this with --quick): a silent
+        # fall-back to scalar dispatch shows up as extra gate crossings or
+        # extra checksum launches and must fail loudly, not just slow down.
+        for r in rows:
+            c = r.get("gate_crossings_per_batch")
+            assert c is None or c == 1.0, \
+                f"{r['bench']}: {c} gate crossings/batch (expected 1)"
+            c = r.get("checksum_batch_per_flush")
+            assert c is None or c == 1.0, \
+                f"{r['bench']}: {c} checksum_batch launches/flush (expected 1)"
+        slow = [r for r in rows if r.get("speedup", 99) < 1.5]
+        for r in slow:
+            print(f"WARNING: {r['bench']} speedup {r['speedup']:.2f}x "
+                  f"below the 1.5x target")
     else:
         for r in run_all(quick=args.quick):
             print(r)

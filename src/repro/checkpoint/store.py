@@ -21,6 +21,7 @@ from typing import Any, Dict, Optional
 import jax
 import numpy as np
 
+from repro.core.interface import FsError
 from repro.fs.posix import PosixView
 
 MANIFEST = "manifest.json"
@@ -74,12 +75,37 @@ def save(view: PosixView, root: str, tree, *, step: int,
         if len(items) >= _BATCH_LEAVES or pending_bytes >= _BATCH_BYTES:
             view.write_many(items)
             items, pending_bytes = [], 0
+    # The manifest is the commit point, enforced by linked chains: the
+    # final leaf batch is a chain (ordered, stop-at-first-failure — a
+    # failure raises its real errno before the manifest is ever created),
+    # then the manifest's own create→write→flush chain commits everything
+    # (one journal transaction covers both submissions' pending blocks, so
+    # the whole final batch is still one checksum launch). A crash before
+    # that flush leaves no manifest at all — the aborted save is invisible
+    # to latest_step — because the manifest file is not created until every
+    # leaf write has succeeded. This replaces the old write-then-fsync
+    # manual ordering with a boundary-enforced one.
+    manifest_path = f"{root}/{MANIFEST}"
+    raw_manifest = json.dumps(manifest).encode()
     if items:
-        view.write_many(items)
-    # manifest last: the commit point (journal makes it atomic)
-    view.write_file(f"{root}/{MANIFEST}",
-                    json.dumps(manifest).encode())
-    view.fsync(f"{root}/{MANIFEST}")
+        view.write_many(items, chain=True)
+    try:
+        if view.exists(manifest_path):  # re-save over an old checkpoint
+            view.write_many([(manifest_path, raw_manifest)],
+                            fsync=True, chain=True)
+        else:
+            view.create_and_write_many([(manifest_path, raw_manifest)],
+                                       fsync=True)
+    except FsError:
+        # a manifest created whose WRITE then failed is an empty husk —
+        # remove it so the aborted save is indistinguishable from no save
+        try:
+            if view.exists(manifest_path) \
+                    and view.stat(manifest_path).size == 0:
+                view.unlink(manifest_path)
+        except FsError:
+            pass
+        raise
     return manifest
 
 
@@ -122,14 +148,17 @@ def load(view: PosixView, root: str, like_tree, *, checksum=None,
 
 
 def latest_step(view: PosixView, base: str) -> Optional[int]:
+    """Newest step with a PARSEABLE manifest — an empty or torn manifest
+    (crash inside the save's final commit window) is treated as no
+    checkpoint, so restart falls back to the previous good step."""
     if not view.exists(base):
         return None
     steps = []
     for name in view.listdir(base):
         if name.startswith("step_"):
             try:
-                if view.exists(f"{base}/{name}/{MANIFEST}"):
-                    steps.append(int(name.split("_")[1]))
-            except (ValueError, IndexError):
+                json.loads(view.read_file(f"{base}/{name}/{MANIFEST}"))
+                steps.append(int(name.split("_")[1]))
+            except (FsError, ValueError, IndexError):
                 continue
     return max(steps) if steps else None

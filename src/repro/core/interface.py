@@ -32,6 +32,22 @@ scalar ops with per-entry errno capture, so every module is batchable;
 modules that can do better (vectorized reads that hit the buffer cache
 once, one journal transaction per batch, one Pallas checksum launch per
 commit) override it — see ``repro.fs.xv6``.
+
+Entries may also be *chained*, io_uring ``IOSQE_LINK`` style: an entry
+whose ``flags`` carry ``SQE_LINK`` links the NEXT entry into its chain, so
+entry N+1 runs only if entry N completed without an errno. The first
+failure in a chain cancels every remaining member, which complete with
+``Errno.ECANCELED`` (never silently dropped — one completion per
+submission always holds). Chain semantics live ABOVE ``submit_batch``, in
+``execute_batch``: dispatch layers (``Mount.submit``, the VFS-direct
+baseline, the FUSE daemon) route batches through it, modules never see the
+flags. A chained entry may use ``PrevResult`` placeholders in its args to
+consume an earlier chain member's result (e.g. the ino of a just-created
+file: create → write(PrevResult("ino"), ...) → fsync), the io_uring
+fixed-file trick generalized to plain values. Because a whole submission
+executes under ONE gate crossing (see ``repro.core.registry``), an online
+upgrade's table swap can never land between two members of a chain: chains
+are atomic with respect to module generations, like batches (§4.8).
 """
 
 from __future__ import annotations
@@ -56,6 +72,7 @@ class Errno(enum.IntEnum):
     ENOSPC = 28
     ENOTEMPTY = 39
     ESTALE = 116
+    ECANCELED = 125  # chained entry cancelled: an earlier link failed
 
 
 class FsError(Exception):
@@ -97,10 +114,32 @@ BATCHABLE_OPS = frozenset({
 })
 
 
+# SubmissionEntry.flags bits (io_uring IOSQE_* analogues).
+SQE_LINK = 0x1  # link the NEXT entry into this entry's chain
+
+
+@dataclasses.dataclass(frozen=True)
+class PrevResult:
+    """Placeholder argument inside a *chained* entry: replaced at execution
+    time by the result of the chain member ``back`` entries earlier (1 =
+    the immediately preceding entry). ``attr`` optionally projects a named
+    attribute of that result (e.g. ``PrevResult("ino")`` after a create).
+
+    Only ``execute_batch`` resolves these, and only inside a chain; a
+    placeholder that reaches dispatch unresolved (unchained entry, or
+    ``back`` pointing before the chain start) completes with ``EINVAL``.
+    The referenced member always succeeded — a failed link would already
+    have cancelled this entry."""
+
+    attr: Optional[str] = None
+    back: int = 1
+
+
 @dataclasses.dataclass(slots=True)
 class SubmissionEntry:
-    """One SQE: which op, its plain-value args, and an opaque cookie the
-    caller uses to match the completion (never interpreted by the fs).
+    """One SQE: which op, its plain-value args, an opaque cookie the
+    caller uses to match the completion (never interpreted by the fs), and
+    link flags (``SQE_LINK`` chains the next entry — see ``execute_batch``).
 
     Treat as immutable once submitted (not ``frozen=True`` only because a
     frozen __init__ costs ~3x on the hot path — batches are built in
@@ -110,6 +149,7 @@ class SubmissionEntry:
     args: Tuple[Any, ...] = ()
     kwargs: Optional[Dict[str, Any]] = None  # None == {} (skips an alloc)
     user_data: Any = None
+    flags: int = 0
 
 
 @dataclasses.dataclass(slots=True)
@@ -130,6 +170,87 @@ class CompletionEntry:
         if self.errno is not None:
             raise FsError(self.errno, f"batched {self.user_data!r}")
         return self.result
+
+
+def split_chains(entries: List["SubmissionEntry"]
+                 ) -> List[Tuple[bool, List["SubmissionEntry"]]]:
+    """Group a batch into ``(is_chain, members)`` runs. A chain is a
+    maximal run of SQE_LINK entries plus the first entry after them (the
+    chain's tail); a trailing SQE_LINK at batch end simply ends the chain
+    there, like an io_uring link that reaches the submit boundary."""
+    groups: List[Tuple[bool, List[SubmissionEntry]]] = []
+    i, n = 0, len(entries)
+    while i < n:
+        j = i
+        if entries[i].flags & SQE_LINK:
+            while j < n and entries[j].flags & SQE_LINK:
+                j += 1
+            j = min(j + 1, n)  # include the tail entry
+            groups.append((True, entries[i:j]))
+        else:
+            while j < n and not (entries[j].flags & SQE_LINK):
+                j += 1
+            groups.append((False, entries[i:j]))
+        i = j
+    return groups
+
+
+def _resolve_placeholders(entry: "SubmissionEntry",
+                          done: List["CompletionEntry"]):
+    """Substitute PrevResult args from the chain's completions so far.
+    Returns a substituted entry, or a CompletionEntry(EINVAL) when a
+    placeholder is unresolvable (bad ``back`` / missing attribute)."""
+    def sub(v):
+        if not isinstance(v, PrevResult):
+            return v
+        if v.back < 1 or v.back > len(done):
+            raise LookupError(f"PrevResult back={v.back} escapes the chain")
+        r = done[-v.back].result
+        return getattr(r, v.attr) if v.attr else r
+
+    try:
+        args = tuple(sub(a) for a in entry.args)
+        kwargs = ({k: sub(v) for k, v in entry.kwargs.items()}
+                  if entry.kwargs else None)
+    except (LookupError, AttributeError):
+        return CompletionEntry(entry.user_data, errno=Errno.EINVAL)
+    if args == entry.args and kwargs == entry.kwargs:
+        return entry
+    return SubmissionEntry(entry.op, args, kwargs, entry.user_data,
+                           entry.flags)
+
+
+def execute_batch(submit_batch, entries) -> List["CompletionEntry"]:
+    """Chain-aware batch executor — the one implementation of SQE_LINK.
+
+    Unchained runs go to ``submit_batch`` whole, keeping the module's
+    vectorized fast paths; chained runs execute member-by-member (each
+    member may depend on the previous one's result via ``PrevResult``),
+    and the first failing member cancels the rest of its chain with
+    ``ECANCELED``. Callers hold whatever gate/lock makes the whole batch
+    atomic — this function never re-enters dispatch."""
+    if not isinstance(entries, list):
+        entries = list(entries)
+    if not any(e.flags & SQE_LINK for e in entries):
+        return submit_batch(entries)  # fast path: no chains staged
+    comps: List[CompletionEntry] = []
+    for is_chain, group in split_chains(entries):
+        if not is_chain:
+            comps.extend(submit_batch(group))
+            continue
+        done: List[CompletionEntry] = []
+        for e in group:
+            if done and not done[-1].ok:
+                done.append(CompletionEntry(e.user_data,
+                                            errno=Errno.ECANCELED))
+                continue
+            resolved = _resolve_placeholders(e, done)
+            if isinstance(resolved, CompletionEntry):
+                done.append(resolved)
+            else:
+                done.append(submit_batch([resolved])[0])
+        comps.extend(done)
+    return comps
 
 
 class BentoModule(abc.ABC):
@@ -228,7 +349,13 @@ class BentoFilesystem(BentoModule):
     def _entry_fits(self, op: str, args, kwargs) -> bool:
         """Does (args, kwargs) form a well-shaped call of ``op``? Checked
         BEFORE dispatch: arity/keywords via the cached signature, plus the
-        per-op basic value shapes above."""
+        per-op basic value shapes above. An unresolved ``PrevResult``
+        placeholder (legal only inside a chain, where ``execute_batch``
+        substitutes it before dispatch) never fits."""
+        if any(isinstance(a, PrevResult) for a in args) or \
+                (kwargs and any(isinstance(v, PrevResult)
+                                for v in kwargs.values())):
+            return False
         key = (type(self), op)
         sig = self._SIG_CACHE.get(key)
         if sig is None:

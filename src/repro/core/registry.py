@@ -32,7 +32,8 @@ import threading
 from typing import Any, Callable, Deque, Dict, Iterable, List, Optional
 
 from repro.core.interface import (BentoFilesystem, CompletionEntry, Errno,
-                                  FsError, SubmissionEntry)
+                                  FsError, SQE_LINK, SubmissionEntry,
+                                  execute_batch)
 
 _FS_REGISTRY: Dict[str, Callable[[], BentoFilesystem]] = {}
 
@@ -142,13 +143,17 @@ class Mount:
 
         The table is read once after entering the gate, so every entry of
         the batch executes against the same module generation even if an
-        upgrade is waiting to swap it (it drains this batch first).
+        upgrade is waiting to swap it (it drains this batch first). Chained
+        entries (SQE_LINK) are grouped and executed by ``execute_batch``
+        inside the same single crossing, so a table swap can never land
+        between two members of a chain either — a chain's completions all
+        come from one module generation.
         """
         if not isinstance(entries, list):
             entries = list(entries)
         self.gate.enter()
         try:
-            return self.table["submit_batch"](entries)
+            return execute_batch(self.table["submit_batch"], entries)
         finally:
             self.gate.exit()
 
@@ -186,10 +191,16 @@ class BentoQueue:
         self._sq: List[SubmissionEntry] = []
         self._cq: Deque[CompletionEntry] = collections.deque()
 
-    def prep(self, op: str, *args, user_data: Any = None, **kwargs) -> None:
-        """Stage one submission; auto-submits a full queue."""
-        self._sq.append(SubmissionEntry(op, args, kwargs or None, user_data))
-        if len(self._sq) >= self.depth:
+    def prep(self, op: str, *args, user_data: Any = None, flags: int = 0,
+             **kwargs) -> None:
+        """Stage one submission; auto-submits a full queue. Pass
+        ``flags=SQE_LINK`` to chain the NEXT prepped entry onto this one;
+        auto-submit is deferred while a chain is open (a link must never be
+        severed by a batch boundary — an explicit ``submit`` mid-chain,
+        like io_uring's, ends the chain at the boundary instead)."""
+        self._sq.append(SubmissionEntry(op, args, kwargs or None, user_data,
+                                        flags))
+        if len(self._sq) >= self.depth and not (flags & SQE_LINK):
             self.submit()
 
     def submit(self) -> int:

@@ -202,6 +202,14 @@ class Ext4LikeFileSystem(Xv6FileSystem):
                     del idx[name]
                     break
 
+    def _dir_scan_state(self, dino: int, pdi) -> Dict:
+        """Batched-metadata dir state — the LIVE hash index itself, so the
+        batch's inserts/removes keep it current with zero extra scans
+        (bulk dirindex maintenance). ``holes`` is None: this fs's scalar
+        ``_dirlink`` always appends, and the batch must place dirents the
+        same way."""
+        return {"names": self._index(dino, pdi), "holes": None}
+
     # --- batched fast paths ------------------------------------------------------------------
     # read_many is inherited from Xv6FileSystem (already vectorized); the
     # overrides below add what the dir index and write coalescing buy a

@@ -26,7 +26,7 @@ import threading
 import time
 from typing import Any, Optional
 
-from repro.core.interface import Errno, FsError
+from repro.core.interface import Errno, FsError, execute_batch
 
 _FS_OPS = ("getattr", "lookup", "create", "mkdir", "unlink", "rmdir", "rename",
            "readdir", "read", "write", "truncate", "fsync", "flush", "statfs")
@@ -90,7 +90,13 @@ def serve(sock_path: str, backing_path: str, n_blocks: int, fs_kind: str) -> Non
                     dev.sync()
                     _send(conn, ("ok", None))
                     continue
-                res = getattr(fs, op)(*args, **kw)
+                if op == "submit_batch":
+                    # chains (SQE_LINK) execute daemon-side: grouping,
+                    # cancellation and PrevResult substitution all happen
+                    # here, so a chained batch still costs ONE round trip.
+                    res = execute_batch(fs.submit_batch, args[0])
+                else:
+                    res = getattr(fs, op)(*args, **kw)
                 if op == "submit_batch" and any(
                         e.op in ("fsync", "flush") for e in args[0]):
                     dev.sync()  # same whole-file sync penalty, once per batch

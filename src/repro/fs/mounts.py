@@ -15,6 +15,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable, Dict
 
+from repro.core.interface import execute_batch
 from repro.core.registry import Mount, mount as bento_mount
 from repro.core.services import kernel_binding, userspace_binding
 from repro.fs.blockdev import MemBlockDevice
@@ -43,8 +44,9 @@ class DirectMount:
 
     def submit(self, entries):
         # Same batched surface as Mount.submit, minus the gate (this is the
-        # no-discipline baseline): the fs still gets its vectorized paths.
-        return self.module.submit_batch(list(entries))
+        # no-discipline baseline): the fs still gets its vectorized paths
+        # and chains (SQE_LINK) keep their cancel-on-failure semantics.
+        return execute_batch(self.module.submit_batch, list(entries))
 
     def unmount(self) -> None:
         self.module.flush()

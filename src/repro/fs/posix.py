@@ -8,19 +8,27 @@ Two call surfaces share the dentry cache:
 
 * scalar calls (``read_file``, ``write_file``, ``stat``, …) — unchanged:
   one gate-crossing and one dispatch per operation;
-* plural forms (``read_many`` / ``write_many`` / ``stat_many``) — resolve
+* plural forms (``read_many`` / ``write_many`` / ``stat_many`` /
+  ``create_many`` / ``unlink_many`` / ``create_and_write_many``) — resolve
   paths through the dentry cache, then cross the module boundary ONCE per
   batch via ``mount.submit`` (preadv/pwritev over io_uring). Per-entry
   failures come back as in-list ``FsError`` values when ``strict=False``;
-  by default the first failure raises, matching the scalar API.
+  by default a failure raises, matching the scalar API (after the whole
+  batch ran — the batched forms never stop halfway through a submission).
+
+Path walking in the plural forms is batched too: every path advances one
+component per round, and each round's dentry-cache MISSES are resolved
+with a single ``lookup`` submission (one gate crossing per dcache-miss
+level, instead of one per missing component per path). Cache hits never
+cross the boundary, so a warm walk still costs zero submissions.
 """
 
 from __future__ import annotations
 
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
-from repro.core.interface import (Attr, Errno, FsError, ROOT_INO,
-                                  SubmissionEntry)
+from repro.core.interface import (Attr, Errno, FsError, PrevResult, ROOT_INO,
+                                  SQE_LINK, SubmissionEntry)
 
 
 class PosixView:
@@ -171,31 +179,104 @@ class PosixView:
 
     def _walk_many(self, paths: Sequence[str], *, strict: bool,
                    create: bool = False) -> List:
-        """Resolve each path to an ino, walking repeats once. In strict
-        mode walk failures raise (matching the scalar API); otherwise the
-        failing slot holds its FsError and the rest proceed."""
-        walked: Dict[str, Union[int, FsError]] = {}
-        out: List = []
-        for p in paths:
-            r = walked.get(p)
-            if r is None:
-                try:
-                    r = self._walk(p)
-                except FsError as e:
-                    if e.errno == Errno.ENOENT and create:
-                        try:
-                            r = self.create(p).ino
-                        except FsError as e2:
-                            if strict:
-                                raise
-                            r = e2
-                    elif strict:
-                        raise
-                    else:
-                        r = e
-                walked[p] = r
-            out.append(r)
-        return out
+        """Resolve each path to an ino with a *batched* walk, repeats
+        walked once. All paths advance one component per round; a round's
+        dcache misses become ONE ``lookup`` submission (scalar fallback
+        never happens — a cold walk of N paths costs one submission per
+        tree level, not one per component). With ``create=True``, final-
+        component ENOENT misses become one trailing ``create`` batch,
+        riding the fs's vectorized create path. In strict mode the first
+        failing path's error raises — after the batch's walk and creates
+        completed (the batched forms never stop mid-submission); otherwise
+        the failing slot holds its FsError and the rest proceed."""
+        uniq = list(dict.fromkeys(paths))
+        parts = {p: self._parts(p) for p in uniq}
+        res: Dict[str, Union[int, FsError]] = {}
+        cur = {p: ROOT_INO for p in uniq}
+        pending = list(uniq)
+        level = 0
+        while pending:
+            nxt = []
+            for p in pending:
+                if len(parts[p]) == level:
+                    res[p] = cur[p]
+                else:
+                    nxt.append(p)
+            pending = nxt
+            if not pending:
+                break
+            # dcache pass for this level; misses grouped by (parent, name)
+            need: Dict[Tuple[int, str], List[str]] = {}
+            for p in pending:
+                key = (cur[p], parts[p][level])
+                hit = self._dcache.get(key) if self._use_dcache else None
+                if hit is not None:
+                    cur[p] = hit
+                else:
+                    need.setdefault(key, []).append(p)
+            if need:
+                comps = self.m.submit(
+                    [SubmissionEntry("lookup", k, user_data=k) for k in need])
+                to_create: Dict[Tuple[int, str], List[str]] = {}
+                for c in comps:
+                    key = c.user_data
+                    if c.ok:
+                        ino = c.result.ino
+                        if self._use_dcache:
+                            self._dcache[key] = ino
+                        for p in need[key]:
+                            cur[p] = ino
+                        continue
+                    for p in need[key]:
+                        if (create and c.errno == Errno.ENOENT
+                                and len(parts[p]) == level + 1):
+                            to_create.setdefault(key, []).append(p)
+                        else:
+                            res[p] = FsError(c.errno, key[1])
+                if to_create:
+                    ccomps = self.m.submit(
+                        [SubmissionEntry("create", k, user_data=k)
+                         for k in to_create])
+                    for c in ccomps:
+                        key = c.user_data
+                        if c.ok:
+                            ino = c.result.ino
+                            if self._use_dcache:
+                                self._dcache[key] = ino
+                            for p in to_create[key]:
+                                cur[p] = ino
+                        else:
+                            for p in to_create[key]:
+                                res[p] = FsError(c.errno, key[1])
+                pending = [p for p in pending if p not in res]
+            level += 1
+        if strict:
+            for p in paths:
+                if isinstance(res[p], FsError):
+                    raise res[p]
+        return [res[p] for p in paths]
+
+    def _split_many(self, paths: Sequence[str], *, strict: bool) -> List:
+        """Batched ``_split``: resolve every path's parent directory with
+        one batched walk. Returns (parent_ino | FsError, name) per path."""
+        pairs: List = [None] * len(paths)
+        walk_idx: List[int] = []
+        walk_paths: List[str] = []
+        for i, p in enumerate(paths):
+            parts = self._parts(p)
+            if not parts:
+                err = FsError(Errno.EINVAL, p)
+                if strict:
+                    raise err
+                pairs[i] = (err, None)
+            else:
+                walk_idx.append(i)
+                walk_paths.append("/".join(parts[:-1]))
+                pairs[i] = (None, parts[-1])
+        resolved = self._walk_many(walk_paths, strict=strict)
+        for i, r in zip(walk_idx, resolved):
+            pairs[i] = (r, pairs[i][1])
+        return pairs
 
     def _submit_sparse(self, resolved: List, entry_for, strict: bool) -> List:
         """Submit entries for the slots that resolved; failed slots keep
@@ -252,28 +333,143 @@ class PosixView:
     def write_many(self, items: Sequence[Union[Tuple[str, bytes],
                                                Tuple[str, int, bytes]]],
                    *, create: bool = True, fsync: bool = False,
-                   strict: bool = True) -> List:
+                   strict: bool = True, chain: bool = False) -> List:
         """Write many (path, data) / (path, off, data) items in one
         submission; with ``fsync=True`` a trailing flush entry commits the
-        whole batch as one journal transaction (one checksum launch)."""
+        whole batch as one journal transaction (one checksum launch).
+
+        ``chain=True`` links every entry (SQE_LINK): writes execute in
+        order and stop at the first failure — the rest complete
+        ``ECANCELED``, and the trailing flush (when ``fsync``) is the chain
+        tail, so nothing commits unless EVERY write succeeded (the
+        checkpoint store's leaf-writes→manifest-commit ordering). A
+        cancelled flush raises the first failing member's real errno in
+        strict mode; with ``strict=False`` the per-entry slots tell the
+        story (FsError / ECANCELED values) and nothing raises. Chained
+        execution is member-by-member, so it trades the coalescing fast
+        path for the ordering guarantee."""
         norm = [(it[0], 0, it[1]) if len(it) == 2 else it for it in items]
         resolved = self._walk_many([p for p, _, _ in norm], strict=strict,
                                    create=create)
         idxs = [i for i, r in enumerate(resolved)
                 if not isinstance(r, FsError)]
+        flags = SQE_LINK if chain else 0
         entries = [SubmissionEntry("write",
                                    (resolved[i], norm[i][1], norm[i][2]),
-                                   user_data=norm[i][0]) for i in idxs]
+                                   user_data=norm[i][0], flags=flags)
+                   for i in idxs]
         if fsync:
             entries.append(SubmissionEntry("flush", (), user_data="<flush>"))
         comps = self.m.submit(entries)
         if fsync:
-            comps[-1].unwrap()  # a failed commit is never ignorable
+            flush = comps[-1]
             comps = comps[:-1]
+            if flush.errno == Errno.ECANCELED:
+                # the chain stopped before the commit — that is requested
+                # behaviour, not a commit failure. strict: surface the ROOT
+                # cause (the first failing member), never the cancellation;
+                # strict=False: the per-entry results carry the story.
+                if strict:
+                    for c in comps:
+                        if c.errno not in (None, Errno.ECANCELED):
+                            raise FsError(c.errno, str(c.user_data))
+            else:
+                flush.unwrap()  # a genuinely failed commit is never ignorable
         results = self._unwrap(comps, strict)
         out = list(resolved)
         for i, res in zip(idxs, results):
             out[i] = res
+        return out
+
+    def _meta_many(self, op: str, paths: Sequence[str], strict: bool,
+                   on_success) -> List:
+        """Shared body of the batched metadata forms: batched parent walk,
+        ONE ``op`` submission, per-success dcache action, merged results."""
+        pairs = self._split_many(paths, strict=strict)
+        idxs = [i for i, (parent, _) in enumerate(pairs)
+                if not isinstance(parent, FsError)]
+        comps = self.m.submit(
+            [SubmissionEntry(op, (pairs[i][0], pairs[i][1]),
+                             user_data=paths[i]) for i in idxs]) \
+            if idxs else []
+        for i, c in zip(idxs, comps):
+            if c.ok:
+                on_success(pairs[i][0], pairs[i][1], c.result)
+        results = self._unwrap(comps, strict)
+        out = [p if isinstance(p, FsError) else None for p, _ in pairs]
+        for i, r in zip(idxs, results):
+            out[i] = r
+        return out
+
+    def create_many(self, paths: Sequence[str], *, strict: bool = True) -> List:
+        """Create many files: one batched parent walk, then ONE ``create``
+        submission riding the fs's vectorized create path (one gate
+        crossing, one directory scan per touched parent). Returns the new
+        Attr per slot."""
+        def cache(parent, name, attr):
+            if self._use_dcache:
+                self._dcache[(parent, name)] = attr.ino
+        return self._meta_many("create", paths, strict, cache)
+
+    def unlink_many(self, paths: Sequence[str], *, strict: bool = True) -> List:
+        """Unlink many paths: one batched parent walk, then ONE ``unlink``
+        submission (the fs scans each touched directory once for the whole
+        batch). Slots hold None on success."""
+        return self._meta_many(
+            "unlink", paths, strict,
+            lambda parent, name, _res: self._invalidate(parent, name))
+
+    def create_and_write_many(self, items: Sequence[Tuple[str, bytes]],
+                              *, fsync: bool = False,
+                              strict: bool = True) -> List:
+        """Chained create→write per (path, data) item, all in ONE
+        submission: each item's write is linked onto its create (SQE_LINK)
+        and consumes the fresh ino via ``PrevResult("ino")`` — if the
+        create fails, the write completes ECANCELED instead of running.
+        With ``fsync=True`` one trailing (unchained) flush entry commits
+        every item as ONE journal transaction — one checksum_batch launch
+        for the whole batch, the batched analogue of per-file
+        create+write+fsync. Returns bytes-written per item; a failed
+        item's slot holds its first failing member's FsError."""
+        paths = [p for p, _ in items]
+        pairs = self._split_many(paths, strict=strict)
+        idxs = [i for i, (parent, _) in enumerate(pairs)
+                if not isinstance(parent, FsError)]
+        entries: List[SubmissionEntry] = []
+        for i in idxs:
+            parent, name = pairs[i]
+            entries.append(SubmissionEntry("create", (parent, name),
+                                           user_data=(i, "create"),
+                                           flags=SQE_LINK))
+            entries.append(SubmissionEntry("write",
+                                           (PrevResult("ino"), 0,
+                                            items[i][1]),
+                                           user_data=(i, "write")))
+        if fsync and entries:
+            entries.append(SubmissionEntry("flush", (), user_data="<flush>"))
+        comps = self.m.submit(entries) if entries else []
+        if fsync and entries:
+            comps[-1].unwrap()
+            comps = comps[:-1]
+        out: List = [p if isinstance(p, FsError) else None
+                     for p, _ in pairs]
+        for c in comps:
+            i, stage = c.user_data
+            if stage == "create":
+                if c.ok:
+                    if self._use_dcache:
+                        self._dcache[(pairs[i][0], pairs[i][1])] = \
+                            c.result.ino
+                else:
+                    out[i] = FsError(c.errno, paths[i])
+            elif c.ok:  # write
+                out[i] = c.result
+            elif not isinstance(out[i], FsError):
+                out[i] = FsError(c.errno, paths[i])
+        if strict:
+            for r in out:
+                if isinstance(r, FsError):
+                    raise r
         return out
 
     def stat_many(self, paths: Sequence[str], *, strict: bool = True) -> List:

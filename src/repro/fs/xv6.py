@@ -294,7 +294,9 @@ class Xv6FileSystem(BentoFilesystem):
     # carry FsError values in failing slots (per-entry errno isolation).
 
     _MANY_OPS = {"read": "read_many", "write": "write_many",
-                 "getattr": "getattr_many", "lookup": "lookup_many"}
+                 "getattr": "getattr_many", "lookup": "lookup_many",
+                 "create": "create_many", "mkdir": "mkdir_many",
+                 "unlink": "unlink_many"}
 
     def submit_batch(self, entries) -> List[CompletionEntry]:
         if not isinstance(entries, list):
@@ -447,6 +449,135 @@ class Xv6FileSystem(BentoFilesystem):
     def lookup_many(self, reqs) -> List:
         return self._scalar_many("lookup", reqs)
 
+    # --- batched metadata: vectorized create/unlink ---------------------------------
+    #
+    # The scalar create/unlink rescan the parent directory once per call
+    # (O(dir) each, O(dir^2) for a bulk phase). The vectorized paths scan
+    # each touched directory ONCE per batch into a slot map that is kept
+    # current as the batch mutates it — same allocation and placement
+    # decisions as the scalar ops (first-fit holes, append at tail), so
+    # batched and scalar execution produce identical trees.
+
+    def _dir_scan_state(self, dino: int, pdi: L.DiskInode) -> Dict:
+        """One-scan directory state for a batch: ``names`` maps name ->
+        (bn, off, ino) like ``_dirlookup`` hits; ``holes`` lists free slots
+        in scan order (the scalar first-fit order). Subclasses with a live
+        index return it directly (repro.fs.ext4like)."""
+        import collections
+        names: Dict[str, Tuple[int, int, int]] = {}
+        holes = collections.deque()
+        for bn, off, e_ino, name in self._dir_entries(dino, pdi):
+            if e_ino != 0:
+                names.setdefault(name, (bn, off, e_ino))
+            else:
+                holes.append((bn, off))
+        return {"names": names, "holes": holes}
+
+    def _create_many_common(self, reqs, kind: int) -> List:
+        op = "mkdir" if kind == L.T_DIR else "create"
+        out: List = []
+        with self._oplock:
+            states: Dict[int, Dict] = {}
+            for args in reqs:
+                if not isinstance(args, tuple) \
+                        or not self._entry_fits(op, args, None):
+                    out.append(FsError(Errno.EINVAL, f"bad {op} args"))
+                    continue
+                parent, name = args
+                try:
+                    if (not isinstance(name, str) or not name or "/" in name
+                            or len(name.encode()) > L.NAME_MAX):
+                        raise FsError(Errno.EINVAL, str(name))
+                    self._begin_op()
+                    pdi = self._iget(parent)
+                    if pdi.type != L.T_DIR:
+                        raise FsError(Errno.ENOTDIR, str(parent))
+                    st = states.get(parent)
+                    if st is None:
+                        st = states[parent] = self._dir_scan_state(parent, pdi)
+                    if name in st["names"]:
+                        raise FsError(Errno.EEXIST, name)
+                    ino = self._ialloc(kind)
+                    if kind == L.T_DIR:
+                        pdi = self._iget(parent)
+                        pdi.nlink += 1  # ".." link
+                        self._iupdate(parent, pdi)
+                        di = self._iget(ino)
+                        di.nlink = 2
+                        self._iupdate(ino, di)
+                    # place the dirent: first-fit hole, else append (the
+                    # scalar _dirlink decisions, without its rescan)
+                    if st["holes"]:
+                        bn, off = st["holes"].popleft()
+                    else:
+                        pdi = self._iget(parent)
+                        bn, off = divmod(pdi.size, L.BSIZE)
+                        pdi.size += L.DIRENT_SIZE
+                        self._iupdate(parent, pdi)
+                    b = self._bmap(parent, self._iget(parent), bn, alloc=True)
+                    with self._bread(b) as bh:
+                        bh.data()[off: off + L.DIRENT_SIZE] = \
+                            L.pack_dirent(ino, name)
+                        self._log(b, bytes(bh.data()))
+                    st["names"][name] = (bn, off, ino)
+                    self._end_op(True)
+                    out.append(self._attr(ino, self._iget(ino)))
+                except FsError as e:
+                    out.append(e)
+        return out
+
+    def create_many(self, reqs) -> List:
+        """Vectorized create: one fs-lock acquisition, one directory scan
+        per touched parent (kept live across the batch), per-entry errno
+        isolation. Journal behaviour matches scalar: per-entry begin/end
+        reservations inside the open group-commit transaction, so a
+        following fsync/flush commits the whole batch with ONE
+        checksum_batch launch."""
+        return self._create_many_common(reqs, L.T_FILE)
+
+    def mkdir_many(self, reqs) -> List:
+        return self._create_many_common(reqs, L.T_DIR)
+
+    def unlink_many(self, reqs) -> List:
+        """Vectorized unlink: one fs-lock acquisition and one scan per
+        touched parent (the scalar path rescans per name)."""
+        out: List = []
+        with self._oplock:
+            states: Dict[int, Dict] = {}
+            for args in reqs:
+                if not isinstance(args, tuple) \
+                        or not self._entry_fits("unlink", args, None):
+                    out.append(FsError(Errno.EINVAL, "bad unlink args"))
+                    continue
+                parent, name = args
+                try:
+                    self._begin_op()
+                    pdi = self._iget(parent)
+                    st = states.get(parent)
+                    if st is None:
+                        st = states[parent] = self._dir_scan_state(parent, pdi)
+                    hit = st["names"].get(name)
+                    if hit is None:
+                        raise FsError(Errno.ENOENT, str(name))
+                    bn, off, ino = hit
+                    di = self._iget(ino)
+                    if di.type == L.T_DIR:
+                        raise FsError(Errno.EISDIR, str(name))
+                    self._dir_unset_raw(parent, bn, off)
+                    st["names"].pop(name, None)
+                    if st["holes"] is not None:  # None: fs never reuses holes
+                        st["holes"].append((bn, off))
+                    di.nlink -= 1
+                    if di.nlink <= 0:
+                        self._itrunc(ino, di)
+                        di.type = L.T_FREE
+                    self._iupdate(ino, di)
+                    self._end_op(True)
+                    out.append(None)
+                except FsError as e:
+                    out.append(e)
+        return out
+
     # --- attrs ------------------------------------------------------------------------------------
     def _attr(self, ino: int, di: L.DiskInode) -> Attr:
         kind = FileKind.DIR if di.type == L.T_DIR else FileKind.FILE
@@ -498,12 +629,17 @@ class Xv6FileSystem(BentoFilesystem):
             bh.data()[slot[1]: slot[1] + L.DIRENT_SIZE] = L.pack_dirent(ino, name)
             self._log(b, bytes(bh.data()))
 
-    def _dir_unset(self, dino: int, bn: int, off: int) -> None:
+    def _dir_unset_raw(self, dino: int, bn: int, off: int) -> None:
+        """Clear one dirent slot on disk (journal-logged) — no index
+        maintenance; subclasses layer theirs in ``_dir_unset``."""
         di = self._iget(dino)
         b = self._bmap(dino, di, bn, alloc=False)
         with self._bread(b) as bh:
             bh.data()[off: off + L.DIRENT_SIZE] = bytes(L.DIRENT_SIZE)
             self._log(b, bytes(bh.data()))
+
+    def _dir_unset(self, dino: int, bn: int, off: int) -> None:
+        self._dir_unset_raw(dino, bn, off)
 
     def lookup(self, parent: int, name: str) -> Attr:
         with self._oplock:

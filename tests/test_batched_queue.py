@@ -9,7 +9,8 @@ import time
 import pytest
 
 from repro.core.interface import (BATCHABLE_OPS, CompletionEntry, Errno,
-                                  FsError, SubmissionEntry)
+                                  FsError, PrevResult, SQE_LINK,
+                                  SubmissionEntry)
 from repro.core.registry import BentoQueue, OpGate
 from repro.core.upgrade import UpgradeError, transfer_state, upgrade
 from repro.fs.mounts import make_mount
@@ -251,6 +252,158 @@ def test_bulk_bread_used_by_batched_reads():
     b0 = ks.counters["bread_many_calls"]
     v.read_many([("/f", i * 4096, 4096) for i in range(32)])
     assert ks.counters["bread_many_calls"] - b0 == 1
+    mf.close()
+
+
+# --- chained SQEs (SQE_LINK / ECANCELED / PrevResult) ---------------------------
+
+
+def test_chain_failure_cancels_remaining_members(mounted):
+    """io_uring link rule: entry N+1 runs only if entry N succeeded; the
+    first failure completes the rest of ITS chain with ECANCELED while
+    entries outside the chain are untouched."""
+    v = mounted.view
+    v.write_file("/pre", b"data")
+    ino = v.stat("/pre").ino
+    comps = mounted.mount.submit([
+        SubmissionEntry("create", (1, "pre"), user_data="c1",
+                        flags=SQE_LINK),                     # EEXIST
+        SubmissionEntry("write", (ino, 0, b"NO"), user_data="w1",
+                        flags=SQE_LINK),                     # cancelled
+        SubmissionEntry("getattr", (ino,), user_data="g1"),  # chain tail
+        SubmissionEntry("read", (ino, 0, 4), user_data="r-outside"),
+    ])
+    by = {c.user_data: c for c in comps}
+    assert by["c1"].errno == Errno.EEXIST
+    assert by["w1"].errno == Errno.ECANCELED
+    assert by["g1"].errno == Errno.ECANCELED
+    assert by["r-outside"].ok and by["r-outside"].result == b"data"
+    assert v.read_file("/pre") == b"data"  # cancelled write never ran
+
+
+def test_chain_prev_result_feeds_created_ino(mounted):
+    v = mounted.view
+    comps = mounted.mount.submit([
+        SubmissionEntry("create", (1, "cf"), user_data="c",
+                        flags=SQE_LINK),
+        SubmissionEntry("write", (PrevResult("ino"), 0, b"chained!"),
+                        user_data="w", flags=SQE_LINK),
+        SubmissionEntry("fsync", (PrevResult("ino", back=2),),
+                        user_data="s"),
+    ])
+    assert all(c.ok for c in comps)
+    assert comps[1].result == 8
+    assert v.read_file("/cf") == b"chained!"
+
+
+def test_prev_result_outside_chain_or_out_of_range_is_einval(mounted):
+    v = mounted.view
+    v.write_file("/x", b"x")
+    comps = mounted.mount.submit([
+        SubmissionEntry("getattr", (PrevResult("ino"),), user_data="stray"),
+        SubmissionEntry("create", (1, "ok1"), user_data="c",
+                        flags=SQE_LINK),
+        SubmissionEntry("write", (PrevResult("ino", back=9), 0, b"z"),
+                        user_data="bad-back", flags=SQE_LINK),
+        SubmissionEntry("getattr", (1,), user_data="cancelled"),
+    ])
+    by = {c.user_data: c for c in comps}
+    assert by["stray"].errno == Errno.EINVAL      # no chain to resolve from
+    assert by["c"].ok                             # create itself fine
+    assert by["bad-back"].errno == Errno.EINVAL   # back escapes the chain
+    assert by["cancelled"].errno == Errno.ECANCELED
+
+
+def test_bento_queue_defers_auto_submit_mid_chain():
+    mf = make_mount("bento", n_blocks=4096)
+    q = BentoQueue(mf.mount, depth=2)
+    q.prep("create", 1, "qa", user_data="c", flags=SQE_LINK)
+    q.prep("write", PrevResult("ino"), 0, b"Q", user_data="w")
+    # depth hit at the LINK entry must not sever the chain
+    assert len(q) == 0 or len(q) == 2  # either all submitted at tail, or staged
+    q.submit()
+    comps = q.drain()
+    assert [c.user_data for c in comps] == ["c", "w"]
+    assert all(c.ok for c in comps)
+    assert mf.view.read_file("/qa") == b"Q"
+    mf.close()
+
+
+# --- batched metadata path: service-counter acceptance --------------------------
+
+
+def test_batched_create_unlink_one_crossing_one_launch():
+    """The PR's acceptance counters: a posix-level create_many/unlink_many
+    batch crosses the OpGate ONCE (no silent scalar fallback), and a
+    flushed batch costs ONE checksum_batch launch (one journal commit)."""
+    mf = make_mount("bento", n_blocks=8192)
+    v = mf.view
+    v.makedirs("/d")                       # warms the dcache for /d
+    gate, ks = mf.mount.gate, mf.services
+    paths = [f"/d/f{i:03d}" for i in range(64)]
+
+    g0 = gate.crossings
+    v.create_many(paths)
+    assert gate.crossings - g0 == 1        # one submission, one crossing
+    c0 = ks.counters["checksum_batch_calls"]
+    v.fsync("/d")
+    assert ks.counters["checksum_batch_calls"] - c0 == 1
+
+    g0 = gate.crossings
+    v.unlink_many(paths)
+    assert gate.crossings - g0 == 1
+    c0 = ks.counters["checksum_batch_calls"]
+    v.fsync("/d")
+    assert ks.counters["checksum_batch_calls"] - c0 == 1
+    mf.close()
+
+
+def test_chained_create_write_fsync_one_crossing_one_launch():
+    mf = make_mount("bento", n_blocks=8192)
+    v = mf.view
+    v.makedirs("/k")
+    gate, ks = mf.mount.gate, mf.services
+    items = [(f"/k/f{i:03d}", b"d" * 512) for i in range(16)]
+    g0 = gate.crossings
+    c0 = ks.counters["checksum_batch_calls"]
+    out = v.create_and_write_many(items, fsync=True)
+    assert out == [512] * 16
+    assert gate.crossings - g0 == 1        # 2N+1 entries, one crossing
+    assert ks.counters["checksum_batch_calls"] - c0 == 1  # one commit
+    mf.close()
+
+
+def test_create_many_counts_ops_per_entry():
+    """stats['ops'] keeps meaning entries, like the other *_many paths."""
+    for kind in ("bento", "ext4like"):
+        mf = make_mount(kind, n_blocks=4096)
+        v = mf.view
+        v.makedirs("/d")
+        fs = mf.mount.module
+        ops0 = fs.stats["ops"]
+        v.create_many([f"/d/x{i}" for i in range(5)])
+        assert fs.stats["ops"] - ops0 == 5
+        ops0 = fs.stats["ops"]
+        v.unlink_many([f"/d/x{i}" for i in range(5)])
+        assert fs.stats["ops"] - ops0 == 5
+        mf.close()
+
+
+def test_batched_walk_one_lookup_submission_per_level():
+    """A cold batched walk of N paths under one parent costs ONE lookup
+    submission per tree level — not one per path component."""
+    mf = make_mount("bento", n_blocks=4096)
+    v = mf.view
+    v.makedirs("/a/b")
+    for i in range(8):
+        v.write_file(f"/a/b/f{i}", b"z")
+    v2 = type(v)(mf.mount)                 # fresh view: cold dcache
+    gate = mf.mount.gate
+    g0 = gate.crossings
+    got = v2.stat_many([f"/a/b/f{i}" for i in range(8)])
+    assert all(a.size == 1 for a in got)
+    # 3 levels of lookups (a, b, f*) + 1 getattr submission
+    assert gate.crossings - g0 == 4
     mf.close()
 
 

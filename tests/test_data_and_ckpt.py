@@ -100,6 +100,41 @@ def test_checkpoint_corruption_detected():
     mf.close()
 
 
+def test_failed_chained_save_leaves_no_manifest():
+    """The manifest rides the final leaf batch as a linked chain: if a leaf
+    write fails, the manifest write is cancelled AND the pre-created empty
+    manifest file is cleaned up, so an aborted save is indistinguishable
+    from no save (latest_step must not see it). The raised error is the
+    failing member's real errno, not the chain's ECANCELED."""
+    from repro.core.interface import Errno, FsError
+
+    mf = make_mount("bento", n_blocks=16384)
+    v = mf.view
+    v.makedirs("/ck/step_9")
+    leaf_ino = v.create("/ck/step_9/leaf_00000.npy").ino
+    fs = mf.mount.module
+    real_write = type(fs).write
+
+    def sabotaged_write(self, ino, off, data):
+        if ino == leaf_ino:
+            raise FsError(Errno.ENOSPC, "injected leaf failure")
+        return real_write(self, ino, off, data)
+
+    type(fs).write = sabotaged_write
+    try:
+        with pytest.raises(FsError) as exc:
+            ckpt.save(mf.view, "/ck/step_9", {"w": jnp.zeros(4)}, step=9)
+        assert exc.value.errno == Errno.ENOSPC  # root cause, not ECANCELED
+    finally:
+        type(fs).write = real_write
+    assert not v.exists("/ck/step_9/manifest.json")
+    assert ckpt.latest_step(mf.view, "/ck") is None
+    # and the aborted save does not poison a subsequent good one
+    ckpt.save(mf.view, "/ck/step_9", {"w": jnp.arange(4.0)}, step=9)
+    assert ckpt.latest_step(mf.view, "/ck") == 9
+    mf.close()
+
+
 def test_latest_step():
     mf = make_mount("bento", n_blocks=16384)
     assert ckpt.latest_step(mf.view, "/ck") is None

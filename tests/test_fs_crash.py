@@ -1,15 +1,24 @@
-"""Crash-recovery property tests (hypothesis): for random workloads and a
-crash injected at an arbitrary device-write count, journal recovery must
-yield a consistent file system in which every fsync'd file is intact —
-recovered content must be the fsync'd version or a *later committed*
-version (group commit may durably commit subsequent writes on its own).
+"""Crash-recovery tests: for workloads with a crash injected at an
+arbitrary device-write count, journal recovery must yield a consistent
+file system in which every fsync'd file is intact — recovered content must
+be the fsync'd version or a *later committed* version (group commit may
+durably commit subsequent writes on its own). Chained submissions add a
+stronger unit: a chain that fits one journal transaction is crash-atomic
+(no half-applied chain survives replay).
+
+The workload-randomizing test is property-based (hypothesis); the
+deterministic tests — torn-commit discard, absorption, crash-mid-chain
+sweep — run everywhere.
 """
 
 import pytest
 
-# the whole module is property-based: skip cleanly when hypothesis is absent
-hp = pytest.importorskip("hypothesis")
-st = pytest.importorskip("hypothesis.strategies")
+try:
+    import hypothesis as hp
+    import hypothesis.strategies as st
+except ImportError:  # deterministic tests still run
+    hp = None
+    st = None
 
 from repro.core.services import kernel_binding
 from repro.fs.blockdev import BlockDeviceError, MemBlockDevice
@@ -28,20 +37,25 @@ def _fresh_fs(dev=None, n_blocks=2048):
     return dev, ks, fs, PosixView(DirectMount(fs))
 
 
-ops_strategy = st.lists(
-    st.tuples(
-        st.sampled_from(["write", "append", "fsync_file", "delete"]),
-        st.integers(0, 5),          # file index
-        st.integers(1, 3),          # payload blocks
-    ),
-    min_size=1, max_size=25,
-)
+if hp is not None:
+    ops_strategy = st.lists(
+        st.tuples(
+            st.sampled_from(["write", "append", "fsync_file", "delete"]),
+            st.integers(0, 5),          # file index
+            st.integers(1, 3),          # payload blocks
+        ),
+        min_size=1, max_size=25,
+    )
+
+    @hp.given(ops=ops_strategy, crash_after=st.integers(1, 400),
+              data_seed=st.integers(0, 2**16))
+    @hp.settings(max_examples=30, deadline=None)
+    def test_crash_recovery_preserves_fsynced_data(ops, crash_after,
+                                                   data_seed):
+        _crash_recovery_body(ops, crash_after, data_seed)
 
 
-@hp.given(ops=ops_strategy, crash_after=st.integers(1, 400),
-          data_seed=st.integers(0, 2**16))
-@hp.settings(max_examples=30, deadline=None)
-def test_crash_recovery_preserves_fsynced_data(ops, crash_after, data_seed):
+def _crash_recovery_body(ops, crash_after, data_seed):
     dev, ks, fs, v = _fresh_fs()
     history = {}   # path -> list of every version ever written
     floor = {}     # path -> index into history guaranteed durable (fsync)
@@ -137,3 +151,61 @@ def test_journal_absorption():
     assert len(fs.journal._pending) < 8
     fs.journal.commit()
     assert fs.journal.pending_get(0) is None
+
+
+def test_crash_mid_chain_never_half_applied():
+    """Chained create→write→flush with a crash injected at EVERY device-
+    write count the chain can reach (including between the create and the
+    write, and inside the journal commit): after replay the file either
+    does not exist, or exists with the COMPLETE payload — a half-applied
+    chain (entry without data, torn tail) must never survive. Holds
+    because both chain members land in one group-commit transaction and
+    the journal replays transactions atomically (torn commits discarded)."""
+    from repro.core.interface import PrevResult, SQE_LINK, SubmissionEntry
+
+    payload = b"C" * (2 * 4096 + 17)  # multi-block: a torn chain would show
+
+    # measure the chain's total device-write footprint first
+    dev, ks, fs, v = _fresh_fs()
+    entries = [
+        SubmissionEntry("create", (1, "f"), user_data="c", flags=SQE_LINK),
+        SubmissionEntry("write", (PrevResult("ino"), 0, payload),
+                        user_data="w", flags=SQE_LINK),
+        SubmissionEntry("flush", (), user_data="s"),
+    ]
+    base_writes = dev.writes
+    comps = v.m.submit(entries)
+    assert all(c.ok for c in comps)
+    footprint = dev.writes - base_writes
+    assert footprint > 4  # create+write+commit really hit the device
+
+    half_applied = []
+    for crash_after in range(1, footprint + 1):
+        dev, ks, fs, v = _fresh_fs()
+        dev._writes_seen = 0          # count from here, mkfs writes excluded
+        dev.fail_after_writes = crash_after
+        crashed = False
+        try:
+            v.m.submit([
+                SubmissionEntry("create", (1, "f"), user_data="c",
+                                flags=SQE_LINK),
+                SubmissionEntry("write", (PrevResult("ino"), 0, payload),
+                                user_data="w", flags=SQE_LINK),
+                SubmissionEntry("flush", (), user_data="s"),
+            ])
+        except BlockDeviceError:
+            crashed = True
+        dev.fail_after_writes = -1
+        # power back on: fresh module instances over the surviving blocks
+        ks2 = kernel_binding(dev, writeback="delayed")
+        fs2 = Xv6FileSystem(Xv6Options())
+        fs2.init(ks2.superblock(), ks2)
+        v2 = PosixView(DirectMount(fs2))
+        if v2.exists("/f"):
+            got = v2.read_file("/f")
+            if got != payload:
+                half_applied.append((crash_after, crashed, len(got)))
+        v2.statfs()
+        v2.listdir("/")
+    assert not half_applied, \
+        f"half-applied chains survived recovery: {half_applied}"

@@ -95,6 +95,77 @@ def test_upgrade_under_concurrent_load_zero_failures():
     mf.close()
 
 
+def test_upgrade_during_chained_batch_never_interleaves_with_swap():
+    """An in-flight chained submission racing an xv6→ext4like upgrade: the
+    whole batch executes under one gate crossing, so the table swap can
+    never land between two members of a chain — completions all come from
+    one module generation, chain semantics (ECANCELED after a failed link)
+    survive the race, and the upgraded module sees every created file."""
+    import threading
+
+    from repro.core.interface import (Errno, PrevResult, SQE_LINK,
+                                      SubmissionEntry)
+
+    mf = make_mount("bento", n_blocks=8192)
+    v = mf.view
+    v.makedirs("/d")
+    dino = v.stat("/d").ino
+    m = mf.mount
+    gen0 = m.generation
+
+    n_chains = 150
+    entries = []
+    for i in range(n_chains):
+        # one poisoned chain mid-batch: duplicate name → EEXIST cancels its
+        # write, with ECANCELED completions even while the upgrade races
+        name = "dup" if i == 70 else f"f{i:04d}"
+        entries.append(SubmissionEntry("create", (dino, name),
+                                       user_data=(i, "c"), flags=SQE_LINK))
+        entries.append(SubmissionEntry("write",
+                                       (PrevResult("ino"), 0, b"x" * 64),
+                                       user_data=(i, "w")))
+    entries.insert(0, SubmissionEntry("create", (dino, "dup"),
+                                      user_data=(-1, "c")))
+    comps = []
+    started = threading.Event()
+
+    def submitter():
+        started.set()
+        comps.extend(m.submit(entries))
+
+    t = threading.Thread(target=submitter, daemon=True)
+    t.start()
+    started.wait(5)
+
+    def migrate(state, old_v, new_v):
+        state = dict(state)
+        state.setdefault("dirindex", {})
+        return state
+
+    upgrade(m, Ext4LikeFileSystem(), migrate=migrate)
+    t.join(10)
+    assert not t.is_alive()
+    # exactly one swap; no lost/duplicated/reordered completions
+    assert m.generation == gen0 + 1
+    assert [c.user_data for c in comps] == \
+        [e.user_data for e in entries]
+    by_ud = {c.user_data: c for c in comps}
+    assert by_ud[(70, "c")].errno == Errno.EEXIST
+    assert by_ud[(70, "w")].errno == Errno.ECANCELED
+    ok_chains = [i for i in range(n_chains) if i != 70]
+    assert all(by_ud[(i, "c")].ok and by_ud[(i, "w")].result == 64
+               for i in ok_chains)
+    # the upgraded (ext4like) module serves every chain's file via its index
+    assert isinstance(m.module, Ext4LikeFileSystem)
+    for i in (0, 1, 70, 149):
+        name = f"f{i:04d}"
+        if i == 70:
+            continue
+        assert v.read_file(f"/d/{name}") == b"x" * 64
+    assert len(v.listdir("/d")) == n_chains  # 149 chain files + dup
+    mf.close()
+
+
 def test_trainer_module_state_transfer():
     from repro.configs import registry
     from repro.core.upgrade import transfer_state
