@@ -301,6 +301,8 @@ def bench_batched(kind: str = "bento", *, batch: int = 128,
     scalar_k_s = time.perf_counter() - t0
     ks = mf.services
     c0 = ks.counters["checksum_batch_calls"] if ks else 0
+    journal = getattr(getattr(mf.mount, "module", None), "journal", None)
+    ch0 = journal.chains if journal else 0
     t0 = time.perf_counter()
     for b in range(n_chain_batches):
         v.create_and_write_many(
@@ -309,6 +311,12 @@ def bench_batched(kind: str = "bento", *, batch: int = 128,
     chained_s = time.perf_counter() - t0
     launches_per_batch = ((ks.counters["checksum_batch_calls"] - c0)
                           / n_chain_batches if ks else None)
+    # chain-aware journal reservation: every create→write pair takes ONE
+    # chain-transaction reservation; the flushed-batch counters above must
+    # hold with it enabled (a reservation that forced mid-batch commits
+    # would show up as extra checksum launches and fail the tripwire)
+    chains_per_batch = ((journal.chains - ch0) / n_chain_batches
+                        if journal else None)
     rows.append({
         "bench": "chained_cwf", "fs": kind, "batch": chain_batch,
         "scalar_ops_per_s": meta_ops / scalar_k_s,
@@ -316,6 +324,7 @@ def bench_batched(kind: str = "bento", *, batch: int = 128,
         "speedup": (n_chain_batches * chain_batch / chained_s)
         / (meta_ops / scalar_k_s),
         "checksum_batch_per_flush": launches_per_batch,
+        "chain_reservations_per_batch": chains_per_batch,
     })
     mf.close()
     return rows
@@ -368,6 +377,9 @@ def main() -> None:
             if r.get("checksum_batch_per_flush") is not None:
                 line += (f", checksum_batch launches/flush "
                          f"{r['checksum_batch_per_flush']:.2f}")
+            if r.get("chain_reservations_per_batch") is not None:
+                line += (f", chain txn reservations/batch "
+                         f"{r['chain_reservations_per_batch']:.1f}")
             print(line)
         # perf-path bitrot tripwires (CI runs this with --quick): a silent
         # fall-back to scalar dispatch shows up as extra gate crossings or
@@ -379,6 +391,10 @@ def main() -> None:
             c = r.get("checksum_batch_per_flush")
             assert c is None or c == 1.0, \
                 f"{r['bench']}: {c} checksum_batch launches/flush (expected 1)"
+            c = r.get("chain_reservations_per_batch")
+            assert c is None or c == float(r["batch"]), \
+                (f"{r['bench']}: {c} chain reservations/batch "
+                 f"(expected {r['batch']} — one per create→write pair)")
         slow = [r for r in rows if r.get("speedup", 99) < 1.5]
         for r in slow:
             print(f"WARNING: {r['bench']} speedup {r['speedup']:.2f}x "

@@ -21,7 +21,7 @@ from typing import Any, Dict, Optional
 import jax
 import numpy as np
 
-from repro.core.interface import FsError
+from repro.core.interface import Errno, FsError
 from repro.fs.posix import PosixView
 
 MANIFEST = "manifest.json"
@@ -75,27 +75,55 @@ def save(view: PosixView, root: str, tree, *, step: int,
         if len(items) >= _BATCH_LEAVES or pending_bytes >= _BATCH_BYTES:
             view.write_many(items)
             items, pending_bytes = [], 0
-    # The manifest is the commit point, enforced by linked chains: the
-    # final leaf batch is a chain (ordered, stop-at-first-failure — a
-    # failure raises its real errno before the manifest is ever created),
-    # then the manifest's own create→write→flush chain commits everything
-    # (one journal transaction covers both submissions' pending blocks, so
-    # the whole final batch is still one checksum launch). A crash before
-    # that flush leaves no manifest at all — the aborted save is invisible
-    # to latest_step — because the manifest file is not created until every
-    # leaf write has succeeded. This replaces the old write-then-fsync
-    # manual ordering with a boundary-enforced one.
+    # The manifest is the commit point, enforced by the manifest's own
+    # linked chain: leaf batches (including the final one) are plain
+    # batches — strict mode raises a failing leaf's real errno before the
+    # manifest submission ever happens — and then the manifest's
+    # create→write→flush CHAIN commits everything. Since the chain-aware
+    # journal reservation landed, a chain is one bounded journal
+    # transaction (crash-atomic, sized by capacity), so bulk leaf data
+    # must NOT be chained — only the small manifest chain is, and its
+    # flush commits any still-pending leaf blocks with it (one transaction
+    # when they fit together; begin_chain pre-commits them first when they
+    # don't, which is equally safe — they are invisible without the
+    # manifest). A crash at any device
+    # write before that commit leaves no manifest at all — the aborted
+    # save is invisible to latest_step; after it, manifest AND every leaf
+    # it names are durable together (proven exhaustively by the crash
+    # harness, tests/test_crash_torture.py).
     manifest_path = f"{root}/{MANIFEST}"
     raw_manifest = json.dumps(manifest).encode()
     if items:
-        view.write_many(items, chain=True)
+        view.write_many(items)
     try:
-        if view.exists(manifest_path):  # re-save over an old checkpoint
-            view.write_many([(manifest_path, raw_manifest)],
-                            fsync=True, chain=True)
-        else:
-            view.create_and_write_many([(manifest_path, raw_manifest)],
-                                       fsync=True)
+        try:
+            if view.exists(manifest_path):  # re-save over an old checkpoint
+                # clear first so a SHORTER manifest never keeps a stale
+                # tail (json would see trailing garbage); a crash between
+                # the truncate and the commit leaves an empty/torn
+                # manifest, which latest_step already reads as "no
+                # checkpoint"
+                view.truncate(manifest_path, 0)
+                view.write_many([(manifest_path, raw_manifest)],
+                                fsync=True, chain=True)
+            else:
+                view.create_and_write_many([(manifest_path, raw_manifest)],
+                                           fsync=True)
+        except FsError as e:
+            if e.errno != Errno.ENOSPC:
+                raise
+            # a chain is a bounded journal transaction: a manifest bigger
+            # than one is refused ENOSPC up front. Fall back to an
+            # unchained write + fsync — crash safety degrades gracefully
+            # (latest_step already ignores torn/unparseable manifests), and
+            # a genuinely full device just raises ENOSPC again here.
+            # NB a crash mid-overwrite of an EXISTING over-capacity
+            # manifest can tear it (same exposure as before chain
+            # transactions existed — multi-txn writes were never atomic);
+            # an atomic tmp+rename swap needs rename-overwrite support,
+            # tracked in ROADMAP.
+            view.write_file(manifest_path, raw_manifest)
+            view.fsync(manifest_path)
     except FsError:
         # a manifest created whose WRITE then failed is an empty husk —
         # remove it so the aborted save is indistinguishable from no save

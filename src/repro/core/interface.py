@@ -48,6 +48,16 @@ fixed-file trick generalized to plain values. Because a whole submission
 executes under ONE gate crossing (see ``repro.core.registry``), an online
 upgrade's table swap can never land between two members of a chain: chains
 are atomic with respect to module generations, like batches (§4.8).
+
+Chains are also atomic with respect to CRASHES: ``execute_batch`` wraps
+every chain group in the module's ``chain_begin``/``chain_end`` hooks, and
+journaled modules use them to reserve the whole chain as ONE journal
+transaction (sized from the submission entries; a chain that can never fit
+completes ENOSPC-first/ECANCELED-rest before staging anything) — see
+``repro.fs.journal`` for the transaction semantics and
+``repro.fs.crashsim`` for the exhaustive crash-point proof. ``SQE_DRAIN``
+marks a barrier entry that runs only after every prior entry in the batch
+completed, documenting ordering for mixed chain/unchained batches.
 """
 
 from __future__ import annotations
@@ -115,7 +125,16 @@ BATCHABLE_OPS = frozenset({
 
 
 # SubmissionEntry.flags bits (io_uring IOSQE_* analogues).
-SQE_LINK = 0x1  # link the NEXT entry into this entry's chain
+SQE_LINK = 0x1   # link the NEXT entry into this entry's chain
+SQE_DRAIN = 0x2  # barrier: run only after ALL prior entries in the batch
+#   completed (io_uring IOSQE_IO_DRAIN). In this synchronous executor every
+#   entry already completes before the next starts; the observable effect is
+#   that a drain entry starts a NEW dispatch group, so a module's vectorized
+#   coalescing (same-op runs, write merging) never crosses the barrier. This
+#   is how a mixed batch documents ordering: "everything before the drain —
+#   including any chain, whatever its fate — is complete before this runs."
+#   A drain flag on a LATER chain member is redundant and ignored: chains
+#   are already ordered and are never severed by a barrier.
 
 
 @dataclasses.dataclass(frozen=True)
@@ -177,7 +196,9 @@ def split_chains(entries: List["SubmissionEntry"]
     """Group a batch into ``(is_chain, members)`` runs. A chain is a
     maximal run of SQE_LINK entries plus the first entry after them (the
     chain's tail); a trailing SQE_LINK at batch end simply ends the chain
-    there, like an io_uring link that reaches the submit boundary."""
+    there, like an io_uring link that reaches the submit boundary. An
+    SQE_DRAIN entry always STARTS a group (the barrier: every prior group
+    completes first); a drain inside a chain never severs it."""
     groups: List[Tuple[bool, List[SubmissionEntry]]] = []
     i, n = 0, len(entries)
     while i < n:
@@ -188,7 +209,8 @@ def split_chains(entries: List["SubmissionEntry"]
             j = min(j + 1, n)  # include the tail entry
             groups.append((True, entries[i:j]))
         else:
-            while j < n and not (entries[j].flags & SQE_LINK):
+            while j < n and not (entries[j].flags & SQE_LINK) \
+                    and not (j > i and entries[j].flags & SQE_DRAIN):
                 j += 1
             groups.append((False, entries[i:j]))
         i = j
@@ -221,34 +243,63 @@ def _resolve_placeholders(entry: "SubmissionEntry",
 
 
 def execute_batch(submit_batch, entries) -> List["CompletionEntry"]:
-    """Chain-aware batch executor — the one implementation of SQE_LINK.
+    """Chain-aware batch executor — the one implementation of SQE_LINK
+    (and SQE_DRAIN barriers).
 
     Unchained runs go to ``submit_batch`` whole, keeping the module's
-    vectorized fast paths; chained runs execute member-by-member (each
-    member may depend on the previous one's result via ``PrevResult``),
-    and the first failing member cancels the rest of its chain with
-    ``ECANCELED``. Callers hold whatever gate/lock makes the whole batch
-    atomic — this function never re-enters dispatch."""
+    vectorized fast paths (a drain entry starts a fresh run, so coalescing
+    never crosses the barrier); chained runs execute member-by-member
+    (each member may depend on the previous one's result via
+    ``PrevResult``), and the first failing member cancels the rest of its
+    chain with ``ECANCELED``. Callers hold whatever gate/lock makes the
+    whole batch atomic — this function never re-enters dispatch.
+
+    Chains are *reserved* as one journal transaction: when the module
+    behind ``submit_batch`` exposes the ``chain_begin``/``chain_end``
+    hooks (see ``BentoFilesystem``), every chain group runs inside that
+    scope, so all members' journal writes land in a single commit — a
+    crash at any device write leaves the whole chain installed or none of
+    it. A chain whose estimated footprint can never fit the journal is
+    refused up front: its FIRST member completes with the errno
+    ``chain_begin`` returned (``ENOSPC``) *before any block is staged* and
+    the rest complete ``ECANCELED`` — a raw ``JournalFull`` never escapes
+    the boundary. All three dispatch layers (``Mount.submit``, the
+    VFS-direct baseline, the FUSE daemon) share this path."""
     if not isinstance(entries, list):
         entries = list(entries)
-    if not any(e.flags & SQE_LINK for e in entries):
-        return submit_batch(entries)  # fast path: no chains staged
+    if not any(e.flags & (SQE_LINK | SQE_DRAIN) for e in entries):
+        return submit_batch(entries)  # fast path: no chains/barriers staged
+    owner = getattr(submit_batch, "__self__", None)
+    chain_begin = getattr(owner, "chain_begin", None)
+    chain_end = getattr(owner, "chain_end", None)
     comps: List[CompletionEntry] = []
     for is_chain, group in split_chains(entries):
         if not is_chain:
             comps.extend(submit_batch(group))
             continue
-        done: List[CompletionEntry] = []
-        for e in group:
-            if done and not done[-1].ok:
-                done.append(CompletionEntry(e.user_data,
-                                            errno=Errno.ECANCELED))
+        if chain_begin is not None:
+            err = chain_begin(group)
+            if err is not None:  # chain can never fit: nothing was staged
+                comps.append(CompletionEntry(group[0].user_data, errno=err))
+                comps.extend(CompletionEntry(e.user_data,
+                                             errno=Errno.ECANCELED)
+                             for e in group[1:])
                 continue
-            resolved = _resolve_placeholders(e, done)
-            if isinstance(resolved, CompletionEntry):
-                done.append(resolved)
-            else:
-                done.append(submit_batch([resolved])[0])
+        done: List[CompletionEntry] = []
+        try:
+            for e in group:
+                if done and not done[-1].ok:
+                    done.append(CompletionEntry(e.user_data,
+                                                errno=Errno.ECANCELED))
+                    continue
+                resolved = _resolve_placeholders(e, done)
+                if isinstance(resolved, CompletionEntry):
+                    done.append(resolved)
+                else:
+                    done.append(submit_batch([resolved])[0])
+        finally:
+            if chain_end is not None:
+                chain_end()
         comps.extend(done)
     return comps
 
@@ -391,6 +442,21 @@ class BentoFilesystem(BentoModule):
         launches across the batch) — completion order must be preserved.
         """
         return [self._dispatch_one(e) for e in entries]
+
+    # --- chain reservation hooks -------------------------------------------------
+    def chain_begin(self, entries: List[SubmissionEntry]) -> Optional[Errno]:
+        """Called by ``execute_batch`` before a chain group executes; the
+        module reserves whatever makes the WHOLE chain one atomicity unit
+        (journaled modules size one journal transaction from the entries —
+        see ``repro.fs.xv6``). Return an ``Errno`` (``ENOSPC``) to refuse
+        the chain before anything is staged: the first member completes
+        with it, the rest ``ECANCELED``. Default: no reservation needed."""
+        del entries
+        return None
+
+    def chain_end(self) -> None:
+        """Close the scope ``chain_begin`` opened (always called, even when
+        a member failed mid-chain). Default: nothing to release."""
 
 
 # Filled in by repro.core.services at import time (cycle-free forward ref).

@@ -96,6 +96,11 @@ class KernelServices:
     def n_dirty(self, sb: SuperBlockCap) -> int:
         return self._cache_of(sb).n_dirty
 
+    def sb_invalidate_blocks(self, sb: SuperBlockCap, blocknos) -> None:
+        """Drop specific cached blocks (no writeback) so the next read
+        refetches the device — the journal's chain-member rollback path."""
+        self._cache_of(sb).invalidate_blocks(blocknos)
+
     # --- misc services -----------------------------------------------------------------
     def create_lock(self) -> threading.RLock:
         return threading.RLock()

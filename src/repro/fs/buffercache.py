@@ -193,3 +193,23 @@ class BufferCache:
             self.flush()
             self._blocks.clear()
             self._refs.clear()
+
+    def invalidate_blocks(self, blocknos) -> None:
+        """Discard specific blocks' cached MUTATIONS — the journal's
+        rollback path uses this to undo cache buffers an aborted op/chain
+        member mutated in place. Unpinned blocks are dropped (next bread
+        re-reads the device); a pinned block (the failing op may still
+        hold the buffer it was mutating when the journal refused its
+        log_write) is refreshed in place from the device, so every holder
+        sees pre-op content."""
+        with self._lock:
+            for b in blocknos:
+                if self._refs.get(b, 0) > 0:
+                    buf = self._blocks.get(b)
+                    if buf is not None:
+                        buf[:] = self.dev.read_block(b)
+                    self._dirty.pop(b, None)
+                else:
+                    self._blocks.pop(b, None)
+                    self._dirty.pop(b, None)
+                    self._refs.pop(b, None)

@@ -1,0 +1,256 @@
+"""Exhaustive crash-point torture harness (CrashMonkey-style enumeration).
+
+"Bento and the Art of Repeated Research" argues that crash-consistency
+claims must be re-verifiable by systematic, repeatable infrastructure, not
+ad-hoc spot checks. This module is that infrastructure for the journaled
+file systems in this repo:
+
+* a *golden run* first measures a workload's total device-write footprint;
+* the workload is then re-executed once per crash point N = 0..total with
+  power loss injected after the Nth device write (N = 0: the very first
+  write never lands; N = total: the no-crash control) — EVERY device-write
+  crash point is enumerated, not a sampled subset;
+* after each crash the device is remounted cold — fresh buffer cache,
+  fresh fs instance, ``Journal.recover()`` runs at init — and an invariant
+  callback judges the recovered state.
+
+Each iteration rebuilds the device from scratch (mkfs + the caller's
+``setup``, flushed durable before the write counter starts), so every
+crash point replays an identical write stream: the sweep is deterministic
+and a failure names the exact write it crashed on.
+
+The canonical sweep — a linked create → write(PrevResult) → fsync chain
+that must be all-or-nothing after recovery (the chain-transaction
+guarantee of ``repro.fs.journal``) — is built in, used by the test tree
+and runnable standalone as a CI smoke::
+
+    PYTHONPATH=src python -m repro.fs.crashsim --quick
+
+``--quick`` bounds the sweep to a stratified subset of crash points
+(first/last + an even stride) so it fits a CI smoke budget; without it
+every crash point runs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterable, List, Optional, Sequence
+
+from repro.core.services import kernel_binding
+from repro.fs.blockdev import BlockDeviceError, MemBlockDevice
+from repro.fs.mounts import DirectMount
+from repro.fs.posix import PosixView
+from repro.fs.xv6 import mkfs
+
+
+@dataclasses.dataclass
+class CrashCtx:
+    """What a workload/setup callback gets to drive: a freshly formatted
+    device behind a DirectMount (same chain executor and journal path as
+    the gated mounts, none of the gate noise)."""
+
+    dev: MemBlockDevice
+    ks: object
+    fs: object
+    mount: DirectMount
+    view: PosixView
+
+
+@dataclasses.dataclass
+class Recovered:
+    """Post-crash, post-recovery state handed to invariants/callers."""
+
+    crash_point: int   # writes that LANDED before power loss
+    total_writes: int  # the workload's full footprint (golden run)
+    crashed: bool      # False only for the N == total control iteration
+    dev: MemBlockDevice
+    ks: object
+    fs: object
+    mount: DirectMount
+    view: PosixView
+
+
+def quick_points(total: int, n: int = 12) -> List[int]:
+    """Bounded, stratified crash-point subset: first, last, no-crash
+    control, and an even stride in between — the CI smoke budget."""
+    if total + 1 <= n:
+        return list(range(total + 1))
+    stride = max(1, (total + n - 1) // n)
+    return sorted(set(range(0, total + 1, stride)) | {0, 1, total - 1, total})
+
+
+class CrashSim:
+    """Deterministic crash-point sweeps over a journaled Bento fs."""
+
+    def __init__(self, fs_factory: Callable[[], object], *,
+                 n_blocks: int = 2048, ninodes: int = 256, nlog: int = 32,
+                 writeback: str = "delayed"):
+        self.fs_factory = fs_factory
+        self.n_blocks = n_blocks
+        self.ninodes = ninodes
+        self.nlog = nlog
+        self.writeback = writeback
+
+    # --- plumbing -------------------------------------------------------------------
+    def _mount(self, dev: MemBlockDevice) -> CrashCtx:
+        """Cold mount: fresh services (fresh cache) + fresh fs instance;
+        the fs's init runs journal recovery."""
+        ks = kernel_binding(dev, writeback=self.writeback)
+        fs = self.fs_factory()
+        fs.init(ks.superblock(), ks)
+        m = DirectMount(fs)
+        return CrashCtx(dev, ks, fs, m, PosixView(m))
+
+    def boot(self, setup: Optional[Callable[[CrashCtx], None]] = None
+             ) -> CrashCtx:
+        """The canonical cold-boot recipe (public — tests use it for
+        non-crash setups too): fresh device + mkfs + mount + durable
+        setup, write counter armed at zero so crash points index workload
+        writes only."""
+        dev = MemBlockDevice(self.n_blocks)
+        ks = kernel_binding(dev, writeback=self.writeback)
+        mkfs(ks, ninodes=self.ninodes, nlog=self.nlog)
+        ctx = self._mount(dev)
+        if setup is not None:
+            setup(ctx)
+            ctx.fs.flush()  # setup is durable regardless of the crash point
+        dev._writes_seen = 0
+        return ctx
+
+    # --- public API -----------------------------------------------------------------
+    def measure(self, workload: Callable[[CrashCtx], None], *,
+                setup: Optional[Callable[[CrashCtx], None]] = None) -> int:
+        """Golden run: the workload's device-write footprint (no crash)."""
+        ctx = self.boot(setup)
+        ctx.dev.fail_after_writes = 1 << 30  # arm the counter, never fire
+        workload(ctx)
+        total = ctx.dev._writes_seen
+        ctx.dev.fail_after_writes = -1
+        return total
+
+    def run_one(self, workload: Callable[[CrashCtx], None], point: int, *,
+                total: Optional[int] = None,
+                setup: Optional[Callable[[CrashCtx], None]] = None
+                ) -> Recovered:
+        """One iteration: crash after ``point`` device writes, power back
+        on, remount cold (recovery runs), return the recovered state."""
+        ctx = self.boot(setup)
+        ctx.dev.fail_after_writes = point
+        crashed = False
+        try:
+            workload(ctx)
+        except BlockDeviceError:
+            crashed = True
+        ctx.dev.fail_after_writes = -1  # power back on
+        rec = self._mount(ctx.dev)
+        return Recovered(point, -1 if total is None else total, crashed,
+                         rec.dev, rec.ks, rec.fs, rec.mount, rec.view)
+
+    def sweep(self, workload: Callable[[CrashCtx], None],
+              invariant: Callable[[Recovered], None], *,
+              setup: Optional[Callable[[CrashCtx], None]] = None,
+              points: Optional[Sequence[int]] = None,
+              quick: bool = False) -> int:
+        """Enumerate crash points and assert the invariant at each.
+
+        ``points`` overrides the enumeration; ``quick`` bounds it via
+        ``quick_points``. Default: EVERY point, 0..total inclusive (the
+        last is the no-crash control). Returns the number of points swept;
+        an invariant failure re-raises naming the crash point."""
+        total = self.measure(workload, setup=setup)
+        if points is None:
+            points = quick_points(total) if quick else range(total + 1)
+        for point in points:
+            rec = self.run_one(workload, point, total=total, setup=setup)
+            try:
+                invariant(rec)
+            except AssertionError as e:
+                raise AssertionError(
+                    f"invariant violated at crash point {point}/{total} "
+                    f"(crashed={rec.crashed}): {e}") from e
+        return len(list(points))
+
+
+# --- the canonical chain torture (acceptance sweep + CI smoke) -------------------
+
+
+def chain_workload(payload: bytes, name: str = "f"
+                   ) -> Callable[[CrashCtx], None]:
+    """The PR's headline unit: a linked create → write(PrevResult("ino"))
+    → fsync chain submitted as one batch."""
+    from repro.core.interface import PrevResult, SQE_LINK, SubmissionEntry
+
+    def run(ctx: CrashCtx) -> None:
+        comps = ctx.mount.submit([
+            SubmissionEntry("create", (1, name), user_data="c",
+                            flags=SQE_LINK),
+            SubmissionEntry("write", (PrevResult("ino"), 0, payload),
+                            user_data="w", flags=SQE_LINK),
+            SubmissionEntry("fsync", (PrevResult("ino", back=2),),
+                            user_data="s"),
+        ])
+        bad = [(c.user_data, c.errno) for c in comps if not c.ok]
+        assert not bad, f"chain failed without a crash: {bad}"
+
+    return run
+
+
+def all_or_nothing(payload: bytes, path: str = "/f"
+                   ) -> Callable[[Recovered], None]:
+    """After recovery the chain is indivisible: the file either does not
+    exist at all, or exists with the COMPLETE payload — a dirent without
+    data, a short file, or a torn tail all fail. The no-crash control
+    (crashed=False) must see the file. General fs consistency (statfs,
+    readdir) must hold at every point."""
+
+    def invariant(rec: Recovered) -> None:
+        if rec.view.exists(path):
+            got = rec.view.read_file(path)
+            assert got == payload, (
+                f"half-applied chain: {path} exists with {len(got)}B "
+                f"(expected {len(payload)}B or no file)")
+        else:
+            assert rec.crashed, f"no crash, yet {path} is missing"
+        rec.view.statfs()
+        rec.view.listdir("/")
+
+    return invariant
+
+
+def torture_chain(kind: str = "xv6", *, payload_blocks: int = 2,
+                  quick: bool = False) -> int:
+    """Sweep the canonical chain on one fs kind; returns points swept."""
+    from repro.fs.ext4like import Ext4LikeFileSystem
+    from repro.fs.xv6 import Xv6FileSystem, Xv6Options
+
+    factory = {
+        "xv6": lambda: Xv6FileSystem(Xv6Options()),
+        "ext4like": lambda: Ext4LikeFileSystem(),
+    }[kind]
+    payload = b"C" * (payload_blocks * 4096 + 17)  # off-block tail: torn shows
+    sim = CrashSim(factory)
+    return sim.sweep(chain_workload(payload), all_or_nothing(payload),
+                     quick=quick)
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="bounded crash-point subset (CI smoke)")
+    ap.add_argument("--kind", default="both",
+                    choices=["xv6", "ext4like", "both"])
+    ap.add_argument("--payload-blocks", type=int, default=2)
+    args = ap.parse_args()
+    kinds = ["xv6", "ext4like"] if args.kind == "both" else [args.kind]
+    for kind in kinds:
+        n = torture_chain(kind, payload_blocks=args.payload_blocks,
+                          quick=args.quick)
+        mode = "quick subset" if args.quick else "exhaustive"
+        print(f"crashsim {kind}: create→write(PrevResult)→fsync chain "
+              f"all-or-nothing at {n} crash points ({mode}) — OK")
+
+
+if __name__ == "__main__":
+    main()

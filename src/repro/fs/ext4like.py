@@ -35,6 +35,18 @@ class Ext4LikeFileSystem(Xv6FileSystem):
         # dir index: dino -> {name: (bn, off, ino)}
         self._dirindex: Dict[int, Dict[str, Tuple[int, int, int]]] = {}
 
+    # Chain reservations (see Xv6FileSystem.chain_begin): this fs's write
+    # path extent-preallocates per sub-op, touching up to 6 metadata blocks
+    # (bitmap runs + inode + indirect chain) per reservation — write()
+    # below derives its per-reservation data budget from this same
+    # constant, so estimate and staging can never drift apart.
+    _CHAIN_WRITE_OVERHEAD = 6
+
+    def _invalidate_caches_after_abort(self) -> None:
+        # the live dir index may reflect rolled-back staging; it rebuilds
+        # lazily through the restored journal overlay
+        self._dirindex.clear()
+
     # --- extent allocator -------------------------------------------------------------
     def _balloc_run(self, want: int) -> List[int]:
         """Allocate up to ``want`` contiguous blocks with one bitmap pass."""
@@ -97,7 +109,9 @@ class Ext4LikeFileSystem(Xv6FileSystem):
                 raise FsError(Errno.EFBIG, str(ino))
             pos, n = off, len(data)
             written = 0
-            per_sub = MAXOP_BLOCKS - 6  # data blocks per journal reservation
+            # data blocks per journal reservation (metadata budget shared
+            # with the chain estimator)
+            per_sub = MAXOP_BLOCKS - self._CHAIN_WRITE_OVERHEAD
             while written < n:
                 self._begin_op()
                 # extent-preallocate this sub-op's missing blocks as one run

@@ -10,23 +10,60 @@ commit (several ops per transaction until fsync or the log fills).
 The per-block checksum in the commit record uses the kernel-services
 checksum (Pallas crc32c in the kernel binding) — torn journal writes are
 detected at recovery.
+
+Chain transactions
+------------------
+
+Single operations reserve journal space per (sub-)operation via the fs's
+``_begin_op``.  A linked SQE chain (``SQE_LINK`` — e.g. create →
+write(PrevResult) → fsync) is a larger atomicity unit: ALL of its members'
+``log_write``s must land in ONE transaction, or a crash between two
+commits leaves a half-applied chain on disk.  ``begin_chain`` /
+``end_chain`` make the chain the reservation unit:
+
+* ``begin_chain(estimated_blocks)`` — sizing rule: the caller estimates the
+  chain's whole journal footprint from its *submission entries* (data
+  blocks plus per-op metadata overhead, an upper bound).  If the estimate
+  exceeds the journal's total capacity the chain can NEVER fit and
+  ``JournalFull`` (an ``FsError`` carrying ``ENOSPC``) is raised *before a
+  single block is staged* — the ENOSPC-before-staging rule: the caller
+  fails the chain's first member with ``ENOSPC`` and cancels the rest, so
+  an unserviceable chain leaves no trace in the transaction.  If the chain
+  fits but not next to the currently pending blocks, the open transaction
+  is committed first (a legal pre-chain boundary).
+* while a chain is open, ``commit`` is REFUSED: it is deferred (recorded)
+  instead of executed, so neither an in-chain fsync/flush nor a group-
+  commit heuristic can tear the chain across two commit records.
+* ``end_chain`` closes the scope and executes the deferred commit, if one
+  was requested — the whole chain becomes durable atomically.
+
+A crash at any device write therefore leaves either the whole chain
+installed after ``recover`` or none of it.
 """
 
 from __future__ import annotations
 
 import struct
 import threading
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 from repro.core.capability import SuperBlockCap
+from repro.core.interface import Errno, FsError
 from repro.fs.layout import BSIZE, SuperBlock
 
 _HDR_FMT_HEAD = "<III"  # magic, n, seq
 _HDR_MAGIC = 0x4A524E4C  # "JRNL"
 
 
-class JournalFull(Exception):
-    pass
+class JournalFull(FsError):
+    """Operation/chain footprint exceeds the journal.
+
+    An ``FsError`` (errno ``ENOSPC``) so the batched boundary's errno-
+    isolation path turns it into a per-entry completion instead of letting
+    it escape ``submit_batch`` as a raw exception."""
+
+    def __init__(self, msg: str = ""):
+        super().__init__(Errno.ENOSPC, msg)
 
 
 class Journal:
@@ -40,26 +77,147 @@ class Journal:
         self._lock = threading.RLock()
         self._pending: Dict[int, bytes] = {}  # home blockno -> data (absorbed)
         self._seq = 0
+        self._in_chain = False        # chain scope open: commits defer
+        self._chain_owner: Optional[int] = None  # thread id holding the scope
+        self._chain_deferred = False  # a commit was requested mid-chain
+        self._member_undo: Optional[Dict[int, Optional[bytes]]] = None
+        self._op_undo: Optional[Dict[int, Optional[bytes]]] = None
+        # called after any undo-rollback so the fs can drop in-memory
+        # state (inode cache, dir indexes) derived from the rolled-back
+        # staging; set by the fs at init
+        self.rollback_listener = None
         self.commits = 0
         self.blocks_logged = 0
+        self.chains = 0          # chain reservations taken
+        self.chain_precommits = 0  # commits forced to make room for a chain
 
     # --- write path ---------------------------------------------------------------
     def log_write(self, blockno: int, data: bytes) -> None:
         """Stage a block into the current transaction (absorbs duplicates).
 
         NB: never commits mid-operation — ops reserve space via the fs's
-        ``_begin_op`` (xv6 ``begin_op`` semantics), so a crash can only land
-        between whole operations, keeping every op atomic."""
+        ``_begin_op`` (xv6 ``begin_op`` semantics) or, for a linked chain,
+        via ``begin_chain``, so a crash can only land between whole
+        operations/chains, keeping each one atomic."""
         with self._lock:
+            # undo entry BEFORE the overflow check: callers mutate the
+            # cache buffer first, so even a refused log_write must leave
+            # its block invalidatable by the rollback
+            undo = self._member_undo if self._in_chain else self._op_undo
+            if undo is not None and blockno not in undo:
+                undo[blockno] = self._pending.get(blockno)
             if len(self._pending) >= self.capacity and blockno not in self._pending:
+                if not self._in_chain:
+                    # overflow outside a chain: roll the current op scope
+                    # back NOW, so the ENOSPC that reaches the caller means
+                    # "this (sub-)op staged nothing" — a later group commit
+                    # can never install a torn op (in-chain overflows roll
+                    # back in chain_member_abort instead)
+                    self._rollback_locked(self._op_undo)
+                    self._op_undo = None
                 raise JournalFull(
                     f"operation overflowed the journal ({self.capacity} blocks) "
-                    "— missing _begin_op reservation")
+                    "— missing _begin_op/begin_chain reservation")
             self._pending[blockno] = bytes(data)
 
     def commit(self) -> None:
         with self._lock:
+            if self._in_chain:
+                # Refused mid-chain: the chain must land in ONE transaction.
+                # Recorded and executed by end_chain.
+                self._chain_deferred = True
+                return
             self._commit_locked()
+
+    # --- chain-scoped reservation (linked SQE chains) ------------------------------
+    @property
+    def in_chain(self) -> bool:
+        return self._in_chain
+
+    @property
+    def in_chain_here(self) -> bool:
+        """Chain scope open AND owned by the calling thread. The member-
+        bracketing fast path in ``submit_batch`` checks this BEFORE taking
+        the fs lock — a concurrent submitter on another thread must see
+        False, or it would clobber the owner's member undo log."""
+        return self._in_chain and self._chain_owner == threading.get_ident()
+
+    def begin_chain(self, estimated_blocks: int) -> None:
+        """Open a chain scope sized for ``estimated_blocks`` journal blocks
+        (an upper bound computed from the chain's submission entries).
+
+        Raises ``JournalFull`` (ENOSPC) BEFORE anything is staged when the
+        chain can never fit the journal; commits the open transaction first
+        when the chain fits but not alongside the pending blocks."""
+        with self._lock:
+            if self._in_chain:
+                raise RuntimeError("nested begin_chain — chains may not nest")
+            if estimated_blocks > self.capacity:
+                raise JournalFull(
+                    f"chain needs ~{estimated_blocks} journal blocks, "
+                    f"capacity is {self.capacity} — cannot be made atomic")
+            if len(self._pending) + estimated_blocks > self.capacity:
+                self.chain_precommits += 1
+                self._commit_locked()
+            self._in_chain = True
+            self._chain_owner = threading.get_ident()
+            self._chain_deferred = False
+            self.chains += 1
+
+    def end_chain(self) -> None:
+        """Close the chain scope; run the commit an in-chain fsync/flush
+        deferred (the whole chain becomes durable atomically)."""
+        with self._lock:
+            self._in_chain = False
+            self._chain_owner = None
+            self._member_undo = None
+            if self._chain_deferred:
+                self._chain_deferred = False
+                self._commit_locked()
+
+    # Per-MEMBER bracketing inside a chain scope: the reservation estimate
+    # is an upper bound only for literal payloads (a PrevResult-fed write's
+    # size is unknowable at begin_chain), so a member may still overflow
+    # mid-staging. The undo log scopes that damage to the member: abort
+    # restores every block the member touched, so an ENOSPC member stages
+    # NOTHING — earlier (successful) members' blocks stay, matching
+    # io_uring link semantics, and no torn member can ever be committed.
+    def chain_member_begin(self) -> None:
+        with self._lock:
+            self._member_undo = {}
+
+    def chain_member_end(self) -> None:
+        with self._lock:
+            self._member_undo = None
+
+    def chain_member_abort(self) -> None:
+        with self._lock:
+            undo, self._member_undo = self._member_undo, None
+            self._rollback_locked(undo)
+
+    # --- op-scoped undo (non-chain reservations) ------------------------------------
+    def begin_op_scope(self) -> None:
+        """Arm the undo log for one (sub-)operation's staging — called by
+        the fs's ``_begin_op``. An overflow before the next scope rolls
+        back to this point, so ENOSPC always means "nothing staged by the
+        failing (sub-)op" on the scalar and unchained paths too."""
+        with self._lock:
+            self._op_undo = {}
+
+    def _rollback_locked(self, undo: Optional[Dict[int, Optional[bytes]]]
+                         ) -> None:
+        for blockno, prior in (undo or {}).items():
+            if prior is None:
+                self._pending.pop(blockno, None)
+            else:
+                self._pending[blockno] = prior
+        # ops mutate CACHE buffers in place before logging; drop the
+        # scope's blocks so reads refetch the device and re-overlay the
+        # (restored) pending state, and let the fs drop derived caches
+        if undo:
+            self.ks.sb_invalidate_blocks(self.sb_cap, list(undo))
+            if self.rollback_listener is not None:
+                self.rollback_listener()
 
     def pending_get(self, blockno: int):
         """Read-through overlay: committed-but-unstaged data visible to
@@ -156,3 +314,10 @@ class Journal:
         with self._lock:
             self._pending = dict(state.get("pending", {}))
             self._seq = int(state.get("seq", 0))
+            # chains never span an upgrade (the gate drains whole batches,
+            # and a chain lives inside one batch) — reset defensively
+            self._in_chain = False
+            self._chain_owner = None
+            self._chain_deferred = False
+            self._member_undo = None
+            self._op_undo = None

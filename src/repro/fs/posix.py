@@ -28,7 +28,7 @@ from __future__ import annotations
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.core.interface import (Attr, Errno, FsError, PrevResult, ROOT_INO,
-                                  SQE_LINK, SubmissionEntry)
+                                  SQE_DRAIN, SQE_LINK, SubmissionEntry)
 
 
 class PosixView:
@@ -342,12 +342,17 @@ class PosixView:
         order and stop at the first failure — the rest complete
         ``ECANCELED``, and the trailing flush (when ``fsync``) is the chain
         tail, so nothing commits unless EVERY write succeeded (the
-        checkpoint store's leaf-writes→manifest-commit ordering). A
-        cancelled flush raises the first failing member's real errno in
-        strict mode; with ``strict=False`` the per-entry slots tell the
-        story (FsError / ECANCELED values) and nothing raises. Chained
-        execution is member-by-member, so it trades the coalescing fast
-        path for the ordering guarantee."""
+        checkpoint store's manifest-commit ordering). A chain is also ONE
+        journal transaction (crash-atomic: after a crash either every
+        write is installed or none — see ``repro.fs.journal``), which
+        bounds it by journal capacity: a chain whose estimated footprint
+        can never fit completes ENOSPC-first/ECANCELED-rest, so keep
+        chained batches small (they are an atomicity unit, not a bulk-data
+        path). A cancelled flush raises the first failing member's real
+        errno in strict mode; with ``strict=False`` the per-entry slots
+        tell the story (FsError / ECANCELED values) and nothing raises.
+        Chained execution is member-by-member, so it trades the coalescing
+        fast path for the ordering + atomicity guarantees."""
         norm = [(it[0], 0, it[1]) if len(it) == 2 else it for it in items]
         resolved = self._walk_many([p for p, _, _ in norm], strict=strict,
                                    create=create)
@@ -359,7 +364,11 @@ class PosixView:
                                    user_data=norm[i][0], flags=flags)
                    for i in idxs]
         if fsync:
-            entries.append(SubmissionEntry("flush", (), user_data="<flush>"))
+            # chained: the flush is the chain TAIL (cancelled if any write
+            # failed); unchained: SQE_DRAIN documents the barrier — the
+            # flush runs only after every write completed
+            entries.append(SubmissionEntry("flush", (), user_data="<flush>",
+                                           flags=0 if chain else SQE_DRAIN))
         comps = self.m.submit(entries)
         if fsync:
             flush = comps[-1]
@@ -446,7 +455,9 @@ class PosixView:
                                             items[i][1]),
                                            user_data=(i, "write")))
         if fsync and entries:
-            entries.append(SubmissionEntry("flush", (), user_data="<flush>"))
+            # drain barrier: the commit waits for every chain in the batch
+            entries.append(SubmissionEntry("flush", (), user_data="<flush>",
+                                           flags=SQE_DRAIN))
         comps = self.m.submit(entries) if entries else []
         if fsync and entries:
             comps[-1].unwrap()

@@ -24,7 +24,7 @@ from repro.core.interface import (Attr, BentoFilesystem, CompletionEntry,
                                   Errno, FileKind, FsError, ROOT_INO,
                                   SubmissionEntry)
 from repro.fs import layout as L
-from repro.fs.journal import Journal
+from repro.fs.journal import Journal, JournalFull
 
 
 MAXOP_BLOCKS = 16  # journal blocks one (sub-)operation may touch
@@ -105,6 +105,9 @@ class Xv6FileSystem(BentoFilesystem):
             raise FsError(Errno.EINVAL, "bad magic: not an xv6 filesystem")
         self.journal = Journal(services, sb, self.geo,
                                batched_install=self.opts.batched_install)
+        # after any journal rollback (op-scope overflow or chain-member
+        # abort) the in-memory caches may reflect the rolled-back staging
+        self.journal.rollback_listener = self._after_journal_rollback
         self.journal.recover()
 
     def destroy(self) -> None:
@@ -150,14 +153,28 @@ class Xv6FileSystem(BentoFilesystem):
     def _begin_op(self) -> None:
         """Reserve journal space for one (sub-)operation — commits the
         running transaction first if it could not absorb MAXOP_BLOCKS more
-        (xv6 begin_op), so operations are never torn across commits."""
+        (xv6 begin_op), so operations are never torn across commits.
+
+        Inside a chain scope this is a no-op: ``chain_begin`` already
+        reserved the WHOLE chain's footprint, and a mid-chain commit here
+        would tear the chain across two transactions."""
+        if self.journal.in_chain:
+            return
         if len(self.journal._pending) + MAXOP_BLOCKS >= self.journal.capacity:
             self.stats["commits_forced"] += 1
             self.journal.commit()
+        self.journal.begin_op_scope()  # overflow rolls back to this point
 
     def _end_op(self, mutated: bool) -> None:
         self.stats["ops"] += 1
         if not mutated:
+            return
+        if self.journal.in_chain:
+            # per-op commit policy (the VFS baseline) defers to end_chain —
+            # one transaction per chain; the group-commit threshold
+            # heuristic simply waits until the chain closes.
+            if not self.opts.group_commit:
+                self.journal.commit()
             return
         if not self.opts.group_commit:
             self.journal.commit()
@@ -165,6 +182,60 @@ class Xv6FileSystem(BentoFilesystem):
                 self.journal.capacity * self.opts.commit_threshold):
             self.stats["commits_forced"] += 1
             self.journal.commit()
+
+    # --- chain-scoped reservation (SQE_LINK chains as one journal txn) --------------
+    #
+    # ``execute_batch`` calls chain_begin/chain_end around every chain
+    # group. The estimate is an upper bound computed from the submission
+    # entries (data blocks + per-op metadata overhead); absorption makes
+    # the real footprint smaller. The fs lock is held for the WHOLE chain
+    # scope so no concurrent op can slip a commit between two members (the
+    # members re-enter it, it is reentrant).
+
+    _CHAIN_WRITE_OVERHEAD = 4  # inode + bitmap + up to 2 indirect blocks
+    _CHAIN_OP_BLOCKS = {
+        "create": 6, "mkdir": 8, "unlink": 6, "rmdir": 8, "rename": 8,
+        "getattr": 0, "lookup": 0, "read": 0, "readdir": 0, "statfs": 0,
+        "fsync": 0, "flush": 0,
+    }
+
+    def _chain_entry_blocks(self, e: SubmissionEntry) -> int:
+        if e.op == "write":
+            kw = e.kwargs or {}
+            off = e.args[1] if len(e.args) > 1 else kw.get("off")
+            data = e.args[2] if len(e.args) > 2 else kw.get("data")
+            if not isinstance(data, (bytes, bytearray)):
+                return MAXOP_BLOCKS  # PrevResult/malformed payload: worst case
+            start = off % L.BSIZE if isinstance(off, int) else 0
+            nblocks = (start + len(data) + L.BSIZE - 1) // L.BSIZE
+            return nblocks + self._CHAIN_WRITE_OVERHEAD
+        return self._CHAIN_OP_BLOCKS.get(e.op, MAXOP_BLOCKS)
+
+    def estimate_chain_blocks(self, entries) -> int:
+        """Journal-blocks upper bound for a chain, from its entries."""
+        return sum(self._chain_entry_blocks(e) for e in entries)
+
+    def chain_begin(self, entries):
+        est = self.estimate_chain_blocks(entries)
+        self._oplock.acquire()
+        try:
+            self.journal.begin_chain(est)
+        except JournalFull as e:
+            self._oplock.release()
+            return e.errno  # ENOSPC before anything was staged
+        except BaseException:
+            # e.g. a device error inside the pre-chain commit: the scope
+            # never opened, so execute_batch will not call chain_end —
+            # release here or the fs lock leaks
+            self._oplock.release()
+            raise
+        return None
+
+    def chain_end(self) -> None:
+        try:
+            self.journal.end_chain()  # runs any deferred (in-chain) commit
+        finally:
+            self._oplock.release()
 
     # --- inodes ---------------------------------------------------------------------------
     def _iget(self, ino: int) -> L.DiskInode:
@@ -298,9 +369,50 @@ class Xv6FileSystem(BentoFilesystem):
                  "create": "create_many", "mkdir": "mkdir_many",
                  "unlink": "unlink_many"}
 
+    # chain members that can stage journal blocks (and so need the member
+    # undo bracket); read-only members and commit-only members (fsync/flush
+    # defer their commit to end_chain) skip the two journal-lock round
+    # trips — measurable on the chained create→write hot path
+    _CHAIN_MUTATING_OPS = frozenset({
+        "create", "mkdir", "unlink", "rmdir", "rename", "write", "truncate"})
+
     def submit_batch(self, entries) -> List[CompletionEntry]:
         if not isinstance(entries, list):
             entries = list(entries)
+        if self.journal is not None and self.journal.in_chain_here \
+                and any(e.op in self._CHAIN_MUTATING_OPS for e in entries):
+            # chain-member dispatch on the chain-owning thread
+            # (execute_batch sends members one at a time; a CONCURRENT
+            # submitter sees in_chain_here False and takes the plain path,
+            # blocking on the fs lock the chain holds): bracket the
+            # member's journal staging so a reservation estimate miss
+            # (PrevResult-fed payload larger than guessed → JournalFull →
+            # ENOSPC) rolls back cleanly — an ENOSPC member stages
+            # NOTHING, so a later group commit can never make a torn
+            # member durable.
+            self.journal.chain_member_begin()
+            comps = self._submit_batch_runs(entries)
+            if any(c.errno == Errno.ENOSPC for c in comps):
+                self.journal.chain_member_abort()  # fires rollback_listener
+            else:
+                self.journal.chain_member_end()
+            return comps
+        return self._submit_batch_runs(entries)
+
+    def _after_journal_rollback(self) -> None:
+        """Journal rollback listener: in-memory caches may hold the
+        rolled-back staging (e.g. a torn write's inflated inode size) —
+        drop them; they rebuild through the restored journal overlay.
+        Subclasses layer their derived indexes in ``_invalidate_caches_
+        after_abort``."""
+        self._icache.clear()
+        self._invalidate_caches_after_abort()
+
+    def _invalidate_caches_after_abort(self) -> None:
+        """Subclass hook: drop derived in-memory state after a journal
+        rollback (see ext4like's directory index)."""
+
+    def _submit_batch_runs(self, entries) -> List[CompletionEntry]:
         comps: List[CompletionEntry] = []
         i, n = 0, len(entries)
         while i < n:

@@ -24,7 +24,7 @@ from typing import Dict, List, Optional, Tuple
 import pytest
 
 from repro.core.interface import (Attr, Errno, FsError, PrevResult, ROOT_INO,
-                                  SQE_LINK, SubmissionEntry)
+                                  SQE_DRAIN, SQE_LINK, SubmissionEntry)
 from repro.fs.mounts import make_mount
 
 try:
@@ -108,6 +108,45 @@ def gen_steps(rng: random.Random, n: int) -> List[Tuple]:
     return steps
 
 
+def gen_deep_chain_steps(rng: random.Random, n_chains: int) -> List[Tuple]:
+    """Chains whose journal footprint exceeds one MAXOP_BLOCKS (16)
+    reservation — multi-block single writes, deep linked write runs, and
+    big PrevResult create→write pairs — sized to always FIT the journal
+    (capacity 63 on these mounts), so the chain-transaction path executes
+    rather than refusing with ENOSPC (refusal is unit-tested separately:
+    the scalar reference cannot emulate it)."""
+    steps: List[Tuple] = []
+    for _ in range(n_chains):
+        r = rng.random()
+        f = rng.randrange(2)
+        if r < 0.4:
+            # one write > MAXOP_BLOCKS: 17-24 blocks
+            nb = rng.randrange(17, 25)
+            steps.append(("write", (f, rng.randrange(2) * L_BSIZE,
+                                    bytes([65 + rng.randrange(26)])
+                                    * (nb * L_BSIZE)), True))
+            steps.append(("fsync", (f,), False))
+        elif r < 0.75:
+            # deep chain: 4-6 linked writes of 2-4 blocks each
+            depth = rng.randrange(4, 7)
+            for k in range(depth):
+                nb = rng.randrange(2, 5)
+                steps.append(("write", (f, k * 4 * L_BSIZE,
+                                        bytes([97 + rng.randrange(26)])
+                                        * (nb * L_BSIZE)), True))
+            steps.append(("fsync", (f,), False))
+        else:
+            # chained create→write(PrevResult) with a >MAXOP payload;
+            # name collisions exercise mid-chain cancellation too
+            steps.append(("chain_cw", (rng.randrange(3), rng.choice(NAMES),
+                                       bytes([65 + rng.randrange(26)])
+                                       * (18 * L_BSIZE)), None))
+    return steps
+
+
+L_BSIZE = 4096
+
+
 # Handcrafted sequences hitting specific edges: duplicate creates in one
 # batch, unlink-then-create reusing the slot, chain cancellation mid-batch,
 # lookups racing creates, writes to an unlinked ino (ESTALE path).
@@ -129,6 +168,26 @@ HANDMADE: List[List[Tuple]] = [
     [("write", (0, 0, b"W" * 123), True), ("read", (0, 0, 123), True),
      ("fsync", (0,), False),
      ("getattr_dir", (0,), False)],
+    # chain whose write exceeds ONE MAXOP_BLOCKS (16) reservation: the
+    # batched side runs it as a single chain transaction (chain-aware
+    # reservation), the scalar side as per-sub-op reservations — results
+    # and trees must still match
+    [("write", (0, 0, b"J" * (20 * 4096)), True),
+     ("read", (0, 0, 20 * 4096), True), ("fsync", (0,), False),
+     ("read", (1, 0, 64), False)],
+    # deep chain: linked multi-block writes whose cumulative footprint
+    # exceeds one reservation (but fits the journal)
+    [("write", (0, 0, b"a" * (4 * 4096)), True),
+     ("write", (0, 4 * 4096, b"b" * (4 * 4096)), True),
+     ("write", (0, 8 * 4096, b"c" * (4 * 4096)), True),
+     ("write", (0, 12 * 4096, b"d" * (4 * 4096)), True),
+     ("fsync", (0,), False),
+     ("getattr_dir", (0,), False)],
+    # chained create→write with a multi-block payload (PrevResult feeding
+    # a >MAXOP chain), then a drain barrier entry after the chain
+    [("chain_cw", (2, "big", b"k" * (18 * 4096)), None),
+     ("read", (0, 0, 50), "drain"),
+     ("lookup", (2, "big"), False)],
 ]
 
 
@@ -137,7 +196,9 @@ def _entries_for(steps, dirs, files) -> List[SubmissionEntry]:
     out: List[SubmissionEntry] = []
     uid = 0
     for op, spec, link in steps:
-        flags = SQE_LINK if link else 0
+        # link spec: True -> SQE_LINK, "drain" -> SQE_DRAIN barrier
+        flags = SQE_LINK if link is True else \
+            (SQE_DRAIN if link == "drain" else 0)
         if op == "chain_cw":
             d, name, data = spec
             out.append(SubmissionEntry("create", (dirs[d], name),
@@ -277,6 +338,16 @@ def test_seeded_random_sequences_equivalent(kind, seed):
     _assert_equivalent(kind, steps, batch_sizes=[1, 7, 16, 4])
 
 
+@pytest.mark.parametrize("kind", ["bento", "vfs", "ext4like"])
+@pytest.mark.parametrize("seed", [11, 12, 13])
+def test_deep_chain_sequences_equivalent(kind, seed):
+    """Chains exceeding one MAXOP_BLOCKS reservation: the chain-aware
+    journal reservation path (one transaction per chain) must be
+    byte-identical to scalar execution (per-sub-op reservations)."""
+    steps = gen_deep_chain_steps(random.Random(seed), 5)
+    _assert_equivalent(kind, steps, batch_sizes=[3, 9])
+
+
 def test_fuse_equivalence_smoke():
     """One seeded sequence through the FUSE daemon (chains cross the
     socket as one round trip); kept small — each op forks real I/O."""
@@ -302,3 +373,10 @@ if hp is not None:
     def test_random_sequences_equivalent_ext4like(seed):
         steps = gen_steps(random.Random(seed), 40)
         _assert_equivalent("ext4like", steps, batch_sizes=[8])
+
+    @hp.given(seed=st.integers(0, 2**32 - 1),
+              n_chains=st.integers(2, 7))
+    @hp.settings(max_examples=10, deadline=None)
+    def test_deep_chain_sequences_equivalent_property(seed, n_chains):
+        steps = gen_deep_chain_steps(random.Random(seed), n_chains)
+        _assert_equivalent("bento", steps, batch_sizes=[4, 11])

@@ -1,0 +1,308 @@
+"""Crash-point torture sweeps on the ``repro.fs.crashsim`` harness.
+
+Every test here enumerates device-write crash points (CrashMonkey-style)
+instead of sampling them: the harness measures a workload's write
+footprint, then re-runs it once per crash point with power loss injected,
+remounts cold (``Journal.recover()``) and asserts an invariant.
+
+The acceptance sweep — a linked create → write(PrevResult) → fsync chain
+proven all-or-nothing at EVERY crash point on both xv6 and ext4like —
+runs in tier-1 (it is small). The journal-pressure variant is the
+regression tripwire for the chain-aware reservation itself: it is
+calibrated so that the old per-member ``_begin_op`` reservation commits
+MID-CHAIN (create durable without its write) and the sweep fails, which
+was verified by disabling the chain hooks. Heavier corpora (multi-op
+batches at scale, the checkpoint manifest chain exhaustively) are marked
+``slow``; bounded subsets of them stay in tier-1.
+"""
+
+import pytest
+
+from repro.core.interface import (Errno, PrevResult, ROOT_INO, SQE_LINK,
+                                  SubmissionEntry)
+from repro.fs.crashsim import (CrashSim, all_or_nothing, chain_workload,
+                               quick_points, torture_chain)
+from repro.fs.ext4like import Ext4LikeFileSystem
+from repro.fs.xv6 import Xv6FileSystem, Xv6Options
+
+FACTORIES = {
+    "xv6": lambda: Xv6FileSystem(Xv6Options()),
+    "ext4like": lambda: Ext4LikeFileSystem(),
+    "xv6-vfs": lambda: Xv6FileSystem(Xv6Options(group_commit=False,
+                                                batched_install=False)),
+}
+
+
+# --- the acceptance sweep: every crash point, both fs kinds ----------------------
+
+
+@pytest.mark.parametrize("kind", ["xv6", "ext4like"])
+def test_linked_chain_all_or_nothing_every_crash_point(kind):
+    """EVERY device-write crash point of a create→write(PrevResult)→fsync
+    chain leaves the file either fully present or fully absent after
+    recovery — the chain-transaction guarantee, enumerated exhaustively."""
+    points = torture_chain(kind, payload_blocks=2)
+    assert points > 10  # the chain really hit the device
+
+
+def test_quick_points_bounded_and_covers_edges():
+    pts = quick_points(100, n=12)
+    assert len(pts) <= 16
+    assert {0, 1, 99, 100} <= set(pts)
+    assert quick_points(5) == [0, 1, 2, 3, 4, 5]
+
+
+# --- the regression tripwire: chain under journal pressure -----------------------
+
+
+def test_chain_atomic_under_journal_pressure():
+    """A chain submitted while ~14 unflushed journal blocks are pending
+    (capacity 31): the old per-member ``_begin_op`` reservation hits its
+    commit trigger BETWEEN the create and the write, committing a
+    half-applied chain — with the chain hooks disabled this sweep fails at
+    the crash point between those commits. Chain-aware reservation must
+    keep every point all-or-nothing."""
+    payload = b"C" * (2 * 4096 + 17)
+
+    def setup(ctx):
+        ctx.view.mkdir("/d1")
+        ctx.view.mkdir("/d2")
+
+    def workload(ctx):
+        # pressure: unflushed 11-block write fills pending to ~14 of 31;
+        # the chain's create (fresh dir block in /d2, nothing to absorb)
+        # then pushes pending past the per-op reservation trigger
+        ino = ctx.view.create("/d1/pressure").ino
+        ctx.mount.call("write", ino, 0, b"P" * (11 * 4096))
+        d2 = ctx.view.stat("/d2").ino
+        comps = ctx.mount.submit([
+            SubmissionEntry("create", (d2, "f"), user_data="c",
+                            flags=SQE_LINK),
+            SubmissionEntry("write", (PrevResult("ino"), 0, payload),
+                            user_data="w", flags=SQE_LINK),
+            SubmissionEntry("fsync", (PrevResult("ino", back=2),),
+                            user_data="s"),
+        ])
+        assert all(c.ok for c in comps), \
+            [(c.user_data, c.errno) for c in comps]
+        assert ctx.fs.journal.chains >= 1  # chain scope really taken
+
+    sim = CrashSim(FACTORIES["xv6"])
+    sim.sweep(workload, all_or_nothing(payload, "/d2/f"), setup=setup)
+
+
+def test_vfs_per_op_commit_chain_still_atomic():
+    """The VFS-direct policy (commit at end of EVERY op) would naturally
+    commit each chain member separately; in chain scope those commits
+    defer to end_chain, so even this baseline gets all-or-nothing
+    chains."""
+    payload = b"V" * (3 * 4096 + 5)
+    sim = CrashSim(FACTORIES["xv6-vfs"])
+    sim.sweep(chain_workload(payload), all_or_nothing(payload))
+
+
+# --- single ops and multi-op batches ---------------------------------------------
+
+
+def test_single_op_overwrite_every_crash_point():
+    """A single fsync'd overwrite is old XOR new at every crash point (the
+    op-granular atomicity the chain work must not regress)."""
+    old, new = b"O" * (2 * 4096), b"N" * (2 * 4096)
+
+    def setup(ctx):
+        ctx.view.write_file("/f", old)
+
+    def workload(ctx):
+        ctx.view.write_file("/f", new, create=False)
+        ctx.view.fsync("/f")
+
+    def invariant(rec):
+        got = rec.view.read_file("/f")
+        assert got in (old, new), f"torn overwrite: {len(got)}B"
+        if not rec.crashed:
+            assert got == new
+        rec.view.statfs()
+
+    CrashSim(FACTORIES["xv6"]).sweep(workload, invariant, setup=setup)
+
+
+def test_multi_op_batch_commits_as_unit_every_crash_point():
+    """An unchained write batch + flush stages everything in one open
+    transaction: after a crash, either the whole batch is visible or none
+    of it (group commit's atomicity, enumerated)."""
+    old = {f"/f{i}": bytes([65 + i]) * 4096 for i in range(3)}
+    new = {p: bytes([97 + i]) * 4096 for i, p in enumerate(old)}
+
+    def setup(ctx):
+        for p, data in old.items():
+            ctx.view.write_file(p, data)
+
+    def workload(ctx):
+        ctx.view.write_many([(p, 0, d) for p, d in new.items()],
+                            create=False, fsync=True)
+
+    def invariant(rec):
+        states = {p: rec.view.read_file(p) for p in old}
+        if any(states[p] == new[p] for p in old):
+            assert states == new, f"batch tore: {[len(v) for v in states.values()]}"
+        else:
+            assert states == old
+        rec.view.listdir("/")
+
+    CrashSim(FACTORIES["xv6"]).sweep(workload, invariant, setup=setup)
+
+
+# --- chain overflow: ENOSPC before staging, never a raised JournalFull -----------
+
+
+@pytest.mark.parametrize("kind", ["xv6", "ext4like"])
+def test_chain_exceeding_journal_capacity_fails_clean(kind):
+    """A chain whose footprint can never fit the journal (40-block write,
+    capacity 31) completes ENOSPC-first/ECANCELED-rest with NOTHING staged
+    and NO device write — never a raised JournalFull — and the fs keeps
+    serving."""
+    sim = CrashSim(FACTORIES[kind])
+    ctx = sim.boot(None)
+    w0 = ctx.dev.writes
+    comps = ctx.mount.submit([
+        SubmissionEntry("create", (ROOT_INO, "big"), user_data="c",
+                        flags=SQE_LINK),
+        SubmissionEntry("write", (PrevResult("ino"), 0, b"X" * (40 * 4096)),
+                        user_data="w", flags=SQE_LINK),
+        SubmissionEntry("fsync", (PrevResult("ino", back=2),),
+                        user_data="s"),
+    ])
+    assert [c.errno for c in comps] == \
+        [Errno.ENOSPC, Errno.ECANCELED, Errno.ECANCELED]
+    assert len(ctx.fs.journal._pending) == 0  # nothing staged
+    assert ctx.dev.writes == w0               # nothing hit the device
+    assert not ctx.view.exists("/big")
+    ctx.view.write_file("/ok", b"still serving")   # fs healthy after refusal
+    assert ctx.view.read_file("/ok") == b"still serving"
+
+
+# --- the checkpoint store's manifest chain ---------------------------------------
+
+
+def _ckpt_roundtrip(points):
+    """Sweep a full checkpoint save; after any crash the store shows
+    either no checkpoint at all or a complete, checksum-clean one."""
+    import numpy as np
+
+    from repro.checkpoint import store
+
+    tree = {"w": np.arange(48, dtype=np.float32).reshape(6, 8),
+            "b": np.ones(16, dtype=np.float32)}
+
+    def workload(ctx):
+        store.save(ctx.view, "/ckpt/step_1", tree, step=1,
+                   checksum=ctx.ks.checksum)
+
+    def invariant(rec):
+        step = store.latest_step(rec.view, "/ckpt")
+        if step is None:
+            assert rec.crashed, "no crash, yet the checkpoint is missing"
+            return
+        assert step == 1
+        got, manifest = store.load(rec.view, "/ckpt/step_1", tree,
+                                   checksum=rec.ks.checksum)
+        assert manifest["step"] == 1
+        for k in tree:
+            np.testing.assert_array_equal(got[k], tree[k])
+
+    sim = CrashSim(FACTORIES["xv6"], n_blocks=4096)
+    sim.sweep(workload, invariant, quick=(points == "quick"))
+
+
+def test_checkpoint_manifest_chain_quick_subset():
+    _ckpt_roundtrip("quick")
+
+
+def test_checkpoint_resave_with_shorter_manifest_parses():
+    """Re-saving over an existing checkpoint with a SHORTER manifest must
+    not leave stale tail bytes (write never truncates by itself) — the
+    store clears the old manifest first, so json parses cleanly."""
+    import numpy as np
+
+    from repro.checkpoint import store
+
+    ctx = CrashSim(FACTORIES["xv6"], n_blocks=4096).boot()
+    tree = {"w": np.ones(8, dtype=np.float32)}
+    store.save(ctx.view, "/ckpt/step_1", tree, step=1,
+               checksum=ctx.ks.checksum, extra={"pad": "x" * 120})
+    long_manifest = ctx.view.stat("/ckpt/step_1/manifest.json").size
+    store.save(ctx.view, "/ckpt/step_1", tree, step=1,
+               checksum=ctx.ks.checksum)        # shorter manifest
+    assert ctx.view.stat("/ckpt/step_1/manifest.json").size < long_manifest
+    assert store.latest_step(ctx.view, "/ckpt") == 1
+    got, manifest = store.load(ctx.view, "/ckpt/step_1", tree,
+                               checksum=ctx.ks.checksum)
+    assert manifest["extra"] == {}
+    np.testing.assert_array_equal(got["w"], tree["w"])
+
+
+def test_checkpoint_manifest_bigger_than_journal_txn_still_saves():
+    """A manifest whose JSON exceeds one journal transaction cannot ride
+    the manifest chain (chains are bounded atomicity units, refused
+    ENOSPC up front) — the store must fall back to an unchained write and
+    the checkpoint must still round-trip."""
+    import numpy as np
+
+    from repro.checkpoint import store
+
+    sim = CrashSim(FACTORIES["xv6"], n_blocks=4096, nlog=8)  # capacity 7
+    ctx = sim.boot(None)
+    tree = {"leaves": [np.full((1,), i, dtype=np.float32)
+                       for i in range(96)]}   # manifest JSON > 1 block
+    manifest = store.save(ctx.view, "/ckpt/step_1", tree, step=1,
+                          checksum=ctx.ks.checksum)
+    assert manifest["n_leaves"] == 96
+    assert store.latest_step(ctx.view, "/ckpt") == 1
+    got, _ = store.load(ctx.view, "/ckpt/step_1", tree,
+                        checksum=ctx.ks.checksum)
+    for i, leaf in enumerate(got["leaves"]):
+        np.testing.assert_array_equal(leaf, tree["leaves"][i])
+
+
+@pytest.mark.slow
+def test_checkpoint_manifest_chain_every_crash_point():
+    _ckpt_roundtrip("all")
+
+
+# --- scale sweep (slow): mixed chained + unchained traffic -----------------------
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("kind", ["xv6", "ext4like"])
+def test_mixed_batch_torture_exhaustive(kind):
+    """Chains interleaved with unchained batches, fsyncs and deletes —
+    every fsync'd chain all-or-nothing, every crash point."""
+    payload = b"M" * (4 * 4096 + 9)
+
+    def setup(ctx):
+        ctx.view.mkdir("/d")
+        ctx.view.write_file("/d/base", b"B" * 8192)
+
+    def workload(ctx):
+        d = ctx.view.stat("/d").ino
+        ctx.view.write_many([("/d/base", 0, b"u" * 4096)], create=False)
+        comps = ctx.mount.submit([
+            SubmissionEntry("create", (d, "c1"), user_data=0,
+                            flags=SQE_LINK),
+            SubmissionEntry("write", (PrevResult("ino"), 0, payload),
+                            user_data=1, flags=SQE_LINK),
+            SubmissionEntry("fsync", (PrevResult("ino", back=2),),
+                            user_data=2),
+        ])
+        assert all(c.ok for c in comps)
+        ctx.view.unlink("/d/base")
+        ctx.view.fsync("/d")
+
+    def invariant(rec):
+        if rec.view.exists("/d/c1"):
+            assert rec.view.read_file("/d/c1") == payload
+        rec.view.listdir("/d")
+        rec.view.statfs()
+
+    CrashSim(FACTORIES[kind], n_blocks=4096).sweep(
+        workload, invariant, setup=setup)

@@ -3,12 +3,14 @@ arbitrary device-write count, journal recovery must yield a consistent
 file system in which every fsync'd file is intact — recovered content must
 be the fsync'd version or a *later committed* version (group commit may
 durably commit subsequent writes on its own). Chained submissions add a
-stronger unit: a chain that fits one journal transaction is crash-atomic
-(no half-applied chain survives replay).
+stronger unit: a chain is ONE journal transaction (chain-aware
+reservation), so it is crash-atomic at every device-write point.
 
-The workload-randomizing test is property-based (hypothesis); the
-deterministic tests — torn-commit discard, absorption, crash-mid-chain
-sweep — run everywhere.
+Crash injection, remount-cold recovery and crash-point enumeration all
+live in the shared harness (``repro.fs.crashsim``) — this file carries
+the randomized-workload property (hypothesis, when available) and the
+deterministic journal unit tests; the exhaustive sweeps are in
+``tests/test_crash_torture.py``.
 """
 
 import pytest
@@ -21,7 +23,8 @@ except ImportError:  # deterministic tests still run
     st = None
 
 from repro.core.services import kernel_binding
-from repro.fs.blockdev import BlockDeviceError, MemBlockDevice
+from repro.fs.blockdev import MemBlockDevice
+from repro.fs.crashsim import CrashSim, all_or_nothing, chain_workload
 from repro.fs.posix import PosixView
 from repro.fs.xv6 import Xv6FileSystem, Xv6Options, mkfs
 from repro.fs.mounts import DirectMount
@@ -35,6 +38,12 @@ def _fresh_fs(dev=None, n_blocks=2048):
     fs = Xv6FileSystem(Xv6Options(group_commit=True, batched_install=True))
     fs.init(ks.superblock(), ks)
     return dev, ks, fs, PosixView(DirectMount(fs))
+
+
+def _sim() -> CrashSim:
+    return CrashSim(
+        lambda: Xv6FileSystem(Xv6Options(group_commit=True,
+                                         batched_install=True)))
 
 
 if hp is not None:
@@ -56,28 +65,27 @@ if hp is not None:
 
 
 def _crash_recovery_body(ops, crash_after, data_seed):
-    dev, ks, fs, v = _fresh_fs()
+    """One randomized workload at one crash point, on the shared harness:
+    the workload mutates the model dicts as it goes; the asserts read them
+    against the recovered view."""
     history = {}   # path -> list of every version ever written
     floor = {}     # path -> index into history guaranteed durable (fsync)
-    deleted_after_floor = set()
 
     def payload(i, blocks):
         return bytes([(data_seed + i) % 251]) * (blocks * 4096)
 
-    dev.fail_after_writes = crash_after
-    crashed = False
-    try:
+    def workload(ctx):
+        v = ctx.view
         for i, (op, fidx, blocks) in enumerate(ops):
             path = f"/f{fidx}"
             if op == "write":
                 data = payload(i, blocks)
                 v.write_file(path, data)
                 hist = history.setdefault(path, [])
-                # our write_file overwrites from offset 0; tail of a longer
+                # write_file overwrites from offset 0; tail of a longer
                 # older version survives -> compute effective content
                 prev = hist[-1] if hist else b""
-                eff = data + prev[len(data):]
-                hist.append(eff)
+                hist.append(data + prev[len(data):])
             elif op == "append":
                 data = payload(i, blocks)
                 hist = history.setdefault(path, [b""])
@@ -87,27 +95,21 @@ def _crash_recovery_body(ops, crash_after, data_seed):
                 if path in history:
                     v.fsync(path)
                     floor[path] = len(history[path]) - 1
-                    deleted_after_floor.discard(path)
             elif op == "delete":
                 if path in history and v.exists(path):
                     v.unlink(path)
                     history.pop(path)
                     floor.pop(path, None)
-    except BlockDeviceError:
-        crashed = True
-
-    # power back on before any post-mortem I/O
-    dev.fail_after_writes = -1
-
-    if not crashed:
-        fs.flush()
+        # reached only when no crash fired inside the loop: disarm the
+        # injector (like the original hand-rolled test — power stays on)
+        # and drain to disk, so EVERY surviving version must be durable
+        ctx.dev.fail_after_writes = -1
+        ctx.fs.flush()
         for p in history:
             floor[p] = len(history[p]) - 1
-    ks2 = kernel_binding(dev, writeback="delayed")
-    fs2 = Xv6FileSystem(Xv6Options())
-    fs2.init(ks2.superblock(), ks2)
-    v2 = PosixView(DirectMount(fs2))
 
+    rec = _sim().run_one(workload, crash_after)
+    v2 = rec.view
     for path, fl in floor.items():
         if path not in history:
             continue  # deleted later; no durability claim on deletes
@@ -153,59 +155,28 @@ def test_journal_absorption():
     assert fs.journal.pending_get(0) is None
 
 
-def test_crash_mid_chain_never_half_applied():
-    """Chained create→write→flush with a crash injected at EVERY device-
-    write count the chain can reach (including between the create and the
-    write, and inside the journal commit): after replay the file either
-    does not exist, or exists with the COMPLETE payload — a half-applied
-    chain (entry without data, torn tail) must never survive. Holds
-    because both chain members land in one group-commit transaction and
-    the journal replays transactions atomically (torn commits discarded)."""
-    from repro.core.interface import PrevResult, SQE_LINK, SubmissionEntry
-
-    payload = b"C" * (2 * 4096 + 17)  # multi-block: a torn chain would show
-
-    # measure the chain's total device-write footprint first
+def test_commit_refused_mid_chain_and_run_by_end_chain():
+    """The reservation contract at the journal level: commits requested
+    while a chain scope is open defer to end_chain — the chain's blocks
+    become durable in ONE transaction, never two."""
     dev, ks, fs, v = _fresh_fs()
-    entries = [
-        SubmissionEntry("create", (1, "f"), user_data="c", flags=SQE_LINK),
-        SubmissionEntry("write", (PrevResult("ino"), 0, payload),
-                        user_data="w", flags=SQE_LINK),
-        SubmissionEntry("flush", (), user_data="s"),
-    ]
-    base_writes = dev.writes
-    comps = v.m.submit(entries)
-    assert all(c.ok for c in comps)
-    footprint = dev.writes - base_writes
-    assert footprint > 4  # create+write+commit really hit the device
+    j = fs.journal
+    c0 = j.commits
+    j.begin_chain(8)
+    assert j.in_chain
+    j.log_write(fs.geo.datastart + 1, b"a" * 4096)
+    j.commit()                       # refused: deferred, nothing written
+    assert j.commits == c0 and j._pending
+    j.log_write(fs.geo.datastart + 2, b"b" * 4096)
+    j.end_chain()                    # deferred commit runs here, once
+    assert j.commits == c0 + 1 and not j._pending and not j.in_chain
 
-    half_applied = []
-    for crash_after in range(1, footprint + 1):
-        dev, ks, fs, v = _fresh_fs()
-        dev._writes_seen = 0          # count from here, mkfs writes excluded
-        dev.fail_after_writes = crash_after
-        crashed = False
-        try:
-            v.m.submit([
-                SubmissionEntry("create", (1, "f"), user_data="c",
-                                flags=SQE_LINK),
-                SubmissionEntry("write", (PrevResult("ino"), 0, payload),
-                                user_data="w", flags=SQE_LINK),
-                SubmissionEntry("flush", (), user_data="s"),
-            ])
-        except BlockDeviceError:
-            crashed = True
-        dev.fail_after_writes = -1
-        # power back on: fresh module instances over the surviving blocks
-        ks2 = kernel_binding(dev, writeback="delayed")
-        fs2 = Xv6FileSystem(Xv6Options())
-        fs2.init(ks2.superblock(), ks2)
-        v2 = PosixView(DirectMount(fs2))
-        if v2.exists("/f"):
-            got = v2.read_file("/f")
-            if got != payload:
-                half_applied.append((crash_after, crashed, len(got)))
-        v2.statfs()
-        v2.listdir("/")
-    assert not half_applied, \
-        f"half-applied chains survived recovery: {half_applied}"
+
+def test_crash_mid_chain_never_half_applied():
+    """The PR 2 hand-rolled sweep, ported onto the shared harness: a
+    chained create→write(PrevResult)→fsync crashed at EVERY device-write
+    point recovers all-or-nothing (the chain now holds as one journal
+    transaction by construction, not by luck of group-commit sizing)."""
+    payload = b"C" * (2 * 4096 + 17)  # multi-block: a torn chain would show
+    points = _sim().sweep(chain_workload(payload), all_or_nothing(payload))
+    assert points > 4  # create+write+commit really hit the device

@@ -166,6 +166,46 @@ def test_upgrade_during_chained_batch_never_interleaves_with_swap():
     mf.close()
 
 
+def test_upgrade_during_recovery_window_preserves_chain_atomicity():
+    """Crash a chained create→write→fsync mid-commit; power on straight
+    into a *Bento mount* (init runs ``Journal.recover()``) and upgrade to
+    ext4like before anything else touches the fs. The recovered state —
+    whole chain or no chain — must survive the swap intact, and the
+    upgraded module must keep serving."""
+    from repro.core.registry import mount as bento_mount
+    from repro.core.services import kernel_binding
+    from repro.fs.crashsim import CrashSim, chain_workload
+    from repro.fs.posix import PosixView
+
+    payload = b"U" * (2 * 4096 + 7)
+    sim = CrashSim(lambda: Xv6FileSystem(Xv6Options()))
+    total = sim.measure(chain_workload(payload))
+
+    def migrate(state, old_v, new_v):
+        state = dict(state)
+        state.setdefault("dirindex", {})
+        return state
+
+    # crash at several interesting windows: before, inside and after the
+    # journal commit the fsync tail triggers
+    for point in sorted({1, total // 2, total - 2, total}):
+        rec = sim.run_one(chain_workload(payload), point, total=total)
+        # remount the crashed+recovered device behind the REAL gate/table
+        ks = kernel_binding(rec.dev, writeback="delayed")
+        m = bento_mount("xv6", ks, module=Xv6FileSystem(Xv6Options()))
+        v = PosixView(m)
+        before = v.read_file("/f") if v.exists("/f") else None
+        assert before in (None, payload), "half-applied chain pre-upgrade"
+
+        upgrade(m, Ext4LikeFileSystem(), migrate=migrate)
+
+        after = v.read_file("/f") if v.exists("/f") else None
+        assert after == before, "upgrade changed recovered state"
+        v.write_file("/post", b"serving after crash+recover+upgrade")
+        assert v.read_file("/post") == b"serving after crash+recover+upgrade"
+        m.unmount()
+
+
 def test_trainer_module_state_transfer():
     from repro.configs import registry
     from repro.core.upgrade import transfer_state
