@@ -13,17 +13,31 @@ batched: N-op submission batches through ``Mount.submit`` vs scalar
          to make each launch a real Pallas kernel call). ``--seed`` pins
          the payload rng for reproducible runs; the counter tripwires
          assert, so a silent scalar fallback fails the run (CI smoke).
+threads: ``--threads N`` (with ``--batched``) adds the multi-submitter
+         mode: N worker threads, each staging batches into its THREAD-
+         LOCAL SubmitterQueue, against the same N threads hammering the
+         scalar path. The mount's drainer carries every queue pending at
+         drain time across the boundary in one gate crossing (io_uring
+         SQPOLL-style), so the tripwires here are *aggregate*: gate
+         crossings ≪ submissions (the drain really coalesces concurrent
+         submitters), ≥ 1.5x aggregate throughput over the N scalar
+         threads, and — for the chained phase — exactly one journal chain
+         reservation per create→write pair regardless of how submissions
+         interleaved (chains never split across a drain or merge across
+         submitters).
 
 Mount matrix: bento / vfs / fuse / ext4like (repro.fs.mounts). Op counts are
 bounded (not wall-clock bounded like filebench) so the suite stays CPU-
 friendly; FUSE rows run a reduced op count and report the same ops/s metric.
 
 CLI:  PYTHONPATH=src python -m benchmarks.fs_micro --batched [--kind bento]
+      PYTHONPATH=src python -m benchmarks.fs_micro --batched --threads 4
 """
 
 from __future__ import annotations
 
 import concurrent.futures as cf
+import threading
 import time
 from typing import Dict, List
 
@@ -330,6 +344,155 @@ def bench_batched(kind: str = "bento", *, batch: int = 128,
     return rows
 
 
+def bench_threaded(kind: str = "bento", *, threads: int = 4, batch: int = 128,
+                   batches_per_thread: int = 16, chain_items: int = 96,
+                   seed: int = 7) -> List[Dict]:
+    """Multi-submitter BentoQueues vs the same threads on the scalar path.
+
+    Phase 1 (scalar-shared): ``threads`` workers issue per-op scalar
+    ``read_file`` calls against one shared mount — every op its own gate
+    crossing. Phase 2 (threaded SQs): the same workers issue ``read_many``
+    batches; each worker's submissions stage into its thread-local
+    SubmitterQueue and whichever thread holds the drainer role carries
+    everything pending across the boundary in ONE crossing. Phase 3
+    (threaded chains): each worker commits create→write(PrevResult)→flush
+    chains in its own directory via ``create_and_write_many`` — correct
+    results under concurrency prove chains never split across a drain,
+    and the journal's chain-reservation counter proves they never merge.
+
+    Self-asserting tripwires (CI runs this via --threads):
+      * every completion ok, every read byte-identical to the file;
+      * aggregate batched throughput ≥ 1.5x the scalar-shared phase;
+      * gate crossings ≪ submissions (drains really coalesce; asserted
+        at ≤ 80% — uncontended they would be equal);
+      * chain reservations == total create→write pairs exactly.
+    """
+    rows: List[Dict] = []
+    mf = make_mount(kind, n_blocks=16384)
+    v = mf.view
+    m = mf.mount
+    if not hasattr(m, "start_sqpoll"):
+        mf.close()
+        raise SystemExit(
+            f"--threads needs a gated mount with the multi-submitter "
+            f"queue (bento/ext4like), not {kind!r}")
+    _mk_file(v, "/readfile", FILE_MB, seed=seed)
+    size = 4096
+    n_off = (FILE_MB << 20) // size
+    expect = {i: v.read_file("/readfile", off=(i % n_off) * size, size=size)
+              for i in (0, 1, n_off - 1)}
+    start = threading.Barrier(threads)
+
+    # --- phase 1: N threads sharing the scalar path --------------------------
+    def scalar_worker(t):
+        start.wait()
+        for b in range(batches_per_thread):
+            for i in range(batch):
+                off = ((t * batches_per_thread * batch + b * batch + i)
+                       % n_off) * size
+                v.read_file("/readfile", off=off, size=size)
+
+    wall_scalar = _run_workers(threads, scalar_worker)
+    total_ops = threads * batches_per_thread * batch
+    scalar_ops = total_ops / wall_scalar
+
+    # --- phase 2: N threads, thread-local SQs, dedicated SQPOLL drainer -------
+    m.start_sqpoll()  # submitters append; the poller crosses the boundary
+    g0, s0, d0 = m.gate.crossings, m.mq_submissions, m.mq_drains
+    errors: List[str] = []
+    start = threading.Barrier(threads)
+
+    def sq_worker(t):
+        start.wait()
+        for b in range(batches_per_thread):
+            base = t * batches_per_thread * batch + b * batch
+            specs = [("/readfile", ((base + i) % n_off) * size, size)
+                     for i in range(batch)]
+            got = v.read_many(specs)
+            for (_, off, _), data in zip(specs, got):
+                i = off // size
+                if i in expect and data != expect[i]:
+                    errors.append(f"thread {t}: bad read at off {off}")
+
+    wall_sq = _run_workers(threads, sq_worker)
+    sq_ops = total_ops / wall_sq
+    crossings = m.gate.crossings - g0
+    submissions = m.mq_submissions - s0
+    drains = m.mq_drains - d0
+    assert not errors, errors[:5]
+    rows.append({
+        "bench": "threaded_read", "fs": kind, "threads": threads,
+        "batch": batch, "scalar_ops_per_s": scalar_ops,
+        "batched_ops_per_s": sq_ops, "speedup": sq_ops / scalar_ops,
+        "submissions": submissions, "drains": drains,
+        "gate_crossings": crossings,
+    })
+
+    # --- phase 3: concurrent chains (create→write→flush per item) -------------
+    journal = getattr(getattr(m, "module", None), "journal", None)
+    ch0 = journal.chains if journal else 0
+    per_thread_items = max(1, chain_items // threads)
+    payload = b"p" * 1024
+    start = threading.Barrier(threads)
+    chain_errors: List[str] = []
+
+    def chain_worker(t):
+        v.makedirs(f"/t{t}")
+        start.wait()
+        try:
+            out = v.create_and_write_many(
+                [(f"/t{t}/f{i:04d}", payload)
+                 for i in range(per_thread_items)], fsync=True)
+            if out != [len(payload)] * per_thread_items:
+                chain_errors.append(f"thread {t}: {out[:3]}...")
+        except Exception as e:  # noqa: BLE001 — surfaced by the assert
+            chain_errors.append(f"thread {t}: {type(e).__name__}: {e}")
+
+    wall_chain = _run_workers(threads, chain_worker)
+    m.stop_sqpoll()
+    assert not chain_errors, chain_errors[:5]
+    n_chain = threads * per_thread_items
+    chains_taken = (journal.chains - ch0) if journal else None
+    rows.append({
+        "bench": "threaded_chained_cwf", "fs": kind, "threads": threads,
+        "batch": per_thread_items,
+        "batched_ops_per_s": n_chain / wall_chain,
+        "chain_reservations": chains_taken, "chain_items": n_chain,
+    })
+    # verify: every file present with its payload
+    for t in range(threads):
+        names = v.listdir(f"/t{t}")
+        assert len(names) == per_thread_items, (t, len(names))
+    mf.close()
+
+    # --- tripwires -------------------------------------------------------------
+    r = rows[0]
+    assert r["speedup"] >= 1.5, \
+        (f"threaded SQs only {r['speedup']:.2f}x over {threads} scalar "
+         f"threads (target 1.5x)")
+    assert r["submissions"] >= threads * batches_per_thread  # all submitted
+    assert r["drains"] <= r["submissions"], "drains cannot exceed submissions"
+    assert r["gate_crossings"] <= 0.8 * r["submissions"], \
+        (f"{r['gate_crossings']} crossings for {r['submissions']} "
+         f"submissions — the drain never coalesced concurrent submitters")
+    rc = rows[1]
+    assert rc["chain_reservations"] is None \
+        or rc["chain_reservations"] == rc["chain_items"], \
+        (f"{rc['chain_reservations']} chain reservations for "
+         f"{rc['chain_items']} create→write pairs — a chain merged or split")
+    return rows
+
+
+def _run_workers(n: int, worker) -> float:
+    threads = [threading.Thread(target=worker, args=(t,)) for t in range(n)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return time.perf_counter() - t0
+
+
 def run_all(kinds=ALL_KINDS, quick: bool = False) -> List[Dict]:
     rows: List[Dict] = []
     for kind in kinds:
@@ -350,6 +513,10 @@ def main() -> None:
                     help="mount kind for --batched (default: bento)")
     ap.add_argument("--batch", type=int, default=128)
     ap.add_argument("--total-ops", type=int, default=8192)
+    ap.add_argument("--threads", type=int, default=0,
+                    help="with --batched: also run the multi-submitter "
+                         "mode with N worker threads on thread-local "
+                         "SubmitterQueues vs N scalar threads")
     ap.add_argument("--seed", type=int, default=7,
                     help="rng seed for benchmark payloads (reproducibility)")
     ap.add_argument("--quick", action="store_true")
@@ -399,6 +566,30 @@ def main() -> None:
         for r in slow:
             print(f"WARNING: {r['bench']} speedup {r['speedup']:.2f}x "
                   f"below the 1.5x target")
+        if args.threads > 0:
+            trows = bench_threaded(
+                args.kind, threads=args.threads,
+                batches_per_thread=12 if args.quick else 16,
+                chain_items=48 if args.quick else 96, seed=args.seed)
+            for r in trows:
+                line = (f"{r['bench']}/{r['fs']}/threads{r['threads']}"
+                        f"/batch{r['batch']}:")
+                if "scalar_ops_per_s" in r:
+                    line += (f" scalar {r['scalar_ops_per_s']:.0f} ops/s,"
+                             f" threaded-SQ {r['batched_ops_per_s']:.0f} "
+                             f"ops/s, speedup {r['speedup']:.2f}x")
+                else:
+                    line += f" {r['batched_ops_per_s']:.0f} ops/s"
+                if r.get("submissions") is not None:
+                    line += (f", {r['submissions']} submissions in "
+                             f"{r['drains']} drains "
+                             f"({r['gate_crossings']} gate crossings)")
+                if r.get("chain_reservations") is not None:
+                    line += (f", {r['chain_reservations']} chain txns for "
+                             f"{r['chain_items']} items")
+                print(line)
+            # bench_threaded asserts its own tripwires (crossings ≪
+            # submissions, ≥1.5x aggregate, one chain txn per pair)
     else:
         for r in run_all(quick=args.quick):
             print(r)

@@ -46,8 +46,32 @@ def save(view: PosixView, root: str, tree, *, step: int,
          checksum=None, extra: Optional[Dict] = None) -> Dict:
     view.makedirs(root)
     leaves, treedef = _flatten(tree)
+    manifest_path = f"{root}/{MANIFEST}"
+    # Re-saves bump a GENERATION tag baked into the leaf names, so the new
+    # leaves never overwrite the ones the LIVE manifest references — the
+    # old checkpoint (manifest AND data) stays fully intact until the
+    # manifest swap commits, and stale-generation leaves are collected
+    # after it. Without this, a crash mid-leaf-write would tear the
+    # previous good checkpoint's data under its still-live manifest.
+    gen, old_exists = 0, view.exists(manifest_path)
+    if old_exists:
+        try:
+            gen = int(json.loads(view.read_file(manifest_path))
+                      .get("gen", 0)) + 1
+        except (ValueError, FsError):
+            gen = 1  # old manifest torn/unreadable: start a fresh line
+    # whatever suggested the tag, probe past any leaf names a CRASHED
+    # attempt already occupies (its swap never committed, so the live
+    # manifest still names the previous gen): fresh leaf writes must
+    # never land on a stale same-name file — a shorter overwrite would
+    # keep the old tail, because write never truncates
+    while leaves and view.exists(
+            f"{root}/leaf_00000{f'_g{gen}' if gen else ''}.npy"):
+        gen += 1
+    suffix = f"_g{gen}" if gen else ""
     manifest = {
         "step": step,
+        "gen": gen,
         "treedef": str(treedef),
         "n_leaves": len(leaves),
         "leaves": [],
@@ -63,7 +87,7 @@ def save(view: PosixView, root: str, tree, *, step: int,
         buf = io.BytesIO()
         np.save(buf, save_arr)
         raw = buf.getvalue()
-        path = f"{root}/leaf_{i:05d}.npy"
+        path = f"{root}/leaf_{i:05d}{suffix}.npy"
         items.append((path, raw))
         pending_bytes += len(raw)
         manifest["leaves"].append({
@@ -86,44 +110,42 @@ def save(view: PosixView, root: str, tree, *, step: int,
     # flush commits any still-pending leaf blocks with it (one transaction
     # when they fit together; begin_chain pre-commits them first when they
     # don't, which is equally safe — they are invisible without the
-    # manifest). A crash at any device
-    # write before that commit leaves no manifest at all — the aborted
-    # save is invisible to latest_step; after it, manifest AND every leaf
-    # it names are durable together (proven exhaustively by the crash
-    # harness, tests/test_crash_torture.py).
-    manifest_path = f"{root}/{MANIFEST}"
+    # manifest). A crash at any device write before that commit leaves no
+    # manifest at all — the aborted save is invisible to latest_step;
+    # after it, manifest AND every leaf it names are durable together.
+    #
+    # Re-saves over an EXISTING checkpoint never touch the live manifest
+    # (or, thanks to the generation tag, its leaves): the new manifest is
+    # committed under a tmp name, then swapped in with one journaled
+    # rename-overwrite (+fsync to make the swap durable). The old
+    # checkpoint stays fully intact until the rename transaction commits,
+    # so the previous good one survives a crash at ANY device write of a
+    # re-save — the old truncate-then-rewrite path had a window where
+    # neither version did. Both properties are enumerated per crash point
+    # by tests/test_crash_torture.py.
     raw_manifest = json.dumps(manifest).encode()
     if items:
         view.write_many(items)
     try:
-        try:
-            if view.exists(manifest_path):  # re-save over an old checkpoint
-                # clear first so a SHORTER manifest never keeps a stale
-                # tail (json would see trailing garbage); a crash between
-                # the truncate and the commit leaves an empty/torn
-                # manifest, which latest_step already reads as "no
-                # checkpoint"
-                view.truncate(manifest_path, 0)
-                view.write_many([(manifest_path, raw_manifest)],
-                                fsync=True, chain=True)
-            else:
-                view.create_and_write_many([(manifest_path, raw_manifest)],
-                                           fsync=True)
-        except FsError as e:
-            if e.errno != Errno.ENOSPC:
+        if not old_exists:
+            _commit_manifest(view, manifest_path, raw_manifest)
+        else:
+            tmp_path = f"{root}/.{MANIFEST}.tmp"
+            try:
+                if view.exists(tmp_path):  # stale tmp of a crashed re-save
+                    view.unlink(tmp_path)
+                _commit_manifest(view, tmp_path, raw_manifest)
+                view.rename(tmp_path, manifest_path)
+                view.fsync(manifest_path)  # commit the swap's journal txn
+            except FsError:
+                # failed re-save: drop the tmp husk — the OLD manifest is
+                # still the live checkpoint, untouched
+                try:
+                    if view.exists(tmp_path):
+                        view.unlink(tmp_path)
+                except FsError:
+                    pass
                 raise
-            # a chain is a bounded journal transaction: a manifest bigger
-            # than one is refused ENOSPC up front. Fall back to an
-            # unchained write + fsync — crash safety degrades gracefully
-            # (latest_step already ignores torn/unparseable manifests), and
-            # a genuinely full device just raises ENOSPC again here.
-            # NB a crash mid-overwrite of an EXISTING over-capacity
-            # manifest can tear it (same exposure as before chain
-            # transactions existed — multi-txn writes were never atomic);
-            # an atomic tmp+rename swap needs rename-overwrite support,
-            # tracked in ROADMAP.
-            view.write_file(manifest_path, raw_manifest)
-            view.fsync(manifest_path)
     except FsError:
         # a manifest created whose WRITE then failed is an empty husk —
         # remove it so the aborted save is indistinguishable from no save
@@ -134,7 +156,35 @@ def save(view: PosixView, root: str, tree, *, step: int,
         except FsError:
             pass
         raise
+    # the swap is durable: collect leaves the live manifest no longer
+    # references (prior generations + orphans of crashed attempts). Pure
+    # garbage collection — a crash skipping it just leaves dead files the
+    # next successful save sweeps up.
+    live = {rec["path"].rsplit("/", 1)[-1] for rec in manifest["leaves"]}
+    stale = [f"{root}/{name}" for name in view.listdir(root)
+             if name.startswith("leaf_") and name not in live]
+    if stale:
+        try:
+            view.unlink_many(stale, strict=False)
+        except FsError:
+            pass
     return manifest
+
+
+def _commit_manifest(view: PosixView, path: str, raw: bytes) -> None:
+    """Create ``path`` and make ``raw`` durable in it: a chained
+    create→write→flush when it fits one journal transaction
+    (crash-atomic), else the ENOSPC refusal falls back to an unchained
+    write + fsync — a torn fresh file reads as "no checkpoint" (and for a
+    re-save the tear hits only the TMP name, never the live manifest), and
+    a genuinely full device just raises ENOSPC again here."""
+    try:
+        view.create_and_write_many([(path, raw)], fsync=True)
+    except FsError as e:
+        if e.errno != Errno.ENOSPC:
+            raise
+        view.write_file(path, raw)
+        view.fsync(path)
 
 
 def load(view: PosixView, root: str, like_tree, *, checksum=None,

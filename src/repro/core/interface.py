@@ -58,6 +58,11 @@ completes ENOSPC-first/ECANCELED-rest before staging anything) — see
 ``repro.fs.crashsim`` for the exhaustive crash-point proof. ``SQE_DRAIN``
 marks a barrier entry that runs only after every prior entry in the batch
 completed, documenting ordering for mixed chain/unchained batches.
+
+Concurrent submitters compose through ``execute_multi_batch``: many
+per-thread submissions drain under one gate crossing (io_uring
+SQPOLL-style — see ``repro.core.registry``), with chains grouped per
+submitter and unchained runs coalesced across submitters.
 """
 
 from __future__ import annotations
@@ -242,6 +247,35 @@ def _resolve_placeholders(entry: "SubmissionEntry",
                            entry.flags)
 
 
+def _run_chain(submit_batch, group, chain_begin, chain_end
+               ) -> List["CompletionEntry"]:
+    """Execute ONE chain group member-by-member under the module's chain
+    reservation scope — the single implementation of the SQE_LINK rules
+    shared by ``execute_batch`` and ``execute_multi_batch``."""
+    if chain_begin is not None:
+        err = chain_begin(group)
+        if err is not None:  # chain can never fit: nothing was staged
+            return ([CompletionEntry(group[0].user_data, errno=err)]
+                    + [CompletionEntry(e.user_data, errno=Errno.ECANCELED)
+                       for e in group[1:]])
+    done: List[CompletionEntry] = []
+    try:
+        for e in group:
+            if done and not done[-1].ok:
+                done.append(CompletionEntry(e.user_data,
+                                            errno=Errno.ECANCELED))
+                continue
+            resolved = _resolve_placeholders(e, done)
+            if isinstance(resolved, CompletionEntry):
+                done.append(resolved)
+            else:
+                done.append(submit_batch([resolved])[0])
+    finally:
+        if chain_end is not None:
+            chain_end()
+    return done
+
+
 def execute_batch(submit_batch, entries) -> List["CompletionEntry"]:
     """Chain-aware batch executor — the one implementation of SQE_LINK
     (and SQE_DRAIN barriers).
@@ -274,34 +308,71 @@ def execute_batch(submit_batch, entries) -> List["CompletionEntry"]:
     chain_end = getattr(owner, "chain_end", None)
     comps: List[CompletionEntry] = []
     for is_chain, group in split_chains(entries):
-        if not is_chain:
+        if is_chain:
+            comps.extend(_run_chain(submit_batch, group, chain_begin,
+                                    chain_end))
+        else:
             comps.extend(submit_batch(group))
-            continue
-        if chain_begin is not None:
-            err = chain_begin(group)
-            if err is not None:  # chain can never fit: nothing was staged
-                comps.append(CompletionEntry(group[0].user_data, errno=err))
-                comps.extend(CompletionEntry(e.user_data,
-                                             errno=Errno.ECANCELED)
-                             for e in group[1:])
-                continue
-        done: List[CompletionEntry] = []
-        try:
-            for e in group:
-                if done and not done[-1].ok:
-                    done.append(CompletionEntry(e.user_data,
-                                                errno=Errno.ECANCELED))
-                    continue
-                resolved = _resolve_placeholders(e, done)
-                if isinstance(resolved, CompletionEntry):
-                    done.append(resolved)
-                else:
-                    done.append(submit_batch([resolved])[0])
-        finally:
-            if chain_end is not None:
-                chain_end()
-        comps.extend(done)
     return comps
+
+
+def execute_multi_batch(submit_batch, segments
+                        ) -> List[List["CompletionEntry"]]:
+    """Multi-submitter batch executor: each *segment* is one submitter's
+    submission, and the whole call runs under ONE gate crossing held by
+    the caller (the drain of the SQPOLL-style multi-queue design — see
+    ``repro.core.registry``).
+
+    Two rules extend the single-batch semantics to concurrent submitters:
+
+    * chains are grouped PER SEGMENT — a trailing ``SQE_LINK`` in one
+      submitter's segment ends its chain at the segment boundary, exactly
+      like an io_uring link reaching the submit boundary; it can never
+      link into another submitter's first entry;
+    * adjacent *unchained* runs from different segments coalesce into one
+      ``submit_batch`` call, so the module's vectorized fast paths (bulk
+      cache passes, one directory scan per parent, write merging)
+      amortize ACROSS submitters — the throughput half of the design. A
+      segment-internal ``SQE_DRAIN`` barrier still starts a fresh run, so
+      per-submitter ordering documentation survives the merge.
+
+    Entries execute in segment-major order (each segment's internal order
+    preserved); concurrent submissions have no mutual ordering contract.
+    Returns one completion list per segment, each in submission order."""
+    segments = [s if isinstance(s, list) else list(s) for s in segments]
+    if len(segments) == 1:
+        return [execute_batch(submit_batch, segments[0])]
+    owner = getattr(submit_batch, "__self__", None)
+    chain_begin = getattr(owner, "chain_begin", None)
+    chain_end = getattr(owner, "chain_end", None)
+    flat: List[Tuple[int, bool, List[SubmissionEntry]]] = []
+    for si, entries in enumerate(segments):
+        for is_chain, group in split_chains(entries):
+            flat.append((si, is_chain, group))
+    out: List[List[CompletionEntry]] = [[] for _ in segments]
+    i, n = 0, len(flat)
+    while i < n:
+        si, is_chain, group = flat[i]
+        if is_chain:
+            out[si].extend(_run_chain(submit_batch, group, chain_begin,
+                                      chain_end))
+            i += 1
+            continue
+        # coalesce adjacent unchained groups (across submitters) into one
+        # dispatch; a group opening with a DRAIN barrier starts its own
+        run = [(si, group)]
+        j = i + 1
+        while j < n and not flat[j][1] \
+                and not (flat[j][2][0].flags & SQE_DRAIN):
+            run.append((flat[j][0], flat[j][2]))
+            j += 1
+        comps = submit_batch([e for _, g in run for e in g])
+        k = 0
+        for rsi, g in run:
+            out[rsi].extend(comps[k:k + len(g)])
+            k += len(g)
+        i = j
+    return out
 
 
 class BentoModule(abc.ABC):

@@ -20,6 +20,18 @@ Two dispatch surfaces cross the gate:
   extended to batches). ``BentoQueue`` is the io_uring-style SQ/CQ
   convenience wrapper over ``Mount.submit``.
 
+``Mount.submit`` is *multi-submitter* (io_uring SQPOLL-style): each call
+is one submission, and instead of every thread racing for its own gate
+crossing, submissions queue on the mount and the first thread to claim the
+drainer role carries EVERYTHING pending across the boundary in one
+crossing (``execute_multi_batch``): chains stay within their submission,
+unchained runs coalesce across submitters, completions route back to each
+submitter with per-entry errnos. Uncontended, this degenerates to exactly
+the old behaviour (one crossing per submission); under N contending
+threads, crossings collapse toward one per drain (``mq_drains`` vs
+``mq_submissions`` — the benchmark tripwire). ``SubmitterQueue`` is the
+per-thread SQ handle (``Mount.submitter_queue()``).
+
 The gate tracks per-thread depth: a module op that re-enters dispatch on
 the same thread (nested ``call``/``submit``) joins its outer crossing
 instead of deadlocking against a concurrent ``freeze``.
@@ -33,7 +45,7 @@ from typing import Any, Callable, Deque, Dict, Iterable, List, Optional
 
 from repro.core.interface import (BentoFilesystem, CompletionEntry, Errno,
                                   FsError, SQE_LINK, SubmissionEntry,
-                                  execute_batch)
+                                  execute_batch, execute_multi_batch)
 
 _FS_REGISTRY: Dict[str, Callable[[], BentoFilesystem]] = {}
 
@@ -105,6 +117,19 @@ _FS_OPS = ("getattr", "lookup", "create", "mkdir", "unlink", "rmdir", "rename",
            "submit_batch")
 
 
+class _PendingSubmission:
+    """One submitter's staged entries waiting for a drain, plus the slot
+    its completions (or the drain's implementation exception) come back
+    through."""
+
+    __slots__ = ("entries", "comps", "error")
+
+    def __init__(self, entries: List[SubmissionEntry]):
+        self.entries = entries
+        self.comps: Optional[List[CompletionEntry]] = None
+        self.error: Optional[BaseException] = None
+
+
 class Mount:
     """A mounted Bento file system: function table + op gate + capabilities."""
 
@@ -116,6 +141,17 @@ class Mount:
         self.module: Optional[BentoFilesystem] = None
         self.table: Dict[str, Callable] = {}
         self.generation = 0
+        # multi-submitter queue state (SQPOLL-style drain-on-submit)
+        self._mq_cv = threading.Condition()
+        self._mq_pending: List[_PendingSubmission] = []
+        self._mq_draining = False
+        self._mq_drainer_tid: Optional[int] = None
+        self._sqpoll: Optional[threading.Thread] = None
+        self._sqpoll_run = False
+        self._sqpoll_idle_s = 0.0
+        self._tls = threading.local()
+        self.mq_submissions = 0  # submit() calls routed through the queue
+        self.mq_drains = 0       # gate crossings that drained pending SQs
         self._install(module)
 
     def _install(self, module: BentoFilesystem) -> None:
@@ -139,23 +175,169 @@ class Mount:
             self.gate.exit()
 
     def submit(self, entries: Iterable[SubmissionEntry]) -> List[CompletionEntry]:
-        """Batched dispatch: ONE gate-crossing for the whole batch.
+        """Batched dispatch, multi-submitter: each call is ONE submission.
 
-        The table is read once after entering the gate, so every entry of
-        the batch executes against the same module generation even if an
-        upgrade is waiting to swap it (it drains this batch first). Chained
-        entries (SQE_LINK) are grouped and executed by ``execute_batch``
-        inside the same single crossing, so a table swap can never land
-        between two members of a chain either — a chain's completions all
-        come from one module generation.
+        The calling thread appends its submission to the mount's pending
+        queue; the first thread to find the drainer role free takes it and
+        drains EVERYTHING pending — its own submission plus any that other
+        threads staged meanwhile — in one gate crossing via
+        ``execute_multi_batch`` (``mq_drains`` counts those crossings,
+        ``mq_submissions`` the calls; uncontended they are equal, under
+        contention drains ≪ submissions). Threads whose submissions ride
+        someone else's drain just wait for their completions.
+
+        The table is read once inside the crossing, so every entry of a
+        drain executes against the same module generation even if an
+        upgrade is waiting to swap it (it drains these batches first).
+        Chains (SQE_LINK) are grouped per submission — never spanning
+        submitters, never split across a drain — so a table swap can never
+        land between two members of a chain either: a chain's completions
+        all come from one module generation.
         """
         if not isinstance(entries, list):
             entries = list(entries)
-        self.gate.enter()
+        if self._mq_drainer_tid == threading.get_ident():
+            # nested dispatch from inside a module op on the drainer
+            # thread: join the outer crossing (the gate is reentrant) —
+            # queueing on ourselves would deadlock
+            self.gate.enter()
+            try:
+                return execute_batch(self.table["submit_batch"], entries)
+            finally:
+                self.gate.exit()
+        sub = _PendingSubmission(entries)
+        with self._mq_cv:
+            self._mq_pending.append(sub)
+            self.mq_submissions += 1
+            if self._sqpoll is not None:
+                self._mq_cv.notify_all()  # wake the poller (it waits; the
+                #   opportunistic drainer polls the queue and needs none)
+            while sub.comps is None and sub.error is None \
+                    and self._mq_draining:
+                self._mq_cv.wait()
+            if sub.comps is not None or sub.error is not None:
+                if sub.error is not None:
+                    raise sub.error
+                return sub.comps
+            # drainer role is free and our submission is still pending
+            # (also the recovery path: a drainer that died re-raising a
+            # module bug leaves the role free, and a waiter picks it up)
+            self._mq_draining = True
+            self._mq_drainer_tid = threading.get_ident()
         try:
-            return execute_batch(self.table["submit_batch"], entries)
+            self._drain_pending()
         finally:
-            self.gate.exit()
+            with self._mq_cv:
+                self._mq_draining = False
+                self._mq_drainer_tid = None
+                self._mq_cv.notify_all()
+        if sub.error is not None:
+            raise sub.error
+        return sub.comps
+
+    def _drain_pending(self) -> None:
+        """Drainer role: swallow everything pending in one gate crossing,
+        repeating until the queue is empty (submissions that arrive while
+        a drain executes ride the NEXT crossing, not their own)."""
+        while True:
+            with self._mq_cv:
+                batch, self._mq_pending = self._mq_pending, []
+            if not batch:
+                return
+            self.mq_drains += 1
+            self.gate.enter()
+            try:
+                segs = execute_multi_batch(self.table["submit_batch"],
+                                           [s.entries for s in batch])
+            except BaseException as e:
+                # an implementation exception (a bug — fs errors cross as
+                # errnos) poisons the whole drain: deliver it to every
+                # waiter and re-raise in the drainer, like scalar dispatch
+                with self._mq_cv:
+                    for s in batch:
+                        s.error = e
+                    self._mq_cv.notify_all()
+                raise
+            finally:
+                self.gate.exit()
+            with self._mq_cv:
+                for s, comps in zip(batch, segs):
+                    s.comps = comps
+                self._mq_cv.notify_all()
+
+    def submitter_queue(self, depth: int = 256) -> "SubmitterQueue":
+        """The calling thread's SubmitterQueue over this mount, created on
+        first use — the per-thread SQ of the multi-submitter design."""
+        q = getattr(self._tls, "sq", None)
+        if q is None:
+            q = self._tls.sq = SubmitterQueue(self, depth)
+        return q
+
+    # --- dedicated SQPOLL drainer (io_uring IORING_SETUP_SQPOLL analogue) ------
+    def start_sqpoll(self, idle_us: int = 500) -> None:
+        """Hand the drainer role to a dedicated thread: submitters only
+        append and wait, the poller drains everything pending in one gate
+        crossing per round. ``idle_us`` is the ``sq_thread_idle``
+        analogue — a short gather window after work first appears, letting
+        concurrent submitters pile on before the crossing (worth real
+        coalescing under an interpreter whose threads otherwise hand off
+        in 5 ms slices). Opportunistic drain-on-submit resumes after
+        ``stop_sqpoll``; uncontended callers should prefer that default —
+        the poller adds the gather window to every submission's latency."""
+        with self._mq_cv:
+            if self._sqpoll is not None:
+                return
+            # an opportunistic drainer may be mid-flight: wait for it to
+            # release the role (its finally notifies) — installing the
+            # poller over a live drainer would leave two drainers racing
+            while self._mq_draining:
+                self._mq_cv.wait()
+            self._sqpoll_run = True
+            self._sqpoll_idle_s = max(idle_us, 0) / 1e6
+            self._mq_draining = True  # the poller owns the role for good
+            self._sqpoll = threading.Thread(
+                target=self._sqpoll_loop, name=f"sqpoll-{self.name}",
+                daemon=True)
+            self._sqpoll.start()
+
+    def stop_sqpoll(self) -> None:
+        """Retire the poller (drains whatever is pending first) and return
+        to opportunistic drain-on-submit."""
+        with self._mq_cv:
+            if self._sqpoll is None:
+                return
+            self._sqpoll_run = False
+            poller = self._sqpoll
+            self._mq_cv.notify_all()
+        poller.join()  # its finally released the role
+
+    def _sqpoll_loop(self) -> None:
+        me = threading.current_thread()
+        self._mq_drainer_tid = threading.get_ident()
+        import time as _t
+        try:
+            while True:
+                with self._mq_cv:
+                    while not self._mq_pending and self._sqpoll_run:
+                        self._mq_cv.wait(timeout=0.05)
+                    if not self._sqpoll_run and not self._mq_pending:
+                        return
+                if self._sqpoll_idle_s > 0:
+                    _t.sleep(self._sqpoll_idle_s)  # gather window (GIL off)
+                self._drain_pending()
+        finally:
+            # normal retirement AND death-by-module-bug both release the
+            # drainer role here, or every later submit would wait forever
+            # on a poller that no longer exists; opportunistic
+            # drain-on-submit resumes (the bug itself was already
+            # delivered to that round's waiters by _drain_pending)
+            with self._mq_cv:
+                if self._sqpoll is me:
+                    self._sqpoll = None
+                    self._sqpoll_run = False
+                    self._mq_draining = False
+                    self._mq_drainer_tid = None
+                    self._mq_cv.notify_all()
 
     def __getattr__(self, op: str):
         if op in _FS_OPS:
@@ -198,10 +380,22 @@ class BentoQueue:
         auto-submit is deferred while a chain is open (a link must never be
         severed by a batch boundary — an explicit ``submit`` mid-chain,
         like io_uring's, ends the chain at the boundary instead)."""
-        self._sq.append(SubmissionEntry(op, args, kwargs or None, user_data,
+        self.prep_entry(SubmissionEntry(op, args, kwargs or None, user_data,
                                         flags))
-        if len(self._sq) >= self.depth and not (flags & SQE_LINK):
+
+    def prep_entry(self, entry: SubmissionEntry) -> None:
+        """Stage a pre-built entry (callers that assemble entries
+        directly, e.g. the PosixView batched forms); same auto-submit and
+        chain-deferral rules as ``prep``."""
+        self._sq.append(entry)
+        if len(self._sq) >= self.depth and not (entry.flags & SQE_LINK):
             self.submit()
+
+    def stage(self, entries: Iterable[SubmissionEntry]) -> None:
+        """Stage many pre-built entries WITHOUT auto-submitting: the
+        caller owns the submit boundary (a batch that must cross the
+        boundary whole stages here and calls ``submit`` once)."""
+        self._sq.extend(entries)
 
     def submit(self) -> int:
         """Submit everything staged (one gate-crossing); returns the number
@@ -219,6 +413,33 @@ class BentoQueue:
 
     def __len__(self) -> int:
         return len(self._sq)
+
+
+class SubmitterQueue(BentoQueue):
+    """A per-thread submission queue, io_uring SQPOLL-style: ``submit()``
+    publishes the staged entries as ONE submission to the mount's shared
+    drain, where whichever thread holds the drainer role carries them
+    across the boundary — under contention many submitters' queues cross
+    in one gate crossing (see ``Mount.submit``).
+
+    Thread-affine by construction: obtain one per thread via
+    ``Mount.submitter_queue()`` (or construct directly); never share an
+    instance across threads — the mount underneath is the shared,
+    thread-safe object. ``submits``/``entries_submitted`` count what this
+    submitter pushed, pairing with the mount's ``mq_drains`` to show the
+    coalescing ratio."""
+
+    def __init__(self, mount, depth: int = 256):
+        super().__init__(mount, depth)
+        self.owner_tid = threading.get_ident()
+        self.submits = 0
+        self.entries_submitted = 0
+
+    def submit(self) -> int:
+        if self._sq:
+            self.submits += 1
+            self.entries_submitted += len(self._sq)
+        return super().submit()
 
 
 def mount(name: str, services, module: Optional[BentoFilesystem] = None) -> Mount:

@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import os
 import threading
-from typing import Optional
+from typing import Callable, Optional
 
 import numpy as np
 
@@ -55,11 +55,24 @@ class BlockDevice:
 
     # --- fault injection (crash-recovery property tests) --------------------------
     fail_after_writes: int = -1  # -1 disabled; else raise after N writes
+    fail_torn_bytes: int = -1    # >= 0: the DYING write lands this many
+    #   bytes before power dies (a torn block — what a real power cut does
+    #   to an in-flight sector transfer; the journal's per-block checksums
+    #   must catch it at recovery). Only backends that pass a torn_writer
+    #   to _maybe_fail honour it; MemBlockDevice keeps clean all-or-nothing
+    #   block loss.
     _writes_seen: int = 0
 
-    def _maybe_fail(self) -> None:
+    def _maybe_fail(self, torn_writer: Optional[Callable[[int], None]]
+                    = None) -> None:
+        """Write-stream fault injection: count down to the armed crash
+        point, then die. ``torn_writer(nbytes)``, when the backend
+        provides one and ``fail_torn_bytes`` is armed, lands a partial
+        block before the power-loss exception — the torn-write case."""
         if self.fail_after_writes >= 0:
             if self._writes_seen >= self.fail_after_writes:
+                if torn_writer is not None and self.fail_torn_bytes >= 0:
+                    torn_writer(min(self.fail_torn_bytes, self.block_size))
                 raise BlockDeviceError("injected crash: device lost power")
             self._writes_seen += 1
 
@@ -120,7 +133,12 @@ class FileBlockDevice(BlockDevice):
     def write_block(self, blockno: int, data: bytes) -> None:
         self._check(blockno, data)
         with self._lock:
-            self._maybe_fail()
+            # the dying write may TEAR: a prefix of the block lands, the
+            # rest never does (fail_torn_bytes) — the FUSE daemon's
+            # crash-torture path proves recovery detects this via the
+            # journal's per-block checksums
+            self._maybe_fail(lambda n: os.pwrite(
+                self._fd, data[:n], blockno * self.block_size))
             self.writes += 1
             os.pwrite(self._fd, data, blockno * self.block_size)
 

@@ -171,6 +171,152 @@ class CrashSim:
         return len(list(points))
 
 
+# --- FUSE daemon torture: the file-backed device, across processes ---------------
+
+
+@dataclasses.dataclass
+class FuseRecovered:
+    """Post-crash state of the daemon path: a FRESH daemon remounted the
+    survived backing file (journal recovery ran daemon-side at init)."""
+
+    crash_point: int
+    total_writes: int
+    crashed: bool
+    mount: object   # FuseMount over the recovered image
+    view: PosixView
+
+
+class FuseCrashSim:
+    """Crash-point sweeps THROUGH the FUSE daemon (the userspace binding's
+    file-backed device — the path no in-process harness can reach).
+
+    Power loss is injected in the daemon's ``FileBlockDevice`` over the
+    ``__ctl__`` side-channel (optionally TEARING the dying write mid-block
+    via ``torn_bytes`` — the journal checksums must catch that), the
+    daemon is then SIGKILLed without any flush, and the backing file is
+    remounted by a fresh daemon with mkfs skipped, so ``Journal.recover``
+    runs against exactly what survived. Same golden-run/enumerate/remount
+    protocol as ``CrashSim``; each iteration costs two daemon processes,
+    so sweeps here favour ``quick=True``."""
+
+    def __init__(self, *, n_blocks: int = 2048, fs_kind: str = "xv6",
+                 torn_bytes: int = -1):
+        self.n_blocks = n_blocks
+        self.fs_kind = fs_kind
+        self.torn_bytes = torn_bytes
+
+    def _boot(self, setup):
+        """Fresh backing file + daemon + durable setup, injection counter
+        armed at zero so crash points index workload writes only."""
+        import os
+        import tempfile
+
+        from repro.fs.fusebridge import FuseMount
+
+        tmpdir = tempfile.mkdtemp(prefix="fusecrash_")
+        backing = os.path.join(tmpdir, "disk.img")
+        m = FuseMount(n_blocks=self.n_blocks, fs_kind=self.fs_kind,
+                      backing_path=backing)
+        view = PosixView(m)
+        if setup is not None:
+            setup(view)
+            m.call("flush")  # setup durable regardless of the crash point
+        m.ctl("fail_after_writes", 1 << 30, self.torn_bytes)  # arm counter
+        return tmpdir, backing, m, view
+
+    @staticmethod
+    def _cleanup(tmpdir) -> None:
+        import shutil
+
+        shutil.rmtree(tmpdir, ignore_errors=True)
+
+    def measure(self, workload, *, setup=None) -> int:
+        tmpdir, _backing, m, view = self._boot(setup)
+        try:
+            workload(view, m)
+            return m.ctl("writes_seen")
+        finally:
+            m.kill()
+            self._cleanup(tmpdir)
+
+    def run_one(self, workload, point: int, *, total: int = -1, setup=None):
+        """One iteration: boot fresh, arm the crash at ``point``, run the
+        workload (daemon-side power loss surfaces client-side as
+        RuntimeError), kill -9 the daemon, remount the survived image."""
+        from repro.fs.fusebridge import FuseMount
+
+        tmpdir, backing, m, view = self._boot(setup)
+        m.ctl("fail_after_writes", point, self.torn_bytes)
+        crashed = False
+        try:
+            workload(view, m)
+        except (RuntimeError, EOFError, OSError):
+            crashed = True  # the daemon's device lost power mid-op
+        m.kill()
+        m2 = FuseMount(n_blocks=self.n_blocks, fs_kind=self.fs_kind,
+                       backing_path=backing, reuse=True)
+        rec = FuseRecovered(point, total, crashed, m2, PosixView(m2))
+        rec._tmpdir = tmpdir  # cleaned by sweep/caller via finish()
+        return rec
+
+    def finish(self, rec: FuseRecovered) -> None:
+        rec.mount.kill()
+        self._cleanup(rec._tmpdir)
+
+    def sweep(self, workload, invariant, *, setup=None, points=None,
+              quick: bool = True) -> int:
+        total = self.measure(workload, setup=setup)
+        if points is None:
+            points = quick_points(total) if quick else range(total + 1)
+        for point in points:
+            rec = self.run_one(workload, point, total=total, setup=setup)
+            try:
+                invariant(rec)
+            except AssertionError as e:
+                raise AssertionError(
+                    f"fuse invariant violated at crash point {point}/{total}"
+                    f" (crashed={rec.crashed}): {e}") from e
+            finally:
+                self.finish(rec)
+        return len(list(points))
+
+
+def torture_fuse(*, payload_blocks: int = 1, quick: bool = True,
+                 torn_bytes: int = -1, fs_kind: str = "xv6") -> int:
+    """Sweep a chained create→write(PrevResult)→fsync THROUGH the daemon:
+    all-or-nothing must hold across a real process kill + file-backed
+    remount (and with ``torn_bytes`` armed, across a torn final write)."""
+    from repro.core.interface import PrevResult, SQE_LINK, SubmissionEntry
+
+    payload = b"F" * (payload_blocks * 4096 + 17)
+
+    def workload(view, m):
+        comps = m.submit([
+            SubmissionEntry("create", (1, "f"), user_data="c",
+                            flags=SQE_LINK),
+            SubmissionEntry("write", (PrevResult("ino"), 0, payload),
+                            user_data="w", flags=SQE_LINK),
+            SubmissionEntry("fsync", (PrevResult("ino", back=2),),
+                            user_data="s"),
+        ])
+        bad = [(c.user_data, c.errno) for c in comps if not c.ok]
+        assert not bad, f"chain failed without a crash: {bad}"
+
+    def invariant(rec: FuseRecovered) -> None:
+        if rec.view.exists("/f"):
+            got = rec.view.read_file("/f")
+            assert got == payload, (
+                f"half-applied chain through the daemon: /f has {len(got)}B"
+                f" (expected {len(payload)}B or no file)")
+        else:
+            assert rec.crashed, "no crash, yet /f is missing"
+        rec.view.statfs()
+        rec.view.listdir("/")
+
+    sim = FuseCrashSim(fs_kind=fs_kind, torn_bytes=torn_bytes)
+    return sim.sweep(workload, invariant, quick=quick)
+
+
 # --- the canonical chain torture (acceptance sweep + CI smoke) -------------------
 
 
@@ -217,20 +363,66 @@ def all_or_nothing(payload: bytes, path: str = "/f"
     return invariant
 
 
-def torture_chain(kind: str = "xv6", *, payload_blocks: int = 2,
-                  quick: bool = False) -> int:
-    """Sweep the canonical chain on one fs kind; returns points swept."""
+def _fs_factory(kind: str):
     from repro.fs.ext4like import Ext4LikeFileSystem
     from repro.fs.xv6 import Xv6FileSystem, Xv6Options
 
-    factory = {
+    return {
         "xv6": lambda: Xv6FileSystem(Xv6Options()),
         "ext4like": lambda: Ext4LikeFileSystem(),
     }[kind]
+
+
+def torture_chain(kind: str = "xv6", *, payload_blocks: int = 2,
+                  quick: bool = False) -> int:
+    """Sweep the canonical chain on one fs kind; returns points swept."""
     payload = b"C" * (payload_blocks * 4096 + 17)  # off-block tail: torn shows
-    sim = CrashSim(factory)
+    sim = CrashSim(_fs_factory(kind))
     return sim.sweep(chain_workload(payload), all_or_nothing(payload),
                      quick=quick)
+
+
+def torture_rename(kind: str = "xv6", *, quick: bool = False) -> int:
+    """Sweep a rename ONTO an existing name (the POSIX overwrite path):
+    after recovery at every crash point, the new name must still resolve
+    (to the old content before the swap committed, to the moved content
+    after), the old name must be gone exactly when the swap is durable,
+    and the displaced inode's blocks must be freed with it — both
+    end-states' free-block counts are golden-measured first, so block
+    leaks fail the sweep, not just torn names."""
+    a, b = b"A" * (2 * 4096 + 7), b"B" * (3 * 4096 + 3)
+
+    def setup(ctx: CrashCtx) -> None:
+        ctx.view.write_file("/old", a)
+        ctx.view.write_file("/new", b)
+
+    def workload(ctx: CrashCtx) -> None:
+        ctx.view.rename("/old", "/new")
+        ctx.view.fsync("/new")
+
+    sim = CrashSim(_fs_factory(kind))
+    # golden free-block counts for the two legal end states
+    ctx = sim.boot(setup)
+    free_before = ctx.view.statfs()["free_blocks_est"]
+    workload(ctx)
+    free_after = ctx.view.statfs()["free_blocks_est"]
+
+    def invariant(rec: Recovered) -> None:
+        new_data = rec.view.read_file("/new")  # /new must ALWAYS resolve
+        free = rec.view.statfs()["free_blocks_est"]
+        if rec.view.exists("/old"):
+            assert rec.crashed, "no crash, yet the rename did not happen"
+            assert rec.view.read_file("/old") == a
+            assert new_data == b, "target clobbered before the swap committed"
+            assert free == free_before, \
+                f"block leak pre-swap: {free} != {free_before}"
+        else:
+            assert new_data == a, "old name gone but target not the moved file"
+            assert free == free_after, \
+                f"displaced blocks not freed: {free} != {free_after}"
+        rec.view.listdir("/")
+
+    return sim.sweep(workload, invariant, setup=setup, quick=quick)
 
 
 def main() -> None:
@@ -242,14 +434,29 @@ def main() -> None:
     ap.add_argument("--kind", default="both",
                     choices=["xv6", "ext4like", "both"])
     ap.add_argument("--payload-blocks", type=int, default=2)
+    ap.add_argument("--fuse", action="store_true",
+                    help="also torture the FUSE daemon's file-backed "
+                         "device (subprocess per point — slower)")
+    ap.add_argument("--torn-bytes", type=int, default=-1,
+                    help="with --fuse: tear the dying write after this "
+                         "many bytes instead of losing it whole")
     args = ap.parse_args()
     kinds = ["xv6", "ext4like"] if args.kind == "both" else [args.kind]
+    mode = "quick subset" if args.quick else "exhaustive"
     for kind in kinds:
         n = torture_chain(kind, payload_blocks=args.payload_blocks,
                           quick=args.quick)
-        mode = "quick subset" if args.quick else "exhaustive"
         print(f"crashsim {kind}: create→write(PrevResult)→fsync chain "
               f"all-or-nothing at {n} crash points ({mode}) — OK")
+        n = torture_rename(kind, quick=args.quick)
+        print(f"crashsim {kind}: rename-overwrite old-XOR-new (+blocks "
+              f"freed) at {n} crash points ({mode}) — OK")
+    if args.fuse:
+        n = torture_fuse(quick=True, torn_bytes=args.torn_bytes)
+        torn = (f", torn at {args.torn_bytes}B" if args.torn_bytes >= 0
+                else "")
+        print(f"crashsim fuse: daemon-side chain all-or-nothing at {n} "
+              f"crash points (quick subset{torn}) — OK")
 
 
 if __name__ == "__main__":

@@ -216,6 +216,19 @@ class Ext4LikeFileSystem(Xv6FileSystem):
                     del idx[name]
                     break
 
+    def _dir_set(self, dino: int, bn: int, off: int, ino: int,
+                 name: str) -> None:
+        # rename-overwrite's in-place slot rewrite: whatever name occupied
+        # this slot leaves the index, the new binding enters it
+        super()._dir_set(dino, bn, off, ino, name)
+        idx = self._dirindex.get(dino)
+        if idx is not None:
+            for nm, (b2, o2, _) in list(idx.items()):
+                if b2 == bn and o2 == off:
+                    del idx[nm]
+                    break
+            idx[name] = (bn, off, ino)
+
     def _dir_scan_state(self, dino: int, pdi) -> Dict:
         """Batched-metadata dir state — the LIVE hash index itself, so the
         batch's inserts/removes keep it current with zero extra scans

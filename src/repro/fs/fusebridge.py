@@ -11,12 +11,29 @@ length-prefixed pickle frames + a context switch per op).
 The daemon is a plain ``subprocess`` running ``python -m
 repro.fs.fusebridge`` — no multiprocessing fork/spawn games, so it is safe
 to start from a multithreaded JAX parent.
+
+Multi-submitter: each client THREAD gets its own channel (socket
+connection), so submissions from many threads are in flight at once, and
+the daemon drains every channel with a readable ``submit_batch`` request
+per service round into ONE ``execute_multi_batch`` call — the SQPOLL-style
+drain of ``repro.core.registry``, carried across the address-space
+boundary. Chains stay within their channel's submission; unchained runs
+coalesce across channels into the fs's vectorized paths.
+
+Crash torture: a ``__ctl__`` side-channel arms write-stream fault
+injection in the daemon's FileBlockDevice (power loss after the Nth
+device write, optionally tearing the dying write mid-block), and
+``FuseMount.kill()`` is the power-cut analogue — SIGKILL, no flush, the
+backing file left exactly as the last completed write left it. Remounting
+with ``reuse=True`` skips mkfs so daemon-side journal recovery runs
+against the survived image (see ``repro.fs.crashsim.FuseCrashSim``).
 """
 
 from __future__ import annotations
 
 import os
 import pickle
+import selectors
 import socket
 import struct
 import subprocess
@@ -24,9 +41,9 @@ import sys
 import tempfile
 import threading
 import time
-from typing import Any, Optional
+from typing import Any, List, Optional
 
-from repro.core.interface import Errno, FsError, execute_batch
+from repro.core.interface import Errno, FsError, execute_multi_batch
 
 _FS_OPS = ("getattr", "lookup", "create", "mkdir", "unlink", "rmdir", "rename",
            "readdir", "read", "write", "truncate", "fsync", "flush", "statfs")
@@ -53,8 +70,37 @@ def _recv_exact(sock: socket.socket, n: int) -> bytes:
     return buf
 
 
-def serve(sock_path: str, backing_path: str, n_blocks: int, fs_kind: str) -> None:
-    """Daemon main: userspace binding + the same fs code."""
+def _send_quiet(sock: socket.socket, obj: Any) -> None:
+    """Best-effort reply: a channel whose client vanished mid-drain must
+    not take the daemon (and every other channel) down with it."""
+    try:
+        _send(sock, obj)
+    except OSError:
+        pass
+
+
+def _handle_ctl(dev, stats, args) -> Any:
+    """The crash-torture side-channel: arm/read the device's write-stream
+    fault injection and expose the daemon's drain counters (values only —
+    the client never touches daemon objects)."""
+    cmd = args[0]
+    if cmd == "fail_after_writes":
+        dev.fail_after_writes = int(args[1])
+        dev.fail_torn_bytes = int(args[2]) if len(args) > 2 else -1
+        dev._writes_seen = 0
+        return None
+    if cmd == "writes_seen":
+        return dev._writes_seen
+    if cmd == "stats":
+        return dict(stats)
+    raise FsError(Errno.EINVAL, f"unknown ctl {cmd!r}")
+
+
+def serve(sock_path: str, backing_path: str, n_blocks: int, fs_kind: str,
+          do_mkfs: bool = True) -> None:
+    """Daemon main: userspace binding + the same fs code, serving any
+    number of client channels. ``do_mkfs=False`` remounts an existing
+    image (journal recovery runs in the fs's init)."""
     from repro.core.services import userspace_binding
     from repro.fs.blockdev import FileBlockDevice
     from repro.fs.ext4like import Ext4LikeFileSystem
@@ -62,80 +108,155 @@ def serve(sock_path: str, backing_path: str, n_blocks: int, fs_kind: str) -> Non
 
     dev = FileBlockDevice(backing_path, n_blocks)
     ks = userspace_binding(dev)
-    mkfs(ks)
+    if do_mkfs:
+        mkfs(ks)
     # userspace policy: synchronous installs, whole-file fsync
     opts = Xv6Options(group_commit=True, batched_install=False)
     fs = (Ext4LikeFileSystem(opts) if fs_kind == "ext4like"
           else Xv6FileSystem(opts))
     fs.init(ks.superblock(), ks)
 
+    # drain observability (read via __ctl__ "stats"): drains counts service
+    # rounds that executed submit_batch traffic, batch_requests the client
+    # submissions they carried — requests ≫ drains is the multi-channel win
+    stats = {"drains": 0, "batch_requests": 0, "multi_channel_drains": 0}
+
     srv = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
     srv.bind(sock_path)
-    srv.listen(1)
-    conn, _ = srv.accept()
-    try:
-        while True:
-            try:
-                msg = _recv(conn)
-            except EOFError:
-                break
-            if msg is None:
-                break
-            op, args, kw = msg
-            try:
-                if op == "fsync":
-                    # paper: the file interface can't sync parts of a file —
-                    # the whole backing file is synced per fsync.
-                    fs.journal.commit()
-                    dev.sync()
-                    _send(conn, ("ok", None))
-                    continue
-                if op == "submit_batch":
-                    # chains (SQE_LINK) execute daemon-side: grouping,
-                    # cancellation and PrevResult substitution all happen
-                    # here, so a chained batch still costs ONE round trip.
-                    res = execute_batch(fs.submit_batch, args[0])
-                else:
-                    res = getattr(fs, op)(*args, **kw)
-                if op == "submit_batch" and any(
-                        e.op in ("fsync", "flush") for e in args[0]):
-                    dev.sync()  # same whole-file sync penalty, once per batch
-                _send(conn, ("ok", res))
-            except FsError as e:
-                _send(conn, ("fs_error", int(e.errno)))
-            except Exception as e:  # noqa: BLE001
-                _send(conn, ("error", f"{type(e).__name__}: {e}"))
-    finally:
-        fs.destroy()
-        dev.close()
+    srv.listen(64)
+    sel = selectors.DefaultSelector()
+    sel.register(srv, selectors.EVENT_READ)
+    channels: List[socket.socket] = []
+    shutdown = False
+
+    def drop(conn):
+        sel.unregister(conn)
         conn.close()
+        if conn in channels:
+            channels.remove(conn)
+
+    try:
+        while not shutdown:
+            events = sel.select(timeout=1.0)
+            batch_reqs = []   # (conn, entries): drained together this round
+            scalar_reqs = []  # (conn, op, args, kw): served one at a time
+            for key, _ in events:
+                if key.fileobj is srv:
+                    conn, _ = srv.accept()
+                    sel.register(conn, selectors.EVENT_READ)
+                    channels.append(conn)
+                    continue
+                conn = key.fileobj
+                try:
+                    msg = _recv(conn)
+                except (EOFError, OSError):
+                    drop(conn)
+                    continue
+                if msg is None:
+                    shutdown = True
+                    break
+                op, args, kw = msg
+                if op == "submit_batch":
+                    batch_reqs.append((conn, args[0]))
+                else:
+                    scalar_reqs.append((conn, op, args, kw))
+            if batch_reqs:
+                # ONE boundary crossing for every channel's pending
+                # submission: chains grouped per channel, cancellation and
+                # PrevResult substitution daemon-side, so a chained batch
+                # still costs its channel one round trip.
+                stats["drains"] += 1
+                stats["batch_requests"] += len(batch_reqs)
+                if len(batch_reqs) > 1:
+                    stats["multi_channel_drains"] += 1
+                try:
+                    segs = execute_multi_batch(
+                        fs.submit_batch, [ents for _, ents in batch_reqs])
+                except FsError as e:
+                    for conn, _ in batch_reqs:
+                        _send_quiet(conn, ("fs_error", int(e.errno)))
+                except Exception as e:  # noqa: BLE001
+                    for conn, _ in batch_reqs:
+                        _send_quiet(conn, ("error",
+                                           f"{type(e).__name__}: {e}"))
+                else:
+                    if any(e.op in ("fsync", "flush")
+                           for _, ents in batch_reqs for e in ents):
+                        dev.sync()  # whole-file sync penalty, once per drain
+                    for (conn, _), comps in zip(batch_reqs, segs):
+                        _send_quiet(conn, ("ok", comps))
+            for conn, op, args, kw in scalar_reqs:
+                try:
+                    if op == "__ctl__":
+                        _send_quiet(conn, ("ok", _handle_ctl(dev, stats,
+                                                             args)))
+                        continue
+                    if op == "fsync":
+                        # paper: the file interface can't sync parts of a
+                        # file — the whole backing file syncs per fsync.
+                        fs.journal.commit()
+                        dev.sync()
+                        _send_quiet(conn, ("ok", None))
+                        continue
+                    res = getattr(fs, op)(*args, **kw)
+                    _send_quiet(conn, ("ok", res))
+                except FsError as e:
+                    _send_quiet(conn, ("fs_error", int(e.errno)))
+                except Exception as e:  # noqa: BLE001
+                    _send_quiet(conn, ("error", f"{type(e).__name__}: {e}"))
+    finally:
+        try:
+            fs.destroy()
+            dev.close()
+        except Exception:  # noqa: BLE001 — teardown after injected crash
+            pass
+        for conn in channels:
+            conn.close()
         srv.close()
 
 
 class FuseMount:
-    """Client-side mount handle: same call surface as core.registry.Mount."""
+    """Client-side mount handle: same call surface as core.registry.Mount.
+
+    Scalar calls share one primary channel (one in-flight request, like a
+    single FUSE /dev/fuse fd); ``submit`` uses a per-THREAD channel so
+    concurrent submitters overlap in flight and the daemon drains them
+    together (``mq_submissions`` counts this client's submissions —
+    the daemon-side drain count comes back via ``ctl("stats")``)."""
 
     def __init__(self, n_blocks: int = 16384, fs_kind: str = "xv6",
-                 backing_path: Optional[str] = None):
+                 backing_path: Optional[str] = None, reuse: bool = False):
         self._tmpdir = tempfile.mkdtemp(prefix="fusebridge_")
         if backing_path is None:
             backing_path = os.path.join(self._tmpdir, "disk.img")
         self.backing_path = backing_path
         sock_path = os.path.join(self._tmpdir, "fuse.sock")
+        self._sock_path = sock_path
         env = dict(os.environ)
         src_root = os.path.dirname(os.path.dirname(os.path.dirname(
             os.path.abspath(__file__))))
         env["PYTHONPATH"] = src_root + os.pathsep + env.get("PYTHONPATH", "")
         self._proc = subprocess.Popen(
             [sys.executable, "-m", "repro.fs.fusebridge", sock_path,
-             backing_path, str(n_blocks), fs_kind],
+             backing_path, str(n_blocks), fs_kind,
+             "reuse" if reuse else "mkfs"],
             env=env, stdout=subprocess.DEVNULL, stderr=subprocess.PIPE)
-        self._sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
-        deadline = time.time() + 30
+        self._sock = self._connect(deadline_s=30)
+        self.generation = 1
+        self.name = f"fuse-{fs_kind}"
+        self._lock = threading.Lock()  # one in-flight request per channel
+        self._tls = threading.local()
+        self._channels: List[socket.socket] = [self._sock]
+        self._chan_lock = threading.Lock()
+        self.mq_submissions = 0
+
+    def _connect(self, deadline_s: float) -> socket.socket:
+        sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        deadline = time.time() + deadline_s
         while True:
             try:
-                self._sock.connect(sock_path)
-                break
+                sock.connect(self._sock_path)
+                return sock
             except (FileNotFoundError, ConnectionRefusedError):
                 if self._proc.poll() is not None:
                     err = self._proc.stderr.read().decode()[-2000:]
@@ -143,9 +264,18 @@ class FuseMount:
                 if time.time() > deadline:
                     raise TimeoutError("fuse daemon did not come up")
                 time.sleep(0.02)
-        self.generation = 1
-        self.name = f"fuse-{fs_kind}"
-        self._lock = threading.Lock()  # one in-flight request per channel
+
+    def _channel(self) -> socket.socket:
+        """This thread's private daemon connection (created on first
+        submit): the per-thread SQ of the multi-submitter design, carried
+        over the address-space boundary."""
+        ch = getattr(self._tls, "ch", None)
+        if ch is None:
+            ch = self._connect(deadline_s=10)
+            with self._chan_lock:
+                self._channels.append(ch)
+            self._tls.ch = ch
+        return ch
 
     def call(self, op: str, *args, **kw) -> Any:
         with self._lock:
@@ -157,17 +287,50 @@ class FuseMount:
             raise FsError(Errno(payload))
         raise RuntimeError(payload)
 
+    def ctl(self, *args) -> Any:
+        """Crash-torture side-channel (see ``_handle_ctl``): e.g.
+        ``ctl("fail_after_writes", n, torn_bytes)`` / ``ctl("stats")``."""
+        return self.call("__ctl__", *args)
+
     def submit(self, entries):
         # The batched boundary is where FUSE hurts least: one socket
-        # round-trip (two context switches) per batch instead of per op.
-        # Per-entry errors ride inside the completions, so the daemon's
-        # fs_error path is never taken for a batch.
-        return self.call("submit_batch", list(entries))
+        # round-trip (two context switches) per submission — and when many
+        # threads submit at once, the daemon serves all their channels in
+        # one drain. Per-entry errors ride inside the completions, so the
+        # daemon's fs_error path is never taken for a batch.
+        ch = self._channel()
+        self.mq_submissions += 1
+        _send(ch, ("submit_batch", (list(entries),), {}))
+        status, payload = _recv(ch)
+        if status == "ok":
+            return payload
+        if status == "fs_error":
+            raise FsError(Errno(payload))
+        raise RuntimeError(payload)
 
     def __getattr__(self, op: str):
         if op in _FS_OPS:
             return lambda *a, **k: self.call(op, *a, **k)
         raise AttributeError(op)
+
+    def _close_channels(self) -> None:
+        with self._chan_lock:
+            for ch in self._channels:
+                try:
+                    ch.close()
+                except OSError:
+                    pass
+            self._channels.clear()
+
+    def _cleanup_tmpdir(self, keep_backing: bool = False) -> None:
+        for f in ("disk.img", "fuse.sock"):
+            p = os.path.join(self._tmpdir, f)
+            if os.path.exists(p) and not (keep_backing and f == "disk.img"):
+                os.unlink(p)
+        try:
+            os.rmdir(self._tmpdir)
+        except OSError:
+            pass  # backing file kept inside: leave the dir for its owner
 
     def unmount(self) -> None:
         try:
@@ -175,17 +338,27 @@ class FuseMount:
             _send(self._sock, None)
         except (BrokenPipeError, EOFError, OSError):
             pass
-        self._sock.close()
+        self._close_channels()
         try:
             self._proc.wait(timeout=10)
         except subprocess.TimeoutExpired:
             self._proc.terminate()
-        for f in ("disk.img", "fuse.sock"):
-            p = os.path.join(self._tmpdir, f)
-            if os.path.exists(p):
-                os.unlink(p)
-        os.rmdir(self._tmpdir)
+        self._cleanup_tmpdir()
+
+    def kill(self) -> None:
+        """Power-cut analogue: SIGKILL the daemon — no flush, no graceful
+        shutdown — leaving the backing file exactly as the last completed
+        device write left it. The socket tempdir is cleaned; the backing
+        file survives for a ``reuse=True`` remount (crash torture)."""
+        self._proc.kill()
+        try:
+            self._proc.wait(timeout=10)
+        except subprocess.TimeoutExpired:
+            pass
+        self._close_channels()
+        self._cleanup_tmpdir(keep_backing=True)
 
 
 if __name__ == "__main__":
-    serve(sys.argv[1], sys.argv[2], int(sys.argv[3]), sys.argv[4])
+    serve(sys.argv[1], sys.argv[2], int(sys.argv[3]), sys.argv[4],
+          do_mkfs=(len(sys.argv) < 6 or sys.argv[5] != "reuse"))

@@ -30,7 +30,10 @@ _FS_OPS = ("getattr", "lookup", "create", "mkdir", "unlink", "rmdir", "rename",
 
 class DirectMount:
     """VFS-direct baseline: raw calls into the fs object — no dispatch table,
-    no gate, no capability discipline (the unsafe fast path)."""
+    no gate, no capability discipline (the unsafe fast path). Also no
+    multi-submitter drain: every ``submit`` is its own dispatch, which is
+    exactly what "4 threads sharing the scalar path" means in the
+    benchmark matrix."""
 
     def __init__(self, fs):
         self.module = fs
@@ -64,7 +67,12 @@ class MountedFs:
         self.mount.unmount()
 
 
-def make_mount(kind: str, n_blocks: int = 16384) -> MountedFs:
+def make_mount(kind: str, n_blocks: int = 16384, *,
+               backing_path: str = None, reuse: bool = False) -> MountedFs:
+    """Build one matrix entry. ``backing_path``/``reuse`` apply to the
+    fuse kind only: an explicit backing file location, and whether to
+    remount it as-is (skip mkfs; daemon-side journal recovery runs) — the
+    FUSE crash-torture path (repro.fs.crashsim.FuseCrashSim)."""
     if kind == "bento":
         dev = MemBlockDevice(n_blocks)
         ks = kernel_binding(dev)
@@ -81,7 +89,8 @@ def make_mount(kind: str, n_blocks: int = 16384) -> MountedFs:
         m = DirectMount(fs)
         return MountedFs(kind, m, PosixView(m), ks)
     if kind == "fuse":
-        m = FuseMount(n_blocks=n_blocks, fs_kind="xv6")
+        m = FuseMount(n_blocks=n_blocks, fs_kind="xv6",
+                      backing_path=backing_path, reuse=reuse)
         return MountedFs(kind, m, PosixView(m))
     if kind == "ext4like":
         dev = MemBlockDevice(n_blocks)

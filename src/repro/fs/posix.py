@@ -21,10 +21,18 @@ component per round, and each round's dentry-cache MISSES are resolved
 with a single ``lookup`` submission (one gate crossing per dcache-miss
 level, instead of one per missing component per path). Cache hits never
 cross the boundary, so a warm walk still costs zero submissions.
+
+Submissions ride a THREAD-LOCAL ``SubmitterQueue``: N threads sharing one
+PosixView (or N views over one mount) stage into N per-thread SQs, and the
+mount's drainer carries every queue pending at drain time across the
+boundary in one gate crossing (io_uring SQPOLL-style — see
+``repro.core.registry``). One thread sees exactly the old behaviour; many
+threads see crossings ≪ submissions.
 """
 
 from __future__ import annotations
 
+import threading
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.core.interface import (Attr, Errno, FsError, PrevResult, ROOT_INO,
@@ -36,6 +44,20 @@ class PosixView:
         self.m = mount
         self._dcache: Dict[Tuple[int, str], int] = {}
         self._use_dcache = dentry_cache
+        self._tls = threading.local()
+
+    def _submit(self, entries: List[SubmissionEntry]):
+        """Cross the boundary once for ``entries`` via this thread's
+        SubmitterQueue (created on first use). The queue is drained to
+        empty every call, so the completions returned are exactly this
+        batch's, in submission order."""
+        q = getattr(self._tls, "sq", None)
+        if q is None:
+            from repro.core.registry import SubmitterQueue
+            q = self._tls.sq = SubmitterQueue(self.m)
+        q.stage(entries)
+        q.submit()
+        return q.drain()
 
     # --- path walking -------------------------------------------------------------
     def _walk(self, path: str) -> int:
@@ -215,7 +237,7 @@ class PosixView:
                 else:
                     need.setdefault(key, []).append(p)
             if need:
-                comps = self.m.submit(
+                comps = self._submit(
                     [SubmissionEntry("lookup", k, user_data=k) for k in need])
                 to_create: Dict[Tuple[int, str], List[str]] = {}
                 for c in comps:
@@ -234,7 +256,7 @@ class PosixView:
                         else:
                             res[p] = FsError(c.errno, key[1])
                 if to_create:
-                    ccomps = self.m.submit(
+                    ccomps = self._submit(
                         [SubmissionEntry("create", k, user_data=k)
                          for k in to_create])
                     for c in ccomps:
@@ -283,7 +305,7 @@ class PosixView:
         their FsError in place (per-entry isolation end to end)."""
         idxs = [i for i, r in enumerate(resolved)
                 if not isinstance(r, FsError)]
-        results = self._unwrap(self.m.submit([entry_for(i) for i in idxs]),
+        results = self._unwrap(self._submit([entry_for(i) for i in idxs]),
                                strict)
         out = list(resolved)
         for i, res in zip(idxs, results):
@@ -305,7 +327,7 @@ class PosixView:
         sized = sorted({r for (_, _, sz), r in zip(norm, resolved)
                         if sz < 0 and not isinstance(r, FsError)})
         if sized:
-            attrs = self.m.submit([SubmissionEntry("getattr", (ino,),
+            attrs = self._submit([SubmissionEntry("getattr", (ino,),
                                                    user_data=ino)
                                    for ino in sized])
             size_of = {}
@@ -369,7 +391,7 @@ class PosixView:
             # flush runs only after every write completed
             entries.append(SubmissionEntry("flush", (), user_data="<flush>",
                                            flags=0 if chain else SQE_DRAIN))
-        comps = self.m.submit(entries)
+        comps = self._submit(entries)
         if fsync:
             flush = comps[-1]
             comps = comps[:-1]
@@ -397,7 +419,7 @@ class PosixView:
         pairs = self._split_many(paths, strict=strict)
         idxs = [i for i, (parent, _) in enumerate(pairs)
                 if not isinstance(parent, FsError)]
-        comps = self.m.submit(
+        comps = self._submit(
             [SubmissionEntry(op, (pairs[i][0], pairs[i][1]),
                              user_data=paths[i]) for i in idxs]) \
             if idxs else []
@@ -458,7 +480,7 @@ class PosixView:
             # drain barrier: the commit waits for every chain in the batch
             entries.append(SubmissionEntry("flush", (), user_data="<flush>",
                                            flags=SQE_DRAIN))
-        comps = self.m.submit(entries) if entries else []
+        comps = self._submit(entries) if entries else []
         if fsync and entries:
             comps[-1].unwrap()
             comps = comps[:-1]

@@ -194,7 +194,9 @@ class Xv6FileSystem(BentoFilesystem):
 
     _CHAIN_WRITE_OVERHEAD = 4  # inode + bitmap + up to 2 indirect blocks
     _CHAIN_OP_BLOCKS = {
-        "create": 6, "mkdir": 8, "unlink": 6, "rmdir": 8, "rename": 8,
+        # rename may also truncate a displaced target (dirent swap + two
+        # parent inodes + displaced inode + bitmap blocks of freed data)
+        "create": 6, "mkdir": 8, "unlink": 6, "rmdir": 8, "rename": 12,
         "getattr": 0, "lookup": 0, "read": 0, "readdir": 0, "statfs": 0,
         "fsync": 0, "flush": 0,
     }
@@ -753,6 +755,22 @@ class Xv6FileSystem(BentoFilesystem):
     def _dir_unset(self, dino: int, bn: int, off: int) -> None:
         self._dir_unset_raw(dino, bn, off)
 
+    def _dir_set_raw(self, dino: int, bn: int, off: int, ino: int,
+                     name: str) -> None:
+        """Rewrite one existing dirent slot in place (journal-logged) —
+        rename-overwrite's atomic replace: the target name flips from the
+        displaced inode to the moved one in a single slot write, so even
+        inside the transaction there is never a missing-name window."""
+        di = self._iget(dino)
+        b = self._bmap(dino, di, bn, alloc=False)
+        with self._bread(b) as bh:
+            bh.data()[off: off + L.DIRENT_SIZE] = L.pack_dirent(ino, name)
+            self._log(b, bytes(bh.data()))
+
+    def _dir_set(self, dino: int, bn: int, off: int, ino: int,
+                 name: str) -> None:
+        self._dir_set_raw(dino, bn, off, ino, name)
+
     def lookup(self, parent: int, name: str) -> Attr:
         with self._oplock:
             pdi = self._iget(parent)
@@ -883,10 +901,39 @@ class Xv6FileSystem(BentoFilesystem):
             self._iupdate(parent, pdi)
             self._end_op(True)
 
+    def _assert_not_in_subtree(self, ino: int, newparent: int) -> None:
+        """EINVAL when ``newparent`` lives inside the directory being
+        moved — without this check the rename would detach the subtree
+        into an unreachable cycle (POSIX EINVAL)."""
+        stack = [ino]
+        while stack:
+            d = stack.pop()
+            if d == newparent:
+                raise FsError(Errno.EINVAL, "rename into own subtree")
+            ddi = self._iget(d)
+            for _, _, e_ino, _ in self._dir_entries(d, ddi):
+                if e_ino != 0 and self._iget(e_ino).type == L.T_DIR:
+                    stack.append(e_ino)
+
     def rename(self, parent: int, name: str, newparent: int, newname: str) -> None:
+        """POSIX rename, overwrite included: an existing ``newname`` is
+        atomically REPLACED, never refused EEXIST — files replace files,
+        directories replace EMPTY directories (ENOTEMPTY otherwise;
+        ENOTDIR/EISDIR on kind mismatch). The displaced inode drops its
+        link (blocks freed when it reaches zero) inside the SAME journal
+        reservation as the dirent swap, so a crash at any device write
+        recovers to either the complete old mapping or the complete new
+        one — ``newname`` always resolves, the displaced inode's blocks
+        are freed exactly when the swap is durable (enumerated per crash
+        point by tests/test_crash_torture.py)."""
+        if (not isinstance(newname, str) or not newname or "/" in newname
+                or len(newname.encode()) > L.NAME_MAX):
+            raise FsError(Errno.EINVAL, str(newname))
         with self._oplock:
             self._begin_op()
             pdi = self._iget(parent)
+            if pdi.type != L.T_DIR:
+                raise FsError(Errno.ENOTDIR, str(parent))
             hit = self._dirlookup(parent, pdi, name)
             if hit is None:
                 raise FsError(Errno.ENOENT, name)
@@ -894,11 +941,56 @@ class Xv6FileSystem(BentoFilesystem):
             ndi = self._iget(newparent)
             if ndi.type != L.T_DIR:
                 raise FsError(Errno.ENOTDIR, str(newparent))
+            if parent == newparent and name == newname:
+                self._end_op(False)  # POSIX: rename onto itself is a no-op
+                return
+            sdi = self._iget(ino)
+            if sdi.type == L.T_DIR and newparent != parent:
+                self._assert_not_in_subtree(ino, newparent)
             existing = self._dirlookup(newparent, ndi, newname)
             if existing is not None:
-                raise FsError(Errno.EEXIST, newname)
-            self._dir_unset(parent, bn, off)
-            self._dirlink(newparent, newname, ino)
+                ebn, eoff, eino = existing
+                edi = self._iget(eino)
+                if edi.type == L.T_DIR and sdi.type != L.T_DIR:
+                    raise FsError(Errno.EISDIR, newname)
+                if edi.type != L.T_DIR and sdi.type == L.T_DIR:
+                    raise FsError(Errno.ENOTDIR, newname)
+                if edi.type == L.T_DIR and any(
+                        e_ino != 0
+                        for _, _, e_ino, _ in self._dir_entries(eino, edi)):
+                    raise FsError(Errno.ENOTEMPTY, newname)
+                # atomic replace: rewrite the target's slot to the moved
+                # inode, clear the source slot, drop the displaced link —
+                # all staged into this op's one journal transaction
+                self._dir_unset(parent, bn, off)
+                self._dir_set(newparent, ebn, eoff, ino, newname)
+                if edi.type == L.T_DIR:
+                    # displaced empty dir: its synthetic self-link pair
+                    # dies with it, and newparent loses the ".." back-link
+                    edi.nlink = 0
+                    self._itrunc(eino, edi)
+                    edi.type = L.T_FREE
+                    self._iupdate(eino, edi)
+                    ndi = self._iget(newparent)
+                    ndi.nlink -= 1
+                    self._iupdate(newparent, ndi)
+                else:
+                    edi.nlink -= 1
+                    if edi.nlink <= 0:
+                        self._itrunc(eino, edi)
+                        edi.type = L.T_FREE
+                    self._iupdate(eino, edi)
+            else:
+                self._dir_unset(parent, bn, off)
+                self._dirlink(newparent, newname, ino)
+            if sdi.type == L.T_DIR and parent != newparent:
+                # a moved directory re-homes its ".." back-link
+                pdi = self._iget(parent)
+                pdi.nlink -= 1
+                self._iupdate(parent, pdi)
+                ndi = self._iget(newparent)
+                ndi.nlink += 1
+                self._iupdate(newparent, ndi)
             self._end_op(True)
 
     # --- file data ------------------------------------------------------------------------------------

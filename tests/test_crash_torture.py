@@ -21,7 +21,8 @@ import pytest
 from repro.core.interface import (Errno, PrevResult, ROOT_INO, SQE_LINK,
                                   SubmissionEntry)
 from repro.fs.crashsim import (CrashSim, all_or_nothing, chain_workload,
-                               quick_points, torture_chain)
+                               quick_points, torture_chain, torture_fuse,
+                               torture_rename)
 from repro.fs.ext4like import Ext4LikeFileSystem
 from repro.fs.xv6 import Xv6FileSystem, Xv6Options
 
@@ -150,6 +151,132 @@ def test_multi_op_batch_commits_as_unit_every_crash_point():
         rec.view.listdir("/")
 
     CrashSim(FACTORIES["xv6"]).sweep(workload, invariant, setup=setup)
+
+
+# --- rename-overwrite: old XOR new at every crash point --------------------------
+
+
+@pytest.mark.parametrize("kind", ["xv6", "ext4like"])
+def test_rename_overwrite_every_crash_point(kind):
+    """The headline bugfix's crash story, enumerated exhaustively: a
+    rename onto an existing name recovers to either the complete old
+    mapping (target intact with ITS content, source still present) or the
+    complete new one (source gone, target is the moved file, displaced
+    blocks freed) — the target name always resolves, and free-block
+    accounting matches the golden end states so a leak fails the sweep."""
+    points = torture_rename(kind)
+    assert points > 5  # the swap really hit the device
+
+
+@pytest.mark.parametrize("kind", ["xv6", "ext4like"])
+def test_rename_fresh_target_every_crash_point(kind):
+    """Rename to a NOT-yet-existing name: after recovery exactly one of
+    {old name, new name} resolves — never both, never neither — and the
+    content is intact under whichever survived."""
+    payload = b"R" * (2 * 4096 + 11)
+
+    def setup(ctx):
+        ctx.view.write_file("/old", payload)
+
+    def workload(ctx):
+        ctx.view.rename("/old", "/new")
+        ctx.view.fsync("/new")
+
+    def invariant(rec):
+        old_e, new_e = rec.view.exists("/old"), rec.view.exists("/new")
+        assert old_e != new_e, (
+            f"rename tore: old={old_e} new={new_e} (both or neither)")
+        name = "/old" if old_e else "/new"
+        assert rec.view.read_file(name) == payload
+        if not rec.crashed:
+            assert new_e
+        rec.view.statfs()
+
+    CrashSim(FACTORIES[kind]).sweep(workload, invariant, setup=setup)
+
+
+def test_rename_chained_manifest_swap_every_crash_point():
+    """The checkpoint store's swap pattern as a raw chain: commit a tmp
+    file, then rename it over the live name — at every crash point the
+    live name resolves to EITHER the old or the new content, complete."""
+    old, new = b"O" * (4096 + 100), b"N" * (2 * 4096 + 3)
+
+    def setup(ctx):
+        ctx.view.write_file("/live", old)
+
+    def workload(ctx):
+        ctx.view.write_file("/tmpf", new)
+        ctx.view.fsync("/tmpf")
+        ctx.view.rename("/tmpf", "/live")
+        ctx.view.fsync("/live")
+
+    def invariant(rec):
+        got = rec.view.read_file("/live")
+        assert got in (old, new), f"live name torn: {len(got)}B"
+        if not rec.crashed:
+            assert got == new
+        rec.view.listdir("/")
+
+    CrashSim(FACTORIES["xv6"]).sweep(workload, invariant, setup=setup)
+
+
+# --- checkpoint re-save: the previous good checkpoint survives every point -------
+
+
+def test_checkpoint_resave_never_loses_previous_good_checkpoint():
+    """Re-saving over an existing checkpoint rides tmp-write + rename:
+    at EVERY crash point latest_step still finds a parseable manifest —
+    the old tree before the swap committed, the new one after. The old
+    truncate-then-rewrite path had crash points where neither survived."""
+    import numpy as np
+
+    from repro.checkpoint import store
+
+    tree_a = {"w": np.full((4, 4), 1.0, dtype=np.float32)}
+    tree_b = {"w": np.full((4, 4), 2.0, dtype=np.float32)}
+
+    def setup(ctx):
+        store.save(ctx.view, "/ckpt/step_1", tree_a, step=1,
+                   checksum=ctx.ks.checksum)
+
+    def workload(ctx):
+        store.save(ctx.view, "/ckpt/step_1", tree_b, step=1,
+                   checksum=ctx.ks.checksum)
+
+    def invariant(rec):
+        step = store.latest_step(rec.view, "/ckpt")
+        assert step == 1, "previous good checkpoint lost by a re-save crash"
+        got, _ = store.load(rec.view, "/ckpt/step_1", tree_a,
+                            checksum=rec.ks.checksum)
+        a = np.asarray(got["w"])
+        assert (a == 1.0).all() or (a == 2.0).all(), "manifest swap tore"
+        if not rec.crashed:
+            assert (a == 2.0).all()
+
+    sim = CrashSim(FACTORIES["xv6"], n_blocks=4096)
+    sim.sweep(workload, invariant, setup=setup)
+
+
+# --- the FUSE daemon's file-backed device (cross-process torture) ----------------
+
+
+def test_fuse_daemon_chain_survives_power_loss_quick():
+    """Power loss injected inside the daemon's FileBlockDevice, daemon
+    SIGKILLed, backing file remounted by a fresh daemon: the chain must
+    recover all-or-nothing across the address-space boundary too."""
+    assert torture_fuse(quick=True) > 5
+
+
+def test_fuse_daemon_detects_torn_write_quick():
+    """Same sweep with the dying write TORN half-block: the journal's
+    per-block checksums must reject the torn commit at recovery instead
+    of installing garbage."""
+    assert torture_fuse(quick=True, torn_bytes=2048) > 5
+
+
+@pytest.mark.slow
+def test_fuse_daemon_chain_every_crash_point():
+    assert torture_fuse(quick=False) > 10
 
 
 # --- chain overflow: ENOSPC before staging, never a raised JournalFull -----------

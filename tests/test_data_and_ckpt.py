@@ -111,12 +111,15 @@ def test_failed_chained_save_leaves_no_manifest():
     mf = make_mount("bento", n_blocks=16384)
     v = mf.view
     v.makedirs("/ck/step_9")
-    leaf_ino = v.create("/ck/step_9/leaf_00000.npy").ino
     fs = mf.mount.module
     real_write = type(fs).write
+    armed = {"left": 1}
 
     def sabotaged_write(self, ino, off, data):
-        if ino == leaf_ino:
+        # the first write of the save is the first LEAF's data (leaves
+        # land before the manifest chain ever starts)
+        if armed["left"]:
+            armed["left"] -= 1
             raise FsError(Errno.ENOSPC, "injected leaf failure")
         return real_write(self, ino, off, data)
 
@@ -132,6 +135,63 @@ def test_failed_chained_save_leaves_no_manifest():
     # and the aborted save does not poison a subsequent good one
     ckpt.save(mf.view, "/ck/step_9", {"w": jnp.arange(4.0)}, step=9)
     assert ckpt.latest_step(mf.view, "/ck") == 9
+    mf.close()
+
+
+def test_checkpoint_resave_changes_and_shrinks_leaves():
+    """Re-saving the same step with DIFFERENT (and smaller) leaf data:
+    generation-tagged leaf names mean the new data never overwrites the
+    live checkpoint's files (an in-place shorter overwrite would keep the
+    old tail and fail the checksum), the swap is atomic, and the previous
+    generation's leaves are garbage-collected after it."""
+    mf = make_mount("bento", n_blocks=16384)
+    cks = mf.services.checksum
+    big = {"w": jnp.arange(4096.0)}
+    ckpt.save(mf.view, "/ck/step_3", big, step=3, checksum=cks)
+    small = {"w": jnp.full((8,), 5.0)}
+    man = ckpt.save(mf.view, "/ck/step_3", small, step=3, checksum=cks)
+    assert man["gen"] == 1
+    back, _ = ckpt.load(mf.view, "/ck/step_3", {"w": jnp.zeros(8)},
+                        checksum=cks)
+    np.testing.assert_array_equal(np.asarray(back["w"]),
+                                  np.asarray(small["w"]))
+    # prior generation's leaves collected; only the live ones remain
+    leaves = [n for n in mf.view.listdir("/ck/step_3")
+              if n.startswith("leaf_")]
+    assert leaves == ["leaf_00000_g1.npy"]
+    # a third save keeps rolling generations forward
+    man = ckpt.save(mf.view, "/ck/step_3", big, step=3, checksum=cks)
+    assert man["gen"] == 2
+    back, _ = ckpt.load(mf.view, "/ck/step_3", {"w": jnp.zeros(4096)},
+                        checksum=cks)
+    np.testing.assert_array_equal(np.asarray(back["w"]),
+                                  np.asarray(big["w"]))
+    mf.close()
+
+
+def test_checkpoint_resave_probes_past_crashed_attempts_leaves():
+    """A re-save whose predecessor CRASHED before its manifest swap left
+    gen-1 leaves on disk while the live manifest still says gen 0; the
+    next re-save must probe PAST those occupied names instead of
+    overwriting them in place (write never truncates — a shorter
+    overwrite would keep the stale tail and fail the load checksum)."""
+    mf = make_mount("bento", n_blocks=16384)
+    cks = mf.services.checksum
+    ckpt.save(mf.view, "/ck/step_5", {"w": jnp.ones(16)}, step=5,
+              checksum=cks)
+    # fake the crashed attempt: a gen-1 leaf LONGER than the next save's
+    mf.view.write_file("/ck/step_5/leaf_00000_g1.npy", b"G" * 8192)
+    man = ckpt.save(mf.view, "/ck/step_5", {"w": jnp.full((4,), 9.0)},
+                    step=5, checksum=cks)
+    assert man["gen"] == 2                      # probed past the orphan
+    back, _ = ckpt.load(mf.view, "/ck/step_5", {"w": jnp.zeros(4)},
+                        checksum=cks)
+    np.testing.assert_array_equal(np.asarray(back["w"]),
+                                  np.full((4,), 9.0, np.float32))
+    # the orphan and the old generation were both collected after the swap
+    leaves = sorted(n for n in mf.view.listdir("/ck/step_5")
+                    if n.startswith("leaf_"))
+    assert leaves == ["leaf_00000_g2.npy"]
     mf.close()
 
 

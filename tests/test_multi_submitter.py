@@ -1,0 +1,531 @@
+"""Multi-submitter BentoQueues: per-thread SQs draining into one OpGate
+crossing (io_uring SQPOLL-style).
+
+The deterministic proofs use the freeze-the-gate trick: with the gate
+frozen, N threads' submissions pile up in the mount's pending queue, and
+the thaw lets one drainer carry them all — so "crossings ≪ submissions"
+is asserted exactly, not statistically. Correctness is pinned by a
+scalar-vs-threaded differential (disjoint per-thread subtrees must land
+byte-identical to a sequential reference run), chains are shown to never
+split across a drain or merge across submitters (one journal chain
+reservation per create→write pair, exactly), and an upgrade mid-storm
+still swaps exactly once with no lost or duplicated completions.
+"""
+
+import threading
+import time
+
+import pytest
+
+from repro.core.capability import SuperBlockCap
+from repro.core.interface import (Attr, BentoFilesystem, Errno, FileKind,
+                                  FsError, PrevResult, SQE_LINK,
+                                  SubmissionEntry)
+from repro.core.registry import Mount, SubmitterQueue
+from repro.core.services import kernel_binding
+from repro.core.upgrade import upgrade
+from repro.fs.blockdev import MemBlockDevice
+from repro.fs.mounts import make_mount
+from repro.fs.xv6 import Xv6FileSystem, Xv6Options
+
+
+def _join_all(threads, timeout=30):
+    for t in threads:
+        t.join(timeout)
+    assert not any(t.is_alive() for t in threads), "worker deadlocked"
+
+
+def _wait_until(pred, timeout=5.0):
+    deadline = time.time() + timeout
+    while not pred():
+        assert time.time() < deadline, "condition never became true"
+        time.sleep(0.002)
+
+
+# --- deterministic coalescing: freeze, pile up, thaw -----------------------------
+
+
+def test_frozen_gate_coalesces_pending_submissions():
+    """4 submissions staged while the gate is frozen drain in ≤ 2
+    crossings after the thaw (the drainer may have grabbed its own batch
+    before freezing blocked it; everything else rides one drain)."""
+    mf = make_mount("bento", n_blocks=4096)
+    v = mf.view
+    v.write_file("/f", b"d" * (16 * 4096))
+    v.fsync("/f")
+    ino = v.stat("/f").ino
+    m = mf.mount
+    g0, s0, d0 = m.gate.crossings, m.mq_submissions, m.mq_drains
+    m.gate.freeze()
+    results = {}
+
+    def worker(t):
+        comps = m.submit([SubmissionEntry("read", (ino, i * 4096, 4096),
+                                          user_data=(t, i))
+                          for i in range(8)])
+        results[t] = comps
+
+    threads = [threading.Thread(target=worker, args=(t,), daemon=True)
+               for t in range(4)]
+    for t in threads:
+        t.start()
+    _wait_until(lambda: m.mq_submissions - s0 == 4)
+    time.sleep(0.05)  # let the drainer reach its (blocked) gate.enter
+    m.gate.thaw()
+    _join_all(threads)
+    assert m.mq_drains - d0 <= 2, "pending submissions did not coalesce"
+    assert m.gate.crossings - g0 <= 2
+    for t in range(4):
+        assert [c.user_data for c in results[t]] == [(t, i) for i in range(8)]
+        assert all(c.ok and c.result == b"d" * 4096 for c in results[t])
+    mf.close()
+
+
+def test_sqpoll_thread_drains_frozen_backlog():
+    """Same proof with the dedicated SQPOLL drainer: submitters only
+    append; the poller carries the whole backlog."""
+    mf = make_mount("bento", n_blocks=4096)
+    v = mf.view
+    v.write_file("/f", b"q" * 4096)
+    ino = v.stat("/f").ino
+    m = mf.mount
+    m.start_sqpoll(idle_us=0)
+    try:
+        d0, s0 = m.mq_drains, m.mq_submissions
+        m.gate.freeze()
+        results = {}
+
+        def worker(t):
+            results[t] = m.submit([SubmissionEntry("read", (ino, 0, 1),
+                                                   user_data=t)])
+
+        threads = [threading.Thread(target=worker, args=(t,), daemon=True)
+                   for t in range(4)]
+        for t in threads:
+            t.start()
+        _wait_until(lambda: m.mq_submissions - s0 == 4)
+        time.sleep(0.05)
+        m.gate.thaw()
+        _join_all(threads)
+        assert m.mq_drains - d0 <= 2
+        for t in range(4):
+            assert results[t][0].ok and results[t][0].result == b"q"
+    finally:
+        m.stop_sqpoll()
+    # opportunistic mode resumes: an uncontended submit still works
+    assert m.submit([SubmissionEntry("statfs", ())])[0].ok
+    mf.close()
+
+
+def test_chains_never_split_or_merge_across_drains():
+    """Concurrent chained submissions: one journal chain reservation per
+    chain, exactly — coalesced drains must not merge two submitters'
+    chains, and a drain boundary must not split one."""
+    mf = make_mount("bento", n_blocks=8192)
+    m = mf.mount
+    j = m.module.journal
+    m.gate.freeze()
+    ch0, s0 = j.chains, m.mq_submissions
+    results = {}
+
+    def worker(t):
+        results[t] = m.submit([
+            SubmissionEntry("create", (1, f"c{t}"), user_data=(t, "c"),
+                            flags=SQE_LINK),
+            SubmissionEntry("write", (PrevResult("ino"), 0,
+                                      bytes([65 + t]) * 3000),
+                            user_data=(t, "w"), flags=SQE_LINK),
+            SubmissionEntry("fsync", (PrevResult("ino", back=2),),
+                            user_data=(t, "s")),
+        ])
+
+    threads = [threading.Thread(target=worker, args=(t,), daemon=True)
+               for t in range(4)]
+    for t in threads:
+        t.start()
+    _wait_until(lambda: m.mq_submissions - s0 == 4)
+    time.sleep(0.05)
+    m.gate.thaw()
+    _join_all(threads)
+    assert j.chains - ch0 == 4          # one reservation per submitter
+    for t in range(4):
+        assert all(c.ok for c in results[t]), results[t]
+    v = mf.view
+    for t in range(4):
+        assert v.read_file(f"/c{t}") == bytes([65 + t]) * 3000
+    mf.close()
+
+
+# --- differential equivalence: threaded == sequential ----------------------------
+
+
+def _tree_dump(v, path="/"):
+    out = {}
+    for name in sorted(v.listdir(path)):
+        p = f"{path.rstrip('/')}/{name}"
+        st = v.stat(p)
+        if st.kind == FileKind.DIR:
+            out[name] = _tree_dump(v, p)
+        else:
+            out[name] = v.read_file(p)
+    return out
+
+
+def _thread_program(v, t):
+    """One thread's workload, confined to its own subtree (so any
+    interleaving must produce the same final tree)."""
+    v.makedirs(f"/w{t}")
+    v.create_and_write_many(
+        [(f"/w{t}/f{i}", bytes([97 + t]) * (256 * (i + 1)))
+         for i in range(8)], fsync=True)
+    v.unlink_many([f"/w{t}/f{i}" for i in (1, 4)])
+    v.write_many([(f"/w{t}/f0", 0, b"patched!")], create=False, fsync=True)
+    got = v.read_many([(f"/w{t}/f0", 0, 8)])
+    assert got == [b"patched!"]
+    stats = v.stat_many([f"/w{t}/f{i}" for i in (0, 2, 3)])
+    assert all(s.nlink == 1 for s in stats)
+
+
+@pytest.mark.parametrize("sqpoll", [False, True])
+def test_threaded_equals_sequential_tree(sqpoll):
+    mf = make_mount("bento", n_blocks=8192)
+    if sqpoll:
+        mf.mount.start_sqpoll()
+    errors = []
+
+    def worker(t):
+        try:
+            _thread_program(mf.view, t)
+        except Exception as e:  # noqa: BLE001 — surfaced below
+            errors.append(f"t{t}: {type(e).__name__}: {e}")
+
+    threads = [threading.Thread(target=worker, args=(t,), daemon=True)
+               for t in range(4)]
+    for t in threads:
+        t.start()
+    _join_all(threads)
+    if sqpoll:
+        mf.mount.stop_sqpoll()
+    assert not errors, errors
+    threaded = _tree_dump(mf.view)
+    mf.close()
+
+    ref = make_mount("bento", n_blocks=8192)
+    for t in range(4):
+        _thread_program(ref.view, t)
+    sequential = _tree_dump(ref.view)
+    ref.close()
+    assert threaded == sequential
+
+
+# --- upgrade during a threaded submission storm ----------------------------------
+
+
+def test_upgrade_mid_storm_swaps_once_and_loses_nothing():
+    """N threads submitting chains while an upgrade quiesces and swaps the
+    table: every chain completes fully (from a single generation — never
+    split across the swap), exactly one generation bump, files intact."""
+    mf = make_mount("bento", n_blocks=8192)
+    v = mf.view
+    m = mf.mount
+    gen0 = m.generation
+    errors = []
+    started = threading.Event()
+
+    def worker(t):
+        try:
+            v.makedirs(f"/u{t}")
+            started.set()
+            for r in range(6):
+                out = v.create_and_write_many(
+                    [(f"/u{t}/r{r}_{i}", bytes([48 + t]) * 512)
+                     for i in range(4)], fsync=True)
+                assert out == [512] * 4
+        except Exception as e:  # noqa: BLE001
+            errors.append(f"t{t}: {type(e).__name__}: {e}")
+
+    threads = [threading.Thread(target=worker, args=(t,), daemon=True)
+               for t in range(4)]
+    for t in threads:
+        t.start()
+    started.wait(5)
+    time.sleep(0.02)  # let the storm develop
+    stats = upgrade(m, Xv6FileSystem(Xv6Options()))
+    _join_all(threads)
+    assert not errors, errors
+    assert m.generation == gen0 + 1
+    assert stats["total_s"] < 30
+    for t in range(4):
+        assert len(v.listdir(f"/u{t}")) == 24
+        assert v.read_file(f"/u{t}/r5_3") == bytes([48 + t]) * 512
+    mf.close()
+
+
+# --- drainer-thread reentrancy and failure recovery ------------------------------
+
+
+class _StubFs(BentoFilesystem):
+    """Minimal module for dispatch-machinery tests: getattr answers, and
+    submit_batch can be armed to raise (an implementation bug)."""
+
+    NAME, VERSION = "stub", 1
+
+    def __init__(self):
+        self.boom = False
+        self.mount_ref = None
+        self.nested_ok = None
+
+    def init(self, sb: SuperBlockCap, services) -> None:
+        pass
+
+    def getattr(self, ino):
+        return Attr(ino=ino, kind=FileKind.FILE, size=0, nlink=1)
+
+    def lookup(self, parent, name):
+        raise FsError(Errno.ENOENT, name)
+
+    def create(self, parent, name):
+        return Attr(ino=2, kind=FileKind.FILE, size=0, nlink=1)
+
+    def mkdir(self, parent, name):
+        return Attr(ino=3, kind=FileKind.DIR, size=0, nlink=2)
+
+    def unlink(self, parent, name):
+        pass
+
+    def rmdir(self, parent, name):
+        pass
+
+    def rename(self, parent, name, newparent, newname):
+        pass
+
+    def readdir(self, ino):
+        return []
+
+    def read(self, ino, off, size):
+        return b""
+
+    def write(self, ino, off, data):
+        return len(data)
+
+    def truncate(self, ino, size):
+        pass
+
+    def fsync(self, ino):
+        pass
+
+    def statfs(self):
+        # re-enter batched dispatch on the dispatching thread: must join
+        # the outer crossing, not deadlock against our own drain
+        if self.mount_ref is not None and self.nested_ok is None:
+            self.nested_ok = False
+            comps = self.mount_ref.submit(
+                [SubmissionEntry("getattr", (1,))])
+            self.nested_ok = comps[0].ok
+        return {"blocks": 0}
+
+    def submit_batch(self, entries):
+        if self.boom:
+            self.boom = False
+            raise RuntimeError("injected module bug")
+        return super().submit_batch(entries)
+
+
+def _stub_mount():
+    ks = kernel_binding(MemBlockDevice(64))
+    fs = _StubFs()
+    return Mount("stub", fs, ks), fs
+
+
+@pytest.mark.parametrize("sqpoll", [False, True])
+def test_nested_submit_on_drainer_thread_joins_crossing(sqpoll):
+    m, fs = _stub_mount()
+    fs.mount_ref = m
+    if sqpoll:
+        m.start_sqpoll(idle_us=0)
+    try:
+        comps = m.submit([SubmissionEntry("statfs", (), user_data="outer")])
+        assert comps[0].ok
+        assert fs.nested_ok is True
+    finally:
+        if sqpoll:
+            m.stop_sqpoll()
+
+
+def test_sqpoll_survives_module_bug_and_releases_role():
+    """A module bug that kills the poller thread must not wedge the
+    mount: the poisoned round's waiters see the bug, the poller's finally
+    releases the drainer role, and the NEXT submission drains
+    opportunistically."""
+    m, fs = _stub_mount()
+    m.start_sqpoll(idle_us=0)
+    fs.boom = True
+    with pytest.raises(RuntimeError, match="injected module bug"):
+        m.submit([SubmissionEntry("getattr", (1,))])
+    # poller died but released the role: submit must not block or fail
+    comps = m.submit([SubmissionEntry("getattr", (2,))])
+    assert comps[0].ok
+    assert m._sqpoll is None and not m._mq_draining
+    m.stop_sqpoll()  # no-op on the already-dead poller
+
+
+def test_start_sqpoll_waits_for_inflight_opportunistic_drainer():
+    """Installing the poller while an opportunistic drainer is mid-flight
+    must wait for the role, not race it (two live drainers)."""
+    mf = make_mount("bento", n_blocks=4096)
+    v = mf.view
+    v.write_file("/f", b"s" * 4096)
+    ino = v.stat("/f").ino
+    m = mf.mount
+    m.gate.freeze()          # the drainer will block inside its crossing
+    s0 = m.mq_submissions
+    results = {}
+
+    def submitter():
+        results["comps"] = m.submit(
+            [SubmissionEntry("read", (ino, 0, 1), user_data="r")])
+
+    t = threading.Thread(target=submitter, daemon=True)
+    t.start()
+    _wait_until(lambda: m.mq_submissions - s0 == 1)
+    started = threading.Event()
+
+    def starter():
+        m.start_sqpoll(idle_us=0)  # must block until the drainer is done
+        started.set()
+
+    st = threading.Thread(target=starter, daemon=True)
+    st.start()
+    time.sleep(0.05)
+    assert not started.is_set(), "start_sqpoll raced a live drainer"
+    m.gate.thaw()
+    _join_all([t, st])
+    assert started.is_set()
+    assert results["comps"][0].ok
+    # poller owns the role now and still serves
+    assert m.submit([SubmissionEntry("statfs", ())])[0].ok
+    m.stop_sqpoll()
+    mf.close()
+
+
+def test_drainer_exception_reaches_every_waiter_and_role_recovers():
+    """A module bug raised mid-drain must surface in EVERY submitter whose
+    submission rode that drain, and the drainer role must not stay wedged
+    — the next submission drains normally."""
+    m, fs = _stub_mount()
+    m.gate.freeze()
+    s0 = m.mq_submissions
+    outcomes = {}
+
+    def worker(t):
+        try:
+            outcomes[t] = m.submit([SubmissionEntry("getattr", (1,),
+                                                    user_data=t)])
+        except RuntimeError as e:
+            outcomes[t] = e
+
+    threads = [threading.Thread(target=worker, args=(t,), daemon=True)
+               for t in range(2)]
+    for t in threads:
+        t.start()
+    _wait_until(lambda: m.mq_submissions - s0 == 2)
+    fs.boom = True
+    time.sleep(0.05)
+    m.gate.thaw()
+    _join_all(threads)
+    # both riders of the poisoned drain saw the bug (or, if the drains
+    # split, exactly the poisoned one did and the other completed)
+    bugs = [o for o in outcomes.values() if isinstance(o, RuntimeError)]
+    oks = [o for o in outcomes.values() if not isinstance(o, RuntimeError)]
+    assert bugs, "the injected bug vanished"
+    for o in oks:
+        assert o[0].ok
+    # role recovered: a fresh submission completes
+    assert m.submit([SubmissionEntry("getattr", (7,))])[0].ok
+
+
+# --- SubmitterQueue surfaces ------------------------------------------------------
+
+
+def test_submitter_queue_is_thread_local_and_counts():
+    mf = make_mount("bento", n_blocks=2048)
+    m = mf.mount
+    ids = {}
+
+    def worker(t):
+        q = m.submitter_queue()
+        ids[t] = q                       # hold the object (id() would be
+        #   reusable after a dead thread's queue is collected)
+        assert q is m.submitter_queue()  # stable within the thread
+        q.prep("statfs", user_data=t)
+        q.submit()
+        comps = q.drain()
+        assert comps[0].ok and comps[0].user_data == t
+        assert q.submits == 1 and q.entries_submitted == 1
+
+    threads = [threading.Thread(target=worker, args=(t,), daemon=True)
+               for t in range(3)]
+    for t in threads:
+        t.start()
+    _join_all(threads)
+    assert len({id(q) for q in ids.values()}) == 3   # one queue per thread
+    mf.close()
+
+
+def test_posix_view_rides_thread_local_sq():
+    mf = make_mount("bento", n_blocks=4096)
+    v = mf.view
+    v.write_file("/f", b"z" * 8192)
+    qs = {}
+
+    def worker(t):
+        assert v.read_many([("/f", 0, 4096)]) == [b"z" * 4096]
+        qs[t] = v._tls.sq
+
+    threads = [threading.Thread(target=worker, args=(t,), daemon=True)
+               for t in range(2)]
+    for t in threads:
+        t.start()
+    _join_all(threads)
+    assert isinstance(qs[0], SubmitterQueue)
+    assert qs[0] is not qs[1]            # per-thread queues
+    assert qs[0].submits >= 1 and qs[1].submits >= 1
+    mf.close()
+
+
+# --- the FUSE daemon drains all channels per crossing -----------------------------
+
+
+def test_fuse_threads_submit_on_private_channels():
+    mf = make_mount("fuse", n_blocks=2048)
+    v = mf.view
+    v.write_file("/f", b"m" * (8 * 4096))
+    v.fsync("/f")
+    ino = v.stat("/f").ino
+    m = mf.mount
+    errors = []
+    start = threading.Barrier(4)
+
+    def worker(t):
+        try:
+            start.wait()
+            for r in range(6):
+                comps = m.submit([
+                    SubmissionEntry("read", (ino, i * 4096, 4096),
+                                    user_data=(t, r, i)) for i in range(8)])
+                assert all(c.ok and c.result == b"m" * 4096 for c in comps)
+                assert [c.user_data for c in comps] == \
+                    [(t, r, i) for i in range(8)]
+        except Exception as e:  # noqa: BLE001
+            errors.append(f"t{t}: {type(e).__name__}: {e}")
+
+    threads = [threading.Thread(target=worker, args=(t,), daemon=True)
+               for t in range(4)]
+    for t in threads:
+        t.start()
+    _join_all(threads)
+    assert not errors, errors
+    stats = m.ctl("stats")
+    assert stats["batch_requests"] >= 24          # every submission served
+    assert stats["drains"] <= stats["batch_requests"]
+    mf.close()
