@@ -121,12 +121,16 @@ ROOT_INO = 1
 
 # --- batched boundary records (io_uring-shaped, §4.3 plain values) ---------------
 
-# Ops that may appear in a submission batch. ``init``/``destroy`` are
+# The file-operations table, in canonical order — the ONE list every
+# dispatch surface derives from (``Mount``'s function table, the
+# VFS-direct baseline, the FUSE client/daemon). ``init``/``destroy`` are
 # lifecycle-only and ``submit_batch`` itself may not nest.
-BATCHABLE_OPS = frozenset({
-    "getattr", "lookup", "create", "mkdir", "unlink", "rmdir", "rename",
-    "readdir", "read", "write", "truncate", "fsync", "flush", "statfs",
-})
+FS_OPS = ("getattr", "lookup", "create", "mkdir", "unlink", "rmdir", "rename",
+          "readdir", "read", "write", "truncate", "fsync", "flush", "statfs",
+          "read_provenance")
+
+# Ops that may appear in a submission batch.
+BATCHABLE_OPS = frozenset(FS_OPS)
 
 
 # SubmissionEntry.flags bits (io_uring IOSQE_* analogues).
@@ -396,6 +400,17 @@ class BentoModule(abc.ABC):
         """Keys this version emits/accepts — checked at upgrade time."""
         return ()
 
+    def optional_state_keys(self) -> Tuple[str, ...]:
+        """Subset of ``state_schema`` this version can synthesize when the
+        outgoing module never emitted it — the layer-aware half of the
+        schema check. A stackable layer (``repro.fs.prov``) lists its own
+        keys here so a PLAIN module can be upgraded into the layered one
+        without a migrate hook: the layer bootstraps its private state and
+        forwards everything else to its inner module. Keys NOT listed stay
+        strictly required, so a genuinely incomplete transfer still fails
+        loudly."""
+        return ()
+
 
 class BentoFilesystem(BentoModule):
     """File-operations API (FUSE low-level port + SuperBlock capability)."""
@@ -452,6 +467,22 @@ class BentoFilesystem(BentoModule):
 
     @abc.abstractmethod
     def statfs(self) -> Dict[str, int]: ...
+
+    # --- stackable layers (provenance query op) ---------------------------------
+    # A stackable module (see ``repro.fs.prov``) wraps another
+    # BentoFilesystem and sets ``inner``; dispatch layers never care, but
+    # the upgrade path uses it to wrap/unwrap layers onto a live mount.
+    inner: Optional["BentoFilesystem"] = None
+
+    def read_provenance(self, since: int = 0) -> List[Dict[str, Any]]:
+        """Query the provenance log (paper §6): plain-value records, each
+        carrying at least ``seq``/``op``/``ino``/``parent``/``name``/``ts``,
+        for records with ``seq >= since``. Part of the file-operations API
+        so it crosses every dispatch layer (scalar, batched, FUSE) like any
+        other op; modules without a provenance layer refuse it with
+        ``EINVAL``, the way an unknown ioctl would be."""
+        del since
+        raise FsError(Errno.EINVAL, "no provenance layer mounted")
 
     # --- batched boundary ------------------------------------------------------
     _SIG_CACHE: Dict[Tuple[type, str], inspect.Signature] = {}
@@ -515,15 +546,27 @@ class BentoFilesystem(BentoModule):
         return [self._dispatch_one(e) for e in entries]
 
     # --- chain reservation hooks -------------------------------------------------
-    def chain_begin(self, entries: List[SubmissionEntry]) -> Optional[Errno]:
+    def chain_begin(self, entries: List[SubmissionEntry],
+                    extra_blocks: int = 0) -> Optional[Errno]:
         """Called by ``execute_batch`` before a chain group executes; the
         module reserves whatever makes the WHOLE chain one atomicity unit
         (journaled modules size one journal transaction from the entries —
-        see ``repro.fs.xv6``). Return an ``Errno`` (``ENOSPC``) to refuse
-        the chain before anything is staged: the first member completes
-        with it, the rest ``ECANCELED``. Default: no reservation needed."""
-        del entries
+        see ``repro.fs.xv6``). ``extra_blocks`` is the stacked-layer hook:
+        a wrapper that stages additional blocks inside the same
+        transaction (provenance records) adds its footprint here. Return
+        an ``Errno`` (``ENOSPC``) to refuse the chain before anything is
+        staged: the first member completes with it, the rest
+        ``ECANCELED``. Default: no reservation needed."""
+        del entries, extra_blocks
         return None
+
+    def estimate_append_blocks(self, nbytes: int) -> int:
+        """Journal-blocks upper bound for appending ``nbytes`` to an
+        existing file — part of the stackable-layer contract (a wrapper
+        sizes the records it will stage through this module's write path).
+        Journaled modules override with their real write-path overhead
+        (see ``repro.fs.xv6``); the default is a generous generic bound."""
+        return nbytes // 4096 + 4
 
     def chain_end(self) -> None:
         """Close the scope ``chain_begin`` opened (always called, even when

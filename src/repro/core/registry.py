@@ -44,7 +44,7 @@ import threading
 from typing import Any, Callable, Deque, Dict, Iterable, List, Optional
 
 from repro.core.interface import (BentoFilesystem, CompletionEntry, Errno,
-                                  FsError, SQE_LINK, SubmissionEntry,
+                                  FS_OPS, FsError, SQE_LINK, SubmissionEntry,
                                   execute_batch, execute_multi_batch)
 
 _FS_REGISTRY: Dict[str, Callable[[], BentoFilesystem]] = {}
@@ -112,9 +112,7 @@ class OpGate:
             self._lock.notify_all()
 
 
-_FS_OPS = ("getattr", "lookup", "create", "mkdir", "unlink", "rmdir", "rename",
-           "readdir", "read", "write", "truncate", "fsync", "flush", "statfs",
-           "submit_batch")
+_FS_OPS = FS_OPS + ("submit_batch",)  # the table also carries the batch door
 
 
 class _PendingSubmission:
@@ -149,6 +147,8 @@ class Mount:
         self._sqpoll: Optional[threading.Thread] = None
         self._sqpoll_run = False
         self._sqpoll_idle_s = 0.0
+        self._sqpoll_idle_base_s = 0.0
+        self._sqpoll_adaptive = False
         self._tls = threading.local()
         self.mq_submissions = 0  # submit() calls routed through the queue
         self.mq_drains = 0       # gate crossings that drained pending SQs
@@ -235,15 +235,19 @@ class Mount:
             raise sub.error
         return sub.comps
 
-    def _drain_pending(self) -> None:
+    def _drain_pending(self) -> int:
         """Drainer role: swallow everything pending in one gate crossing,
         repeating until the queue is empty (submissions that arrive while
-        a drain executes ride the NEXT crossing, not their own)."""
+        a drain executes ride the NEXT crossing, not their own). Returns
+        the number of submissions carried — the SQPOLL poller feeds it to
+        ``_adapt_idle``."""
+        carried = 0
         while True:
             with self._mq_cv:
                 batch, self._mq_pending = self._mq_pending, []
             if not batch:
-                return
+                return carried
+            carried += len(batch)
             self.mq_drains += 1
             self.gate.enter()
             try:
@@ -274,7 +278,7 @@ class Mount:
         return q
 
     # --- dedicated SQPOLL drainer (io_uring IORING_SETUP_SQPOLL analogue) ------
-    def start_sqpoll(self, idle_us: int = 500) -> None:
+    def start_sqpoll(self, idle_us: int = 500, adaptive: bool = True) -> None:
         """Hand the drainer role to a dedicated thread: submitters only
         append and wait, the poller drains everything pending in one gate
         crossing per round. ``idle_us`` is the ``sq_thread_idle``
@@ -283,7 +287,13 @@ class Mount:
         coalescing under an interpreter whose threads otherwise hand off
         in 5 ms slices). Opportunistic drain-on-submit resumes after
         ``stop_sqpoll``; uncontended callers should prefer that default —
-        the poller adds the gather window to every submission's latency."""
+        the poller adds the gather window to every submission's latency.
+
+        ``adaptive`` shrinks that latency tax when traffic turns out to be
+        uncontended: a drain that carried ≤ 1 submission paid the gather
+        window for nothing, so the window HALVES (down to zero); a full
+        drain (≥ 2 submissions actually coalesced) restores the configured
+        window — see ``_adapt_idle``."""
         with self._mq_cv:
             if self._sqpoll is not None:
                 return
@@ -293,7 +303,9 @@ class Mount:
             while self._mq_draining:
                 self._mq_cv.wait()
             self._sqpoll_run = True
-            self._sqpoll_idle_s = max(idle_us, 0) / 1e6
+            self._sqpoll_adaptive = adaptive
+            self._sqpoll_idle_base_s = max(idle_us, 0) / 1e6
+            self._sqpoll_idle_s = self._sqpoll_idle_base_s
             self._mq_draining = True  # the poller owns the role for good
             self._sqpoll = threading.Thread(
                 target=self._sqpoll_loop, name=f"sqpoll-{self.name}",
@@ -311,6 +323,25 @@ class Mount:
             self._mq_cv.notify_all()
         poller.join()  # its finally released the role
 
+    def _adapt_idle(self, carried: int) -> None:
+        """Adaptive ``sq_thread_idle``: drains that carry ≤ 1 submission
+        prove nobody piled on during the gather window, so latency-
+        sensitive lone submitters stop paying it — the window halves each
+        such drain (snapping to 0 below 1 µs). The first drain that really
+        coalesces (≥ 2 submissions) restores the configured window, so
+        bursty traffic gets its coalescing back immediately. A window
+        decayed to 0 never busy-spins: an idle poller parks on the
+        condition variable, not the gather sleep. Pure state transition on
+        (window, carried) — deterministic to unit-test."""
+        if not self._sqpoll_adaptive or self._sqpoll_idle_base_s <= 0:
+            return
+        if carried <= 1:
+            self._sqpoll_idle_s /= 2
+            if self._sqpoll_idle_s < 1e-6:
+                self._sqpoll_idle_s = 0.0
+        else:
+            self._sqpoll_idle_s = self._sqpoll_idle_base_s
+
     def _sqpoll_loop(self) -> None:
         me = threading.current_thread()
         self._mq_drainer_tid = threading.get_ident()
@@ -324,7 +355,9 @@ class Mount:
                         return
                 if self._sqpoll_idle_s > 0:
                     _t.sleep(self._sqpoll_idle_s)  # gather window (GIL off)
-                self._drain_pending()
+                carried = self._drain_pending()
+                if carried:
+                    self._adapt_idle(carried)
         finally:
             # normal retirement AND death-by-module-bug both release the
             # drainer role here, or every later submit would wait forever

@@ -39,7 +39,11 @@ def _extracted_state(old: BentoModule, new: BentoModule,
     if migrate is not None:
         state = migrate(state, old.VERSION, new.VERSION)
     if strict_schema:
-        missing = set(new.state_schema()) - set(state)
+        # layer-aware: keys the new module can synthesize itself (a
+        # stackable layer's private state, bootstrapped on a plain->layered
+        # upgrade) are not required of the OLD module's extract
+        optional = set(getattr(new, "optional_state_keys", lambda: ())())
+        missing = set(new.state_schema()) - set(state) - optional
         if missing:
             raise UpgradeError(
                 f"state transfer incomplete: {sorted(missing)} missing "
@@ -74,6 +78,64 @@ def upgrade(mount: Mount, new_module: BentoFilesystem,
         mount.gate.thaw()
     return {"quiesce_s": t_quiesce, "transfer_s": t_transfer,
             "total_s": time.perf_counter() - t0}
+
+
+# --- stackable layers: wrap/unwrap a live mount (the paper's §6 demo) -----------------
+#
+# The provenance demo is "add a feature to a RUNNING file system": wrap the
+# mounted module in a stackable layer (repro.fs.prov) with no remount, then
+# strip it again. Both directions are ordinary upgrades — the layer's
+# restore_state forwards the inner module's keys to a fresh inner instance
+# (open handles stay valid: inos are device state; the dentry cache lives in
+# PosixView above the swap; the journal position rides the "journal" state
+# key) and bootstraps its own private state, declared optional via
+# ``optional_state_keys`` so the plain module's extract passes the schema
+# check.
+
+
+def _fresh_like(module: BentoModule) -> BentoModule:
+    """A fresh instance of ``module``'s class, preserving its policy options
+    (the fs classes take them as the sole constructor arg)."""
+    cls = type(module)
+    opts = getattr(module, "opts", None)
+    if opts is not None:
+        try:
+            return cls(opts)
+        except TypeError:
+            pass
+    return cls()
+
+
+def wrap_layer(mount: Mount, make_layer: Callable[[BentoFilesystem],
+                                                  BentoFilesystem],
+               migrate: Optional[Callable] = None) -> Dict[str, float]:
+    """Hot-swap the mounted module for ``make_layer(fresh_inner)`` — e.g.
+    ``wrap_layer(mount, ProvFilesystem)`` adds provenance tracking to a
+    live mount. Returns the upgrade timing stats (the measured pause).
+    One layer deep only: wrapping an already-layered mount is refused
+    (``_fresh_like`` would rebuild the layer around its options object,
+    not its module — unwrap first)."""
+    if getattr(mount.module, "inner", None) is not None:
+        raise UpgradeError(
+            f"mount already carries a stackable layer "
+            f"({type(mount.module).__name__}) — unwrap it first")
+    return upgrade(mount, make_layer(_fresh_like(mount.module)),
+                   migrate=migrate)
+
+
+def unwrap_layer(mount: Mount,
+                 migrate: Optional[Callable] = None) -> Dict[str, float]:
+    """The reverse demo: strip the mounted stackable layer, downgrading to
+    a fresh instance of its inner module's class. The layer's private state
+    keys ride along in the extracted dict and are simply ignored by the
+    plain module's restore; its on-device artifacts (the provenance log)
+    stay durable for the next wrap."""
+    layer = mount.module
+    if getattr(layer, "inner", None) is None:
+        raise UpgradeError(
+            f"mounted module {type(layer).__name__} is not a stackable "
+            "layer — nothing to unwrap")
+    return upgrade(mount, _fresh_like(layer.inner), migrate=migrate)
 
 
 # --- generic module upgrade (trainer substrates) --------------------------------------

@@ -425,6 +425,121 @@ def torture_rename(kind: str = "xv6", *, quick: bool = False) -> int:
     return sim.sweep(workload, invariant, setup=setup, quick=quick)
 
 
+# --- provenance-log torture: the log must always be explainable ------------------
+
+
+def _prov_factory(kind: str):
+    from repro.fs.prov import ProvFilesystem
+
+    base = _fs_factory(kind)
+    return lambda: ProvFilesystem(base())
+
+
+def torture_prov(kind: str = "xv6", *, quick: bool = False) -> int:
+    """Sweep a scripted mutation sequence through the provenance layer:
+    after power loss at EVERY device write, the recovered log must never
+    reference an inode or name the recovered file system doesn't explain.
+
+    For namespace ops the layer commits mutation + record in ONE journal
+    transaction (old-XOR-new), which makes the invariant exact and
+    bidirectional: replaying the recovered log's namespace records over
+    the durable setup state must reproduce the recovered tree EXACTLY —
+    a record without its mutation, a mutation without its record, or a
+    reordering all fail the sweep. File content is checked one-directional
+    for writes (record durable ⇒ data durable)."""
+    payload = b"W" * (4096 + 33)
+
+    def setup(ctx: CrashCtx) -> None:
+        ctx.view.write_file("/seed", b"s" * 4096)
+
+    def workload(ctx: CrashCtx) -> None:
+        # fsyncs split the stream into several journal transactions, so
+        # the sweep sees genuine PREFIX states (ops 1..k durable), not
+        # just all-or-nothing of one group commit
+        v = ctx.view
+        v.create("/a")
+        v.write_file("/a", payload, create=False)
+        v.fsync("/a")
+        v.mkdir("/d")
+        v.rename("/seed", "/d/renamed")
+        v.fsync("/d")
+        v.create("/b")
+        v.unlink("/a")
+        v.fsync("/b")
+
+    # records the durable setup leaves in the log (identical every boot)
+    sim = CrashSim(_prov_factory(kind))
+    ctx0 = sim.boot(setup)
+    n_setup = len(ctx0.fs.read_provenance())
+
+    def invariant(rec: Recovered) -> None:
+        recs = rec.fs.read_provenance()[n_setup:]
+        # replay namespace records over the setup namespace: {path: ino}
+        dirs = {"/": 1}
+        names = {"/seed": None}
+        for r in recs:
+            if r["op"] == "create":
+                parent = "/" if r["parent"] == 1 else "/d"
+                names[f"{parent.rstrip('/')}/{r['name']}"] = r["ino"]
+            elif r["op"] == "mkdir":
+                dirs[f"/{r['name']}"] = r["ino"]
+            elif r["op"] == "unlink":
+                names.pop(f"/{r['name']}", None)
+            elif r["op"] == "rename":
+                ino = names.pop(f"/{r['name']}")
+                names[f"/d/{r['newname']}"] = ino
+        # bidirectional namespace equality (old-XOR-new per record)
+        got_root = set(rec.view.listdir("/"))
+        want_root = ({p[1:] for p in names if p.count("/") == 1}
+                     | {d[1:] for d in dirs if d != "/"})
+        assert got_root == want_root, \
+            f"log does not explain the tree: fs={got_root} log={want_root}"
+        for d, dino in dirs.items():
+            if d == "/":
+                continue
+            assert rec.view.stat(d).ino == dino, f"{d}: wrong ino"
+            got_d = set(rec.view.listdir(d))
+            want_d = {p.split("/")[-1] for p in names
+                      if p.startswith(d + "/")}
+            assert got_d == want_d, f"{d} mismatch: {got_d} != {want_d}"
+        for path, ino in names.items():
+            if ino is not None:
+                assert rec.view.stat(path).ino == ino, f"{path}: wrong ino"
+        # writes: record durable ⇒ data durable (never the reverse claim)
+        if any(r["op"] == "write" and r.get("len") == len(payload)
+               for r in recs) and "/a" in names:
+            assert rec.view.read_file("/a") == payload, "write record " \
+                "durable but its data is not"
+        rec.view.statfs()
+
+    return sim.sweep(workload, invariant, setup=setup, quick=quick)
+
+
+def torture_prov_chain(kind: str = "xv6", *, quick: bool = False) -> int:
+    """The chained shape: one journal transaction must span the chain's
+    data AND its provenance records — after recovery the file and its
+    create/write records exist together or not at all."""
+    payload = b"Q" * (2 * 4096 + 17)
+    sim = CrashSim(_prov_factory(kind), nlog=64)
+
+    def invariant(rec: Recovered) -> None:
+        recs = rec.fs.read_provenance()
+        have_file = rec.view.exists("/f")
+        have_recs = [r["op"] for r in recs if r.get("name") == "f"
+                     or (r["op"] == "write" and r.get("len") == len(payload))]
+        if have_file:
+            assert rec.view.read_file("/f") == payload, "half-applied chain"
+            assert have_recs == ["create", "write"], \
+                f"chain durable without its records: {have_recs}"
+        else:
+            assert rec.crashed, "no crash, yet /f is missing"
+            assert not have_recs, \
+                f"records durable without their chain: {have_recs}"
+        rec.view.listdir("/")
+
+    return sim.sweep(chain_workload(payload), invariant, quick=quick)
+
+
 def main() -> None:
     import argparse
 
@@ -451,6 +566,12 @@ def main() -> None:
         n = torture_rename(kind, quick=args.quick)
         print(f"crashsim {kind}: rename-overwrite old-XOR-new (+blocks "
               f"freed) at {n} crash points ({mode}) — OK")
+        n = torture_prov(kind, quick=args.quick)
+        print(f"crashsim {kind}: provenance log explains the recovered fs "
+              f"at {n} crash points ({mode}) — OK")
+        n = torture_prov_chain(kind, quick=args.quick)
+        print(f"crashsim {kind}: chain txn spans data + provenance records "
+              f"at {n} crash points ({mode}) — OK")
     if args.fuse:
         n = torture_fuse(quick=True, torn_bytes=args.torn_bytes)
         torn = (f", torn at {args.torn_bytes}B" if args.torn_bytes >= 0

@@ -325,3 +325,12 @@ class Ext4LikeFileSystem(Xv6FileSystem):
         super().restore_state(state, from_version)
         self._dirindex = {int(d): dict(v)
                           for d, v in state.get("dirindex", {}).items()}
+
+    def state_schema(self):
+        return super().state_schema() + ("dirindex",)
+
+    def optional_state_keys(self):
+        # a lazily-rebuilt cache: an upgrade FROM plain xv6 (which never
+        # emits it) legally starts with an empty index — declaring it
+        # optional keeps the schema honest without forcing a migrate hook
+        return ("dirindex",)

@@ -43,10 +43,8 @@ import threading
 import time
 from typing import Any, List, Optional
 
-from repro.core.interface import Errno, FsError, execute_multi_batch
-
-_FS_OPS = ("getattr", "lookup", "create", "mkdir", "unlink", "rmdir", "rename",
-           "readdir", "read", "write", "truncate", "fsync", "flush", "statfs")
+from repro.core.interface import (Errno, FS_OPS as _FS_OPS, FsError,
+                                  execute_multi_batch)
 
 
 def _send(sock: socket.socket, obj: Any) -> None:
@@ -79,10 +77,52 @@ def _send_quiet(sock: socket.socket, obj: Any) -> None:
         pass
 
 
-def _handle_ctl(dev, stats, args) -> Any:
-    """The crash-torture side-channel: arm/read the device's write-stream
-    fault injection and expose the daemon's drain counters (values only —
-    the client never touches daemon objects)."""
+def _make_fs(fs_kind: str, opts):
+    """Module factory for the daemon's mount matrix. ``prov-<kind>``
+    wraps the base fs in the provenance layer at mount time (the
+    re-mount/crash-recovery path; live swaps go through the ``wrap_prov``
+    ctl instead)."""
+    from repro.fs.ext4like import Ext4LikeFileSystem
+    from repro.fs.prov import ProvFilesystem
+    from repro.fs.xv6 import Xv6FileSystem
+
+    base_kind = fs_kind[len("prov-"):] if fs_kind.startswith("prov-") \
+        else fs_kind
+    fs = (Ext4LikeFileSystem(opts) if base_kind == "ext4like"
+          else Xv6FileSystem(opts))
+    return ProvFilesystem(fs) if fs_kind.startswith("prov-") else fs
+
+
+def _swap_module(ks, state, new_fs) -> dict:
+    """Daemon-side hot swap: the single-threaded service loop IS the op
+    gate (a ctl request is never concurrent with a drain), so the swap is
+    extract → init → restore → install, same protocol as
+    ``repro.core.upgrade`` behind the real gate. Returns the measured
+    pause — the daemon's analogue of the upgrade timing stats."""
+    import time as _time
+
+    from repro.core.upgrade import _extracted_state
+
+    old = state["fs"]
+    t0 = _time.perf_counter()
+    st = _extracted_state(old, new_fs, None, True)
+    new_fs.init(ks.superblock(), ks)
+    new_fs.restore_state(st, old.VERSION)
+    state["fs"] = new_fs
+    state["generation"] += 1
+    old.destroy()
+    return {"pause_s": _time.perf_counter() - t0,
+            "generation": state["generation"],
+            "module": type(new_fs).__name__}
+
+
+def _handle_ctl(dev, stats, ks, state, args) -> Any:
+    """The daemon side-channel: crash-torture fault injection, drain
+    counters, and the live provenance wrap/unwrap (values only — the
+    client never touches daemon objects)."""
+    from repro.core.upgrade import _fresh_like
+    from repro.fs.prov import ProvFilesystem
+
     cmd = args[0]
     if cmd == "fail_after_writes":
         dev.fail_after_writes = int(args[1])
@@ -92,7 +132,20 @@ def _handle_ctl(dev, stats, args) -> Any:
     if cmd == "writes_seen":
         return dev._writes_seen
     if cmd == "stats":
-        return dict(stats)
+        return dict(stats, generation=state["generation"],
+                    module=type(state["fs"]).__name__)
+    if cmd == "generation":
+        return state["generation"]
+    if cmd == "wrap_prov":
+        old = state["fs"]
+        if isinstance(old, ProvFilesystem):
+            raise FsError(Errno.EEXIST, "provenance layer already mounted")
+        return _swap_module(ks, state, ProvFilesystem(_fresh_like(old)))
+    if cmd == "unwrap_prov":
+        old = state["fs"]
+        if getattr(old, "inner", None) is None:
+            raise FsError(Errno.EINVAL, "no layer to unwrap")
+        return _swap_module(ks, state, _fresh_like(old.inner))
     raise FsError(Errno.EINVAL, f"unknown ctl {cmd!r}")
 
 
@@ -103,8 +156,7 @@ def serve(sock_path: str, backing_path: str, n_blocks: int, fs_kind: str,
     image (journal recovery runs in the fs's init)."""
     from repro.core.services import userspace_binding
     from repro.fs.blockdev import FileBlockDevice
-    from repro.fs.ext4like import Ext4LikeFileSystem
-    from repro.fs.xv6 import Xv6FileSystem, Xv6Options, mkfs
+    from repro.fs.xv6 import Xv6Options, mkfs
 
     dev = FileBlockDevice(backing_path, n_blocks)
     ks = userspace_binding(dev)
@@ -112,9 +164,11 @@ def serve(sock_path: str, backing_path: str, n_blocks: int, fs_kind: str,
         mkfs(ks)
     # userspace policy: synchronous installs, whole-file fsync
     opts = Xv6Options(group_commit=True, batched_install=False)
-    fs = (Ext4LikeFileSystem(opts) if fs_kind == "ext4like"
-          else Xv6FileSystem(opts))
+    fs = _make_fs(fs_kind, opts)
     fs.init(ks.superblock(), ks)
+    # the live module rides in a holder so the wrap/unwrap ctl can swap it
+    # between service rounds (the loop is the gate: no request in flight)
+    state = {"fs": fs, "generation": 1}
 
     # drain observability (read via __ctl__ "stats"): drains counts service
     # rounds that executed submit_batch traffic, batch_requests the client
@@ -171,7 +225,8 @@ def serve(sock_path: str, backing_path: str, n_blocks: int, fs_kind: str,
                     stats["multi_channel_drains"] += 1
                 try:
                     segs = execute_multi_batch(
-                        fs.submit_batch, [ents for _, ents in batch_reqs])
+                        state["fs"].submit_batch,
+                        [ents for _, ents in batch_reqs])
                 except FsError as e:
                     for conn, _ in batch_reqs:
                         _send_quiet(conn, ("fs_error", int(e.errno)))
@@ -188,17 +243,17 @@ def serve(sock_path: str, backing_path: str, n_blocks: int, fs_kind: str,
             for conn, op, args, kw in scalar_reqs:
                 try:
                     if op == "__ctl__":
-                        _send_quiet(conn, ("ok", _handle_ctl(dev, stats,
-                                                             args)))
+                        _send_quiet(conn, ("ok", _handle_ctl(dev, stats, ks,
+                                                             state, args)))
                         continue
                     if op == "fsync":
                         # paper: the file interface can't sync parts of a
                         # file — the whole backing file syncs per fsync.
-                        fs.journal.commit()
+                        state["fs"].journal.commit()
                         dev.sync()
                         _send_quiet(conn, ("ok", None))
                         continue
-                    res = getattr(fs, op)(*args, **kw)
+                    res = getattr(state["fs"], op)(*args, **kw)
                     _send_quiet(conn, ("ok", res))
                 except FsError as e:
                     _send_quiet(conn, ("fs_error", int(e.errno)))
@@ -206,7 +261,7 @@ def serve(sock_path: str, backing_path: str, n_blocks: int, fs_kind: str,
                     _send_quiet(conn, ("error", f"{type(e).__name__}: {e}"))
     finally:
         try:
-            fs.destroy()
+            state["fs"].destroy()
             dev.close()
         except Exception:  # noqa: BLE001 — teardown after injected crash
             pass
@@ -291,6 +346,22 @@ class FuseMount:
         """Crash-torture side-channel (see ``_handle_ctl``): e.g.
         ``ctl("fail_after_writes", n, torn_bytes)`` / ``ctl("stats")``."""
         return self.call("__ctl__", *args)
+
+    def wrap_prov(self) -> Any:
+        """Hot-swap the provenance layer onto the daemon's live fs — the
+        paper's §6 demo carried across the address-space boundary. The
+        swap lands between two service rounds (never mid-drain) and the
+        returned dict reports the daemon-side pause. Bumps
+        ``generation`` like the in-process upgrade does."""
+        res = self.ctl("wrap_prov")
+        self.generation = res["generation"]
+        return res
+
+    def unwrap_prov(self) -> Any:
+        """Strip the daemon's provenance layer (the reverse demo)."""
+        res = self.ctl("unwrap_prov")
+        self.generation = res["generation"]
+        return res
 
     def submit(self, entries):
         # The batched boundary is where FUSE hurts least: one socket

@@ -15,7 +15,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable, Dict
 
-from repro.core.interface import execute_batch
+from repro.core.interface import FS_OPS as _FS_OPS, execute_batch
 from repro.core.registry import Mount, mount as bento_mount
 from repro.core.services import kernel_binding, userspace_binding
 from repro.fs.blockdev import MemBlockDevice
@@ -24,8 +24,6 @@ from repro.fs.fusebridge import FuseMount
 from repro.fs.posix import PosixView
 from repro.fs.xv6 import Xv6FileSystem, Xv6Options, mkfs
 
-_FS_OPS = ("getattr", "lookup", "create", "mkdir", "unlink", "rmdir", "rename",
-           "readdir", "read", "write", "truncate", "fsync", "flush", "statfs")
 
 
 class DirectMount:
@@ -68,35 +66,48 @@ class MountedFs:
 
 
 def make_mount(kind: str, n_blocks: int = 16384, *,
-               backing_path: str = None, reuse: bool = False) -> MountedFs:
+               backing_path: str = None, reuse: bool = False,
+               prov: bool = False) -> MountedFs:
     """Build one matrix entry. ``backing_path``/``reuse`` apply to the
     fuse kind only: an explicit backing file location, and whether to
     remount it as-is (skip mkfs; daemon-side journal recovery runs) — the
-    FUSE crash-torture path (repro.fs.crashsim.FuseCrashSim)."""
+    FUSE crash-torture path (repro.fs.crashsim.FuseCrashSim).
+    ``prov=True`` mounts the module wrapped in the provenance layer from
+    the start (the torture/benchmark baseline; the live-swap path goes
+    through ``repro.core.upgrade.wrap_layer`` instead)."""
+    def _wrap(fs):
+        if not prov:
+            return fs
+        from repro.fs.prov import ProvFilesystem
+        return ProvFilesystem(fs)
+
     if kind == "bento":
         dev = MemBlockDevice(n_blocks)
         ks = kernel_binding(dev)
         mkfs(ks)
-        fs = Xv6FileSystem(Xv6Options(group_commit=True, batched_install=True))
+        fs = _wrap(Xv6FileSystem(Xv6Options(group_commit=True,
+                                            batched_install=True)))
         m = bento_mount("xv6", ks, module=fs)
         return MountedFs(kind, m, PosixView(m), ks)
     if kind == "vfs":
         dev = MemBlockDevice(n_blocks)
         ks = kernel_binding(dev, writeback="through")
         mkfs(ks)
-        fs = Xv6FileSystem(Xv6Options(group_commit=False, batched_install=False))
+        fs = _wrap(Xv6FileSystem(Xv6Options(group_commit=False,
+                                            batched_install=False)))
         fs.init(ks.superblock(), ks)
         m = DirectMount(fs)
         return MountedFs(kind, m, PosixView(m), ks)
     if kind == "fuse":
-        m = FuseMount(n_blocks=n_blocks, fs_kind="xv6",
+        m = FuseMount(n_blocks=n_blocks,
+                      fs_kind="prov-xv6" if prov else "xv6",
                       backing_path=backing_path, reuse=reuse)
         return MountedFs(kind, m, PosixView(m))
     if kind == "ext4like":
         dev = MemBlockDevice(n_blocks)
         ks = kernel_binding(dev)
         mkfs(ks)
-        fs = Ext4LikeFileSystem()
+        fs = _wrap(Ext4LikeFileSystem())
         m = bento_mount("ext4like", ks, module=fs)
         return MountedFs(kind, m, PosixView(m), ks)
     raise KeyError(kind)

@@ -191,6 +191,13 @@ class PosixView:
     def statfs(self) -> Dict[str, int]:
         return self.m.statfs()
 
+    def read_provenance(self, since: int = 0) -> List[Dict]:
+        """Query the mounted provenance layer (paper §6): plain-value
+        records for every mutation with ``seq >= since``, in execution
+        order. Raises ``FsError(EINVAL)`` when no provenance layer is
+        mounted — feature-probe with a try/except, like an ioctl."""
+        return self.m.read_provenance(since)
+
     # --- batched API (one boundary crossing per batch) ----------------------------
     @staticmethod
     def _unwrap(comps, strict: bool):

@@ -217,8 +217,22 @@ class Xv6FileSystem(BentoFilesystem):
         """Journal-blocks upper bound for a chain, from its entries."""
         return sum(self._chain_entry_blocks(e) for e in entries)
 
-    def chain_begin(self, entries):
-        est = self.estimate_chain_blocks(entries)
+    def estimate_append_blocks(self, nbytes: int) -> int:
+        """Journal-blocks upper bound for appending ``nbytes`` to an
+        existing file — the log-block allocation hook a stacked layer
+        (repro.fs.prov) uses to size the provenance records it will add to
+        a reservation. Data blocks (+1 for a straddled boundary) plus this
+        fs's per-write metadata overhead; subclasses with costlier write
+        paths inherit their own ``_CHAIN_WRITE_OVERHEAD``."""
+        return (nbytes + L.BSIZE - 1) // L.BSIZE + 1 + self._CHAIN_WRITE_OVERHEAD
+
+    def chain_begin(self, entries, extra_blocks: int = 0):
+        """Reserve ONE journal transaction for a whole chain group.
+        ``extra_blocks`` is the stacked-layer hook: a wrapper that will
+        stage additional blocks inside the same transaction (provenance
+        records) adds its footprint to the reservation, so the atomicity
+        estimate covers BOTH layers or the chain is refused up front."""
+        est = self.estimate_chain_blocks(entries) + extra_blocks
         self._oplock.acquire()
         try:
             self.journal.begin_chain(est)

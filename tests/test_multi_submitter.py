@@ -444,6 +444,92 @@ def test_drainer_exception_reaches_every_waiter_and_role_recovers():
     assert m.submit([SubmissionEntry("getattr", (7,))])[0].ok
 
 
+# --- adaptive SQPOLL gather window ------------------------------------------------
+
+
+def test_sqpoll_adaptive_idle_state_machine():
+    """The adaptation rule itself, exercised deterministically: lone-
+    submission drains halve the gather window (snapping to 0 below 1 µs),
+    the first coalescing drain (≥2 submissions) restores the configured
+    window, and idle_us=0 / adaptive=False configurations never adapt."""
+    mf = make_mount("bento", n_blocks=2048)
+    m = mf.mount
+    m.start_sqpoll(idle_us=400)
+    try:
+        base = m._sqpoll_idle_base_s
+        assert base == pytest.approx(400e-6)
+        m._adapt_idle(1)
+        assert m._sqpoll_idle_s == pytest.approx(base / 2)
+        m._adapt_idle(1)
+        assert m._sqpoll_idle_s == pytest.approx(base / 4)
+        m._adapt_idle(4)                      # full drain: restore
+        assert m._sqpoll_idle_s == pytest.approx(base)
+        for _ in range(12):                   # decays to exactly zero
+            m._adapt_idle(0 or 1)
+        assert m._sqpoll_idle_s == 0.0
+        m._adapt_idle(2)
+        assert m._sqpoll_idle_s == pytest.approx(base)
+    finally:
+        m.stop_sqpoll()
+    # idle_us=0: nothing to adapt
+    m.start_sqpoll(idle_us=0)
+    try:
+        m._adapt_idle(1)
+        assert m._sqpoll_idle_s == 0.0
+    finally:
+        m.stop_sqpoll()
+    # adaptive off: window pinned
+    m.start_sqpoll(idle_us=300, adaptive=False)
+    try:
+        m._adapt_idle(1)
+        assert m._sqpoll_idle_s == pytest.approx(300e-6)
+    finally:
+        m.stop_sqpoll()
+    mf.close()
+
+
+def test_sqpoll_adaptive_idle_decays_then_frozen_pileup_restores():
+    """Integration, still deterministic: sequential lone submissions each
+    drain alone (submit blocks until completion, so drains serialize) and
+    the window halves per drain; then the frozen-gate trick piles 4
+    submissions into ONE drain call, which restores the window."""
+    mf = make_mount("bento", n_blocks=4096)
+    v = mf.view
+    v.write_file("/f", b"a" * 4096)
+    ino = v.stat("/f").ino
+    m = mf.mount
+    m.start_sqpoll(idle_us=400)
+    try:
+        base = m._sqpoll_idle_base_s
+        for _ in range(3):  # three lone drains: base/2, base/4, base/8
+            assert m.submit([SubmissionEntry("read", (ino, 0, 1))])[0].ok
+        assert m._sqpoll_idle_s == pytest.approx(base / 8)
+        m.gate.freeze()
+        s0 = m.mq_submissions
+        results = {}
+
+        def worker(t):
+            results[t] = m.submit([SubmissionEntry("read", (ino, 0, 1),
+                                                   user_data=t)])
+
+        threads = [threading.Thread(target=worker, args=(t,), daemon=True)
+                   for t in range(4)]
+        for t in threads:
+            t.start()
+        _wait_until(lambda: m.mq_submissions - s0 == 4)
+        time.sleep(0.05)
+        m.gate.thaw()
+        _join_all(threads)
+        # all 4 rode one _drain_pending call (the poller loops until the
+        # queue is empty before adapting), so the full-drain rule fired
+        assert m._sqpoll_idle_s == pytest.approx(base)
+        for t in range(4):
+            assert results[t][0].ok and results[t][0].result == b"a"
+    finally:
+        m.stop_sqpoll()
+    mf.close()
+
+
 # --- SubmitterQueue surfaces ------------------------------------------------------
 
 
