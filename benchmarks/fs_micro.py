@@ -483,6 +483,110 @@ def bench_threaded(kind: str = "bento", *, threads: int = 4, batch: int = 128,
     return rows
 
 
+def bench_dedup(kind: str = "dedup-bento", *, n_files: int = 24,
+                blocks_per_file: int = 8, n_torn: int = 6,
+                seed: int = 7) -> List[Dict]:
+    """Content-addressed BlockStore mode (dedup mounts) — self-asserting.
+
+    Phase 1 (space): a dup-heavy corpus — ``n_files`` files of
+    ``blocks_per_file`` 4 KiB blocks each, drawn from a unique-block pool
+    a quarter the corpus size — written through ``write_many`` batches.
+    Tripwires: exactly ONE blockhash launch per flushed batch (the
+    batched data plane never degrades to per-block hashing) and ≥ 2x
+    logical-over-physical space saving measured by the statfs free-block
+    delta (dedup really shares).
+
+    Phase 2 (verified reads): tear ``n_torn`` tracked device blocks
+    behind the cache's back, drop them from the cache, and bulk-read the
+    whole corpus with ``strict=False``. Tripwires: EIO for EXACTLY the
+    files touching torn blocks (100% detection, zero false positives),
+    byte-identical data everywhere else, and a corruption counter equal
+    to the number of torn blocks."""
+    from repro.core.interface import FsError
+
+    rows: List[Dict] = []
+    mf = make_mount(kind, n_blocks=16384)
+    v, ks, fs = mf.view, mf.services, mf.mount.module
+    rng = np.random.default_rng(seed)
+    pool_n = max(2, (n_files * blocks_per_file) // 4)
+    pool = [rng.integers(0, 256, 4096, dtype=np.uint8).tobytes()
+            for _ in range(pool_n)]
+    files = {
+        f"/d{f:03d}": b"".join(pool[int(rng.integers(pool_n))]
+                               for _ in range(blocks_per_file))
+        for f in range(n_files)}
+    paths = sorted(files)
+
+    # --- phase 1: dup-heavy corpus through flushed write_many batches --------
+    free0 = v.statfs()["free_blocks_est"]
+    h0 = v.statfs()["dedup_hash_launches"]
+    per_batch = 8
+    n_batches = 0
+    t0 = time.perf_counter()
+    for i in range(0, len(paths), per_batch):
+        chunk = paths[i:i + per_batch]
+        v.write_many([(p, 0, files[p]) for p in chunk], create=True,
+                     fsync=True)
+        n_batches += 1
+    wall = time.perf_counter() - t0
+    sf = v.statfs()
+    logical = n_files * blocks_per_file
+    physical = free0 - sf["free_blocks_est"]
+    launches = sf["dedup_hash_launches"] - h0
+    ratio = logical / max(1, physical)
+    rows.append({
+        "bench": "dedup_write", "fs": kind, "files": n_files,
+        "logical_blocks": logical, "physical_blocks": physical,
+        "space_saving": ratio, "dedup_hits": sf["dedup_hits"],
+        "cow_breaks": sf["dedup_cow_breaks"],
+        "hash_launches_per_batch": launches / n_batches,
+        "ops_per_s": logical / wall,
+    })
+    assert launches == n_batches, \
+        (f"{launches} blockhash launches for {n_batches} flushed batches "
+         f"(expected exactly one per batch)")
+    assert ratio >= 2.0, \
+        (f"space saving {ratio:.2f}x on a 4:1 dup-heavy corpus "
+         f"(target >= 2x): {physical} physical for {logical} logical")
+
+    # --- phase 2: torn device blocks must all be caught by verified reads ----
+    store = fs._blockstore
+    hashed = sorted(store.hashval)
+    picks = np.linspace(0, len(hashed) - 1, min(n_torn, len(hashed)))
+    torn = sorted({hashed[int(i)] for i in picks})
+    block_files: Dict[int, set] = {}
+    for p in paths:
+        di = fs._iget(v._walk(p))
+        cache: Dict = {}
+        for bn in range((di.size + 4095) // 4096):
+            block_files.setdefault(fs._bmap_ro(di, bn, cache), set()).add(p)
+    expect_bad = {p for b in torn for p in block_files.get(b, ())}
+    for b in torn:
+        raw = bytearray(mf.dev.read_block(b))
+        raw[:16] = b"torn-by-bench!!!"
+        mf.dev.write_block(b, bytes(raw))
+    ks.sb_invalidate_blocks(fs.sb_cap, torn)  # next read refetches
+    c0 = v.statfs()["dedup_corruptions_detected"]
+    got = v.read_many([(p, 0, len(files[p])) for p in paths], strict=False)
+    bad = {p for p, r in zip(paths, got) if isinstance(r, FsError)}
+    detected = v.statfs()["dedup_corruptions_detected"] - c0
+    rows.append({
+        "bench": "dedup_verify", "fs": kind, "torn_blocks": len(torn),
+        "detected_blocks": detected, "files_eio": len(bad),
+        "detection_rate": detected / len(torn),
+    })
+    assert bad == expect_bad, \
+        (f"verified reads flagged {sorted(bad)} but torn blocks belong to "
+         f"{sorted(expect_bad)}")
+    assert detected == len(torn), \
+        f"{detected}/{len(torn)} torn blocks detected (need 100%)"
+    for p, r in zip(paths, got):
+        if p not in bad:
+            assert r == files[p], f"clean file {p} returned wrong bytes"
+    mf.close()
+    return rows
+
+
 def _run_workers(n: int, worker) -> float:
     threads = [threading.Thread(target=worker, args=(t,)) for t in range(n)]
     t0 = time.perf_counter()
@@ -519,6 +623,11 @@ def main() -> None:
                          "SubmitterQueues vs N scalar threads")
     ap.add_argument("--seed", type=int, default=7,
                     help="rng seed for benchmark payloads (reproducibility)")
+    ap.add_argument("--dedup", action="store_true",
+                    help="with --batched: also run the content-addressed "
+                         "BlockStore mode (space saving, one blockhash "
+                         "launch per batch, torn-write detection) on both "
+                         "dedup mount kinds")
     ap.add_argument("--quick", action="store_true")
     args = ap.parse_args()
     if args.batched:
@@ -566,6 +675,28 @@ def main() -> None:
         for r in slow:
             print(f"WARNING: {r['bench']} speedup {r['speedup']:.2f}x "
                   f"below the 1.5x target")
+        if args.dedup:
+            from repro.fs.mounts import DEDUP_KINDS
+            n_files = 16 if args.quick else 24
+            for dkind in DEDUP_KINDS:
+                drows = bench_dedup(dkind, n_files=n_files, seed=args.seed)
+                for r in drows:
+                    if r["bench"] == "dedup_write":
+                        print(f"{r['bench']}/{r['fs']}: "
+                              f"{r['logical_blocks']} logical -> "
+                              f"{r['physical_blocks']} physical blocks "
+                              f"({r['space_saving']:.2f}x saved), "
+                              f"{r['dedup_hits']} hits, "
+                              f"{r['hash_launches_per_batch']:.2f} "
+                              f"blockhash launches/batch")
+                    else:
+                        print(f"{r['bench']}/{r['fs']}: "
+                              f"{r['detected_blocks']}/{r['torn_blocks']} "
+                              f"torn blocks detected "
+                              f"({r['detection_rate']:.0%}), "
+                              f"{r['files_eio']} files EIO")
+            # bench_dedup asserts its own tripwires (one launch per batch,
+            # >=2x space saving, 100% torn-write detection, no false EIO)
         if args.threads > 0:
             trows = bench_threaded(
                 args.kind, threads=args.threads,

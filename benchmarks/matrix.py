@@ -1,0 +1,198 @@
+"""Variance-aware benchmark matrix — the persisted perf trajectory.
+
+Sweeps {mount kind} x {dispatch mode: scalar / batched / chained} x
+{thread count} with SHUFFLED SHORT-RUN REPETITION (the btrfs-ublk
+benchmark_matrix idiom): instead of timing each cell once in a fixed
+order — where thermal drift, page-cache state and background noise bias
+whole cells — every (cell, repetition) pair becomes one short run, the
+runs are shuffled with a seeded rng, and each run gets a FRESH mount.
+Noise then time-averages across cells instead of accumulating into one,
+and the per-cell spread (std/cv over repetitions) is reported next to the
+mean, so a later PR claiming "X is now faster" has both a baseline and an
+error bar to beat.
+
+Output: ``BENCH_<pr>.json`` — ``{"meta", "runs", "summary"}`` where
+``runs`` holds one record per short run (execution order preserved) and
+``summary`` one aggregate per cell. CI and later perf PRs diff summaries;
+the runs stay for re-analysis.
+
+CLI:  PYTHONPATH=src python -m benchmarks.matrix --out BENCH_6.json
+      [--reps 5] [--quick] [--fuse] [--seed 7]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import random
+import statistics
+import threading
+import time
+from typing import Dict, List
+
+from repro.fs.mounts import make_mount
+
+WARM_BLOCKS = 64          # 256 KiB warm file per mount
+SIZE = 4096
+
+# kind label -> make_mount arguments (the prov layer is a flag, not a kind)
+KIND_ARGS = {
+    "bento": ("bento", False),
+    "vfs": ("vfs", False),
+    "ext4like": ("ext4like", False),
+    "prov-bento": ("bento", True),
+    "dedup-bento": ("dedup-bento", False),
+    "dedup-ext4like": ("dedup-ext4like", False),
+    "fuse": ("fuse", False),
+}
+DEFAULT_KINDS = ("bento", "vfs", "ext4like", "prov-bento",
+                 "dedup-bento", "dedup-ext4like")
+MODES = ("scalar", "batched", "chained")
+THREADS = (1, 4)
+
+
+def _workers(n: int, worker) -> float:
+    """Wall seconds for n barrier-synchronized workers of worker(t)."""
+    if n == 1:
+        t0 = time.perf_counter()
+        worker(0)
+        return time.perf_counter() - t0
+    barrier = threading.Barrier(n + 1)
+    done: List[BaseException] = []
+
+    def run(t):
+        barrier.wait()
+        try:
+            worker(t)
+        except BaseException as e:  # noqa: BLE001 — re-raised below
+            done.append(e)
+
+    threads = [threading.Thread(target=run, args=(t,)) for t in range(n)]
+    for th in threads:
+        th.start()
+    barrier.wait()
+    t0 = time.perf_counter()
+    for th in threads:
+        th.join()
+    if done:
+        raise done[0]
+    return time.perf_counter() - t0
+
+
+def run_one(kind: str, mode: str, threads: int, *, ops: int,
+            seed: int) -> Dict:
+    """One short run: fresh mount, warm file, timed workload, ops/s."""
+    base_kind, prov = KIND_ARGS[kind]
+    mf = make_mount(base_kind, n_blocks=16384, prov=prov)
+    v = mf.view
+    try:
+        blob = bytes([seed & 0xFF]) * SIZE
+        v.write_file("/warm", blob * WARM_BLOCKS)
+        v.fsync("/warm")
+        n_off = WARM_BLOCKS
+        if mode == "scalar":
+            def worker(t):
+                for i in range(ops):
+                    v.read_file("/warm", off=((t * ops + i) % n_off) * SIZE,
+                                size=SIZE)
+
+            wall = _workers(threads, worker)
+            n_ops = threads * ops
+        elif mode == "batched":
+            batch = 64
+            n_batches = max(1, ops // batch)
+
+            def worker(t):
+                for b in range(n_batches):
+                    base = t * ops + b * batch
+                    v.read_many([("/warm", ((base + i) % n_off) * SIZE, SIZE)
+                                 for i in range(batch)])
+
+            wall = _workers(threads, worker)
+            n_ops = threads * n_batches * batch
+        else:  # chained: create→write(PrevResult)→fsync triples per batch
+            files = max(4, ops // 16)
+            payload = b"p" * 1024
+
+            def worker(t):
+                v.makedirs(f"/t{t}")
+                v.create_and_write_many(
+                    [(f"/t{t}/f{i:04d}", payload) for i in range(files)],
+                    fsync=True)
+
+            wall = _workers(threads, worker)
+            n_ops = threads * files
+        return {"kind": kind, "mode": mode, "threads": threads,
+                "ops": n_ops, "wall_s": wall, "ops_per_s": n_ops / wall}
+    finally:
+        mf.close()
+
+
+def run_matrix(kinds=DEFAULT_KINDS, *, reps: int = 5, ops: int = 512,
+               seed: int = 7) -> Dict:
+    cells = [(k, m, t) for k in kinds for m in MODES for t in THREADS
+             # scalar-shared at 4 threads exists for every kind; the fuse
+             # daemon serializes anyway, so skip its 4-thread rows
+             if not (k == "fuse" and t > 1)]
+    schedule = [(c, r) for c in cells for r in range(reps)]
+    random.Random(seed).shuffle(schedule)  # the variance-awareness
+    runs: List[Dict] = []
+    for i, ((kind, mode, threads), rep) in enumerate(schedule):
+        cell_ops = ops // 8 if kind == "fuse" else ops
+        row = run_one(kind, mode, threads, ops=cell_ops, seed=seed + rep)
+        row.update({"rep": rep, "order": i})
+        runs.append(row)
+        print(f"[{i + 1:3d}/{len(schedule)}] {kind}/{mode}/t{threads} "
+              f"rep{rep}: {row['ops_per_s']:.0f} ops/s")
+    summary = []
+    for kind, mode, threads in cells:
+        vals = sorted(r["ops_per_s"] for r in runs
+                      if (r["kind"], r["mode"], r["threads"])
+                      == (kind, mode, threads))
+        mean = statistics.fmean(vals)
+        std = statistics.stdev(vals) if len(vals) > 1 else 0.0
+        summary.append({
+            "kind": kind, "mode": mode, "threads": threads, "reps": len(vals),
+            "ops_per_s_mean": mean, "ops_per_s_std": std,
+            "cv": std / mean if mean else 0.0,
+            "ops_per_s_min": vals[0], "ops_per_s_max": vals[-1],
+        })
+    return {
+        "meta": {"bench": "matrix", "reps": reps, "ops": ops, "seed": seed,
+                 "kinds": list(kinds), "modes": list(MODES),
+                 "threads": list(THREADS), "shuffled": True,
+                 "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S")},
+        "runs": runs,
+        "summary": summary,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="BENCH_6.json")
+    ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument("--ops", type=int, default=512,
+                    help="per-thread op budget of one short run")
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--quick", action="store_true",
+                    help="3 reps x 256 ops (CI budget)")
+    ap.add_argument("--fuse", action="store_true",
+                    help="include the FUSE daemon kind (a subprocess per "
+                         "run — much slower)")
+    args = ap.parse_args()
+    reps = 3 if args.quick else args.reps
+    ops = 256 if args.quick else args.ops
+    kinds = DEFAULT_KINDS + (("fuse",) if args.fuse else ())
+    table = run_matrix(kinds, reps=reps, ops=ops, seed=args.seed)
+    with open(args.out, "w") as f:
+        json.dump(table, f, indent=1)
+    print(f"\n{args.out}: {len(table['runs'])} runs, "
+          f"{len(table['summary'])} cells")
+    for s in table["summary"]:
+        print(f"  {s['kind']:>14}/{s['mode']:<7} t{s['threads']}: "
+              f"{s['ops_per_s_mean']:9.0f} ops/s "
+              f"± {s['ops_per_s_std']:7.0f} (cv {s['cv']:.2f})")
+
+
+if __name__ == "__main__":
+    main()

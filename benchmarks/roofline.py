@@ -17,14 +17,16 @@ from __future__ import annotations
 import glob
 import json
 import os
+import time
 from typing import Dict, List, Optional
-
-from repro.configs import SHAPES_BY_NAME, registry
-from repro.configs.base import ModelConfig, ShapeSpec
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
 ICI_BW = 50e9
+
+# repro.configs (the model registry) is imported lazily inside build_table:
+# the --blockhash mode measures the filesystem hash kernel and must run
+# standalone, without the model stack importing at all.
 
 
 def analytic_model_flops(cfg: ModelConfig, shape: ShapeSpec) -> float:
@@ -109,6 +111,8 @@ def load_cells(result_dir: str) -> List[Dict]:
 
 
 def build_table(result_dir: str) -> List[Dict]:
+    from repro.configs import SHAPES_BY_NAME, registry
+
     out = []
     for cell in load_cells(result_dir):
         if cell.get("skipped"):
@@ -176,6 +180,60 @@ def main(result_dir: str = "results/dryrun_baseline",
     print(markdown_table(rows))
 
 
+# --- the filesystem hash kernel's roofline (--blockhash) --------------------------
+# kernels/blockhash is the BlockStore data plane's hot path: one batched
+# launch hashes every block a flushed write batch produced. The kernel is
+# memory-bound by construction (one pass over the block, one u32 out), so
+# its roofline term is HBM traffic / bandwidth; the table reports measured
+# throughput against that bound per batch width — the knee shows the batch
+# size where launch overhead stops dominating (why BlockStore batches
+# hashes instead of hashing per block).
+
+
+def blockhash_table(batches=(1, 4, 16, 64, 256), block_bytes: int = 4096,
+                    reps: int = 5) -> List[Dict]:
+    import numpy as np
+
+    from repro.kernels.blockhash.ops import checksum_batch
+
+    rng = np.random.default_rng(0)
+    rows = []
+    for n in batches:
+        blocks = [rng.integers(0, 256, block_bytes, dtype=np.uint8).tobytes()
+                  for _ in range(n)]
+        checksum_batch(blocks)  # warm-up: jit/trace outside the clock
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            checksum_batch(blocks)
+        wall = (time.perf_counter() - t0) / reps
+        moved = n * (block_bytes + 4)  # block in, u32 digest out
+        memory_s = moved / HBM_BW
+        rows.append({
+            "bench": "blockhash", "batch": n, "block_bytes": block_bytes,
+            "wall_s": wall, "blocks_per_s": n / wall,
+            "gb_per_s": moved / wall / 1e9,
+            "memory_s": memory_s,
+            "roofline_fraction": memory_s / wall,
+        })
+    return rows
+
+
+def blockhash_main(out_json: str = "results/blockhash_roofline.json") -> None:
+    rows = blockhash_table()
+    os.makedirs(os.path.dirname(out_json) or ".", exist_ok=True)
+    with open(out_json, "w") as f:
+        json.dump(rows, f, indent=1)
+    print("| batch | blocks/s | GB/s | memory_s | RL-frac |")
+    print("|---|---|---|---|---|")
+    for r in rows:
+        print(f"| {r['batch']} | {r['blocks_per_s']:.0f} | "
+              f"{r['gb_per_s']:.3f} | {r['memory_s']:.2e} | "
+              f"{r['roofline_fraction']:.2e} |")
+
+
 if __name__ == "__main__":
     import sys
-    main(*sys.argv[1:])
+    if "--blockhash" in sys.argv[1:]:
+        blockhash_main(*[a for a in sys.argv[1:] if a != "--blockhash"])
+    else:
+        main(*sys.argv[1:])

@@ -77,6 +77,7 @@ from repro.core.capability import SuperBlockCap
 
 
 class Errno(enum.IntEnum):
+    EPERM = 1   # mutating fs-internal reserved names (the dedup index)
     ENOENT = 2
     EIO = 5
     EEXIST = 17
@@ -178,6 +179,12 @@ class SubmissionEntry:
     kwargs: Optional[Dict[str, Any]] = None  # None == {} (skips an alloc)
     user_data: Any = None
     flags: int = 0
+    # who staged this entry — stamped by the submission queue (SQPOLL
+    # drain) from the registered submitter identity, so provenance records
+    # and dedup index stats attribute work to the real submitter instead
+    # of guessing from the dispatching thread. None: direct/anonymous
+    # submission.
+    submitter: Optional[str] = None
 
 
 @dataclasses.dataclass(slots=True)
@@ -248,7 +255,7 @@ def _resolve_placeholders(entry: "SubmissionEntry",
     if args == entry.args and kwargs == entry.kwargs:
         return entry
     return SubmissionEntry(entry.op, args, kwargs, entry.user_data,
-                           entry.flags)
+                           entry.flags, entry.submitter)
 
 
 def _run_chain(submit_batch, group, chain_begin, chain_end
@@ -474,14 +481,17 @@ class BentoFilesystem(BentoModule):
     # the upgrade path uses it to wrap/unwrap layers onto a live mount.
     inner: Optional["BentoFilesystem"] = None
 
-    def read_provenance(self, since: int = 0) -> List[Dict[str, Any]]:
+    def read_provenance(self, since: int = 0, offset: int = 0,
+                        limit: Optional[int] = None) -> List[Dict[str, Any]]:
         """Query the provenance log (paper §6): plain-value records, each
         carrying at least ``seq``/``op``/``ino``/``parent``/``name``/``ts``,
-        for records with ``seq >= since``. Part of the file-operations API
-        so it crosses every dispatch layer (scalar, batched, FUSE) like any
-        other op; modules without a provenance layer refuse it with
-        ``EINVAL``, the way an unknown ioctl would be."""
-        del since
+        for records with ``seq >= since``. ``offset``/``limit`` paginate
+        within that selection (submission payloads stay bounded however
+        large the log grows). Part of the file-operations API so it crosses
+        every dispatch layer (scalar, batched, FUSE) like any other op;
+        modules without a provenance layer refuse it with ``EINVAL``, the
+        way an unknown ioctl would be."""
+        del since, offset, limit
         raise FsError(Errno.EINVAL, "no provenance layer mounted")
 
     # --- batched boundary ------------------------------------------------------

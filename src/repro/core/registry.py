@@ -269,12 +269,16 @@ class Mount:
                     s.comps = comps
                 self._mq_cv.notify_all()
 
-    def submitter_queue(self, depth: int = 256) -> "SubmitterQueue":
+    def submitter_queue(self, depth: int = 256,
+                        submitter: Optional[str] = None) -> "SubmitterQueue":
         """The calling thread's SubmitterQueue over this mount, created on
-        first use — the per-thread SQ of the multi-submitter design."""
+        first use — the per-thread SQ of the multi-submitter design.
+        ``submitter`` names the identity stamped onto staged entries
+        (first call wins; default ``tid:<owner>``)."""
         q = getattr(self._tls, "sq", None)
         if q is None:
-            q = self._tls.sq = SubmitterQueue(self, depth)
+            q = self._tls.sq = SubmitterQueue(self, depth,
+                                              submitter=submitter)
         return q
 
     # --- dedicated SQPOLL drainer (io_uring IORING_SETUP_SQPOLL analogue) ------
@@ -398,11 +402,17 @@ class BentoQueue:
     the mount underneath is the shared, thread-safe object).
     """
 
-    def __init__(self, mount, depth: int = 256):
+    def __init__(self, mount, depth: int = 256,
+                 submitter: Optional[str] = None):
         if depth <= 0:
             raise ValueError("queue depth must be positive")
         self.mount = mount
         self.depth = depth
+        # the identity stamped onto every staged entry (None: anonymous) —
+        # provenance records and dedup stats attribute work to it instead
+        # of guessing from whichever thread happens to hold the drainer
+        # role when the entry executes
+        self.submitter = submitter
         self._sq: List[SubmissionEntry] = []
         self._cq: Deque[CompletionEntry] = collections.deque()
 
@@ -420,6 +430,8 @@ class BentoQueue:
         """Stage a pre-built entry (callers that assemble entries
         directly, e.g. the PosixView batched forms); same auto-submit and
         chain-deferral rules as ``prep``."""
+        if self.submitter is not None and entry.submitter is None:
+            entry.submitter = self.submitter
         self._sq.append(entry)
         if len(self._sq) >= self.depth and not (entry.flags & SQE_LINK):
             self.submit()
@@ -428,7 +440,13 @@ class BentoQueue:
         """Stage many pre-built entries WITHOUT auto-submitting: the
         caller owns the submit boundary (a batch that must cross the
         boundary whole stages here and calls ``submit`` once)."""
-        self._sq.extend(entries)
+        if self.submitter is None:
+            self._sq.extend(entries)
+            return
+        for e in entries:
+            if e.submitter is None:
+                e.submitter = self.submitter
+            self._sq.append(e)
 
     def submit(self) -> int:
         """Submit everything staged (one gate-crossing); returns the number
@@ -462,9 +480,13 @@ class SubmitterQueue(BentoQueue):
     submitter pushed, pairing with the mount's ``mq_drains`` to show the
     coalescing ratio."""
 
-    def __init__(self, mount, depth: int = 256):
-        super().__init__(mount, depth)
+    def __init__(self, mount, depth: int = 256,
+                 submitter: Optional[str] = None):
         self.owner_tid = threading.get_ident()
+        # default identity: the OWNING thread, fixed at construction — the
+        # real submitter even when another thread's drain executes the work
+        super().__init__(mount, depth,
+                         submitter or f"tid:{self.owner_tid}")
         self.submits = 0
         self.entries_submitted = 0
 

@@ -74,14 +74,16 @@ class KernelServices:
     def sb_bread(self, sb: SuperBlockCap, blockno: int) -> BufferHead:
         return self._cache_of(sb).bread(blockno)
 
-    def sb_bread_many(self, sb: SuperBlockCap, blocknos) -> List[BufferHead]:
+    def sb_bread_many(self, sb: SuperBlockCap, blocknos,
+                      fetched=None) -> List[BufferHead]:
         """Batched sb_bread: one cache pass for a whole submission batch.
         Heads come back in request order; each must still be released
-        (brelse / context exit) — ownership rules are per-buffer."""
+        (brelse / context exit) — ownership rules are per-buffer.
+        ``fetched`` collects device-fetched blocknos for verified reads."""
         blocknos = list(blocknos)
         self.counters["bread_many_calls"] += 1
         self.counters["bread_many_blocks"] += len(blocknos)
-        return self._cache_of(sb).bread_many(blocknos)
+        return self._cache_of(sb).bread_many(blocknos, fetched=fetched)
 
     def sb_getblk_zero(self, sb: SuperBlockCap, blockno: int) -> BufferHead:
         return self._cache_of(sb).getblk_zero(blockno)

@@ -58,9 +58,8 @@ class BlockDevice:
     fail_torn_bytes: int = -1    # >= 0: the DYING write lands this many
     #   bytes before power dies (a torn block — what a real power cut does
     #   to an in-flight sector transfer; the journal's per-block checksums
-    #   must catch it at recovery). Only backends that pass a torn_writer
-    #   to _maybe_fail honour it; MemBlockDevice keeps clean all-or-nothing
-    #   block loss.
+    #   must catch it at recovery). Backends that pass a torn_writer to
+    #   _maybe_fail honour it (MemBlockDevice and FileBlockDevice both do).
     _writes_seen: int = 0
 
     def _maybe_fail(self, torn_writer: Optional[Callable[[int], None]]
@@ -97,7 +96,14 @@ class MemBlockDevice(BlockDevice):
     def write_block(self, blockno: int, data: bytes) -> None:
         self._check(blockno, data)
         with self._lock:
-            self._maybe_fail()
+
+            def torn(nbytes: int) -> None:
+                # the dying write lands a prefix of the block — what a real
+                # power cut does to an in-flight sector transfer
+                self._data[blockno, :nbytes] = np.frombuffer(
+                    data[:nbytes], dtype=np.uint8)
+
+            self._maybe_fail(torn)
             self.writes += 1
             self._data[blockno] = np.frombuffer(data, dtype=np.uint8)
 

@@ -96,12 +96,16 @@ class BufferCache:
             self._refs[blockno] += 1
             return BufferHead(blockno, buf, self)
 
-    def bread_many(self, blocknos) -> List[BufferHead]:
+    def bread_many(self, blocknos, fetched=None) -> List[BufferHead]:
         """Read many blocks under ONE lock acquisition (the batched-boundary
         analogue of plugging a bio list): same semantics as bread per block,
         heads returned in the order requested. All-or-nothing: a device
         error mid-batch releases the refs already taken before re-raising,
-        so a failed bulk read can never strand pinned buffers."""
+        so a failed bulk read can never strand pinned buffers.
+
+        ``fetched`` (optional list) collects the blocknos that actually hit
+        the DEVICE this call — the verified-read path (repro.fs.blockstore)
+        re-hashes exactly those, never cache hits it already vouched for."""
         out: List[BufferHead] = []
         with self._lock:
             try:
@@ -111,6 +115,8 @@ class BufferCache:
                         self.misses += 1
                         buf = bytearray(self.dev.read_block(blockno))
                         self._insert(blockno, buf)
+                        if fetched is not None:
+                            fetched.append(blockno)
                     else:
                         self.hits += 1
                         self._blocks.move_to_end(blockno)

@@ -540,6 +540,137 @@ def torture_prov_chain(kind: str = "xv6", *, quick: bool = False) -> int:
     return sim.sweep(chain_workload(payload), invariant, quick=quick)
 
 
+# --- dedup-index torture: the content-addressed plane must stay exact ------------
+
+
+def _dedup_factory(kind: str):
+    from repro.fs.ext4like import Ext4LikeFileSystem
+    from repro.fs.xv6 import Xv6FileSystem, Xv6Options
+
+    return {
+        "xv6": lambda: Xv6FileSystem(Xv6Options(dedup=True)),
+        "ext4like": lambda: Ext4LikeFileSystem(Xv6Options(dedup=True)),
+    }[kind]
+
+
+def _dedup_audit(rec: Recovered) -> None:
+    """The refcount-exact audit. Walk EVERY inode on the recovered image
+    and rebuild, from the metadata alone, the per-block reference map the
+    dedup index claims to maintain; then require exact agreement:
+
+    * index == walk, block for block and count for count — a stale entry,
+      a missed decrement, or a lost CoW break all fail;
+    * bitmap == reachability — every allocated data block is reachable
+      from some inode (no leaks) and every reachable block is allocated
+      (no double-frees), shared blocks counted once;
+    * every VALID index hash matches its block's recomputed checksum — a
+      hash that survived a crash it shouldn't have fails here.
+
+    Because index records journal in the same transaction as the write
+    that caused them, all three must hold at every crash point."""
+    import repro.fs.layout as L
+
+    fs, store, geo = rec.fs, rec.fs._blockstore, rec.fs.geo
+    refs: dict = {}      # data block -> walked reference count (files only)
+    reachable: set = set()
+    for ino in range(1, geo.ninodes):
+        di = fs._iget(ino)
+        if di.type not in (L.T_FILE, L.T_DIR):
+            continue
+        counted = di.type == L.T_FILE and ino != store.table_ino
+        cache: dict = {}
+        for bn in range((di.size + L.BSIZE - 1) // L.BSIZE):
+            b = fs._bmap_ro(di, bn, cache)
+            if b == 0:
+                continue
+            reachable.add(b)
+            if counted:
+                refs[b] = refs.get(b, 0) + 1
+        l1, l2 = di.addrs[L.NDIRECT], di.addrs[L.NDIRECT + 1]
+        if l1:
+            reachable.add(l1)
+        if l2:
+            reachable.add(l2)
+            with fs._bread(l2) as bh:
+                raw = bytes(bh.data())
+            for k in range(L.NINDIRECT):
+                p = int.from_bytes(raw[4 * k: 4 * k + 4], "little")
+                if p:
+                    reachable.add(p)
+
+    idx = {b: rc for b, rc in store.refcnt.items() if rc > 0}
+    if idx != refs:
+        only_i = {b: idx[b] for b in set(idx) - set(refs)}
+        only_w = {b: refs[b] for b in set(refs) - set(idx)}
+        diff = {b: (idx[b], refs[b]) for b in set(idx) & set(refs)
+                if idx[b] != refs[b]}
+        raise AssertionError(
+            f"dedup index not refcount-exact: index-only={only_i} "
+            f"walk-only={only_w} count-mismatch={diff}")
+
+    bits_per = L.BSIZE * 8
+    allocated = set()
+    for bm in range(geo.bmapstart, geo.datastart):
+        with fs._bread(bm) as bh:
+            raw = bytes(bh.data())
+        base = (bm - geo.bmapstart) * bits_per
+        for byte_i, byte in enumerate(raw):
+            if not byte:
+                continue
+            for bit in range(8):
+                if byte >> bit & 1:
+                    b = base + byte_i * 8 + bit
+                    if geo.datastart <= b < geo.size:
+                        allocated.add(b)
+    leaked = allocated - reachable
+    dangling = reachable - allocated
+    assert not leaked, \
+        f"block leak (allocated, unreachable): {sorted(leaked)[:8]}"
+    assert not dangling, \
+        f"double-free (reachable, not allocated): {sorted(dangling)[:8]}"
+
+    hashed = sorted(store.hashval)
+    if hashed:
+        contents = []
+        for b in hashed:
+            with fs._bread(b) as bh:
+                contents.append(bytes(bh.data()))
+        for b, h in zip(hashed, fs.ks.checksum_batch(contents)):
+            assert store.refcnt.get(b, 0) > 0, \
+                f"valid hash on unreferenced block {b}"
+            assert h == store.hashval[b], f"stale hash on block {b}"
+    rec.view.statfs()
+    rec.view.listdir("/")
+
+
+def torture_dedup(kind: str = "xv6", *, quick: bool = False) -> int:
+    """Sweep a dup-heavy write → CoW overwrite → unlink sequence on a
+    dedup mount and run the refcount-exact audit (``_dedup_audit``) after
+    power loss at every device write. The workload crosses every index
+    transition: fresh tracking, sharing (dedup hit), a copy-on-write
+    break of a shared block, and reference release down to a physical
+    free — each staged in the same journal transaction as its cause, so
+    the recovered index can never drift from the recovered metadata."""
+    D, U = b"D" * 4096, b"u" * 4096
+
+    def setup(ctx: CrashCtx) -> None:
+        ctx.view.write_file("/base", D * 2)  # durable dup source
+
+    def workload(ctx: CrashCtx) -> None:
+        v = ctx.view
+        v.write_file("/c1", D * 2)       # full dup: shares with /base
+        v.fsync("/c1")
+        v.write_file("/c2", D + U)       # half dup, half unique
+        v.fsync("/c2")
+        v.write_file("/c1", b"X" * 4096, off=0, create=False)  # CoW break
+        v.fsync("/c1")
+        v.unlink("/c2")                  # shared ref drops, unique frees
+        v.fsync("/base")
+
+    sim = CrashSim(_dedup_factory(kind))
+    return sim.sweep(workload, _dedup_audit, setup=setup, quick=quick)
+
+
 def main() -> None:
     import argparse
 
@@ -555,6 +686,9 @@ def main() -> None:
     ap.add_argument("--torn-bytes", type=int, default=-1,
                     help="with --fuse: tear the dying write after this "
                          "many bytes instead of losing it whole")
+    ap.add_argument("--dedup", action="store_true",
+                    help="also torture the content-addressed dedup plane "
+                         "(refcount-exact index audit at every point)")
     args = ap.parse_args()
     kinds = ["xv6", "ext4like"] if args.kind == "both" else [args.kind]
     mode = "quick subset" if args.quick else "exhaustive"
@@ -572,6 +706,10 @@ def main() -> None:
         n = torture_prov_chain(kind, quick=args.quick)
         print(f"crashsim {kind}: chain txn spans data + provenance records "
               f"at {n} crash points ({mode}) — OK")
+        if args.dedup:
+            n = torture_dedup(kind, quick=args.quick)
+            print(f"crashsim {kind}: dedup index refcount-exact (+no "
+                  f"leaks, hashes fresh) at {n} crash points ({mode}) — OK")
     if args.fuse:
         n = torture_fuse(quick=True, torn_bytes=args.torn_bytes)
         torn = (f", torn at {args.torn_bytes}B" if args.torn_bytes >= 0

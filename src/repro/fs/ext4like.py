@@ -110,8 +110,8 @@ class Ext4LikeFileSystem(Xv6FileSystem):
             pos, n = off, len(data)
             written = 0
             # data blocks per journal reservation (metadata budget shared
-            # with the chain estimator)
-            per_sub = MAXOP_BLOCKS - self._CHAIN_WRITE_OVERHEAD
+            # with the chain estimator; dedup widens it)
+            per_sub = max(MAXOP_BLOCKS - self._chain_write_overhead, 4)
             while written < n:
                 self._begin_op()
                 # extent-preallocate this sub-op's missing blocks as one run
@@ -132,7 +132,7 @@ class Ext4LikeFileSystem(Xv6FileSystem):
                 while written < n and sub_blocks < per_sub:
                     bn, boff = divmod(pos, L.BSIZE)
                     chunk = min(L.BSIZE - boff, n - written)
-                    b = self._bmap(ino, di, bn, alloc=True)
+                    b = self._write_block_target(ino, di, bn)
                     if boff == 0 and chunk == L.BSIZE:
                         self._log(b, bytes(data[written: written + chunk]))
                     else:
@@ -146,37 +146,14 @@ class Ext4LikeFileSystem(Xv6FileSystem):
                 if pos > di.size:
                     di.size = pos
                     self._iupdate(ino, di)
+            store = self._blockstore
+            if store is not None and store.batch_depth == 0:
+                store.flush_pending()  # scalar write: dedup in this txn
             self._end_op(True)
             return written
 
-    def _bmap_install(self, ino: int, di: L.DiskInode, bn: int, blk: int) -> None:
-        """Point logical block bn at preallocated device block blk."""
-        import struct
-        NI = L.NINDIRECT
-        if bn < L.NDIRECT:
-            di.addrs[bn] = blk
-            self._iupdate(ino, di)
-            return
-        bnn = bn - L.NDIRECT
-        if bnn < NI:
-            if di.addrs[L.NDIRECT] == 0:
-                di.addrs[L.NDIRECT] = self._balloc()
-                self._iupdate(ino, di)
-            self._ind_set(di.addrs[L.NDIRECT], bnn, blk)
-            return
-        bnn -= NI
-        if di.addrs[L.NDIRECT + 1] == 0:
-            di.addrs[L.NDIRECT + 1] = self._balloc()
-            self._iupdate(ino, di)
-        l2 = self._ind_entry(di.addrs[L.NDIRECT + 1], bnn // NI, alloc=True)
-        self._ind_set(l2, bnn % NI, blk)
-
-    def _ind_set(self, indblock: int, idx: int, val: int) -> None:
-        import struct
-        with self._bread(indblock) as bh:
-            buf = bh.data()
-            struct.pack_into("<I", buf, idx * 4, val)
-            self._log(indblock, bytes(buf))
+    # _bmap_install/_ind_set moved to Xv6FileSystem: the blockstore's CoW
+    # remapping shares them with extent preallocation.
 
     # --- directory hash index ---------------------------------------------------------------
     def _index(self, dino: int, di: L.DiskInode) -> Dict[str, Tuple[int, int, int]]:
@@ -272,7 +249,18 @@ class Ext4LikeFileSystem(Xv6FileSystem):
         of this class's full-block append coalescing). If a merged run
         fails (e.g. ENOSPC partway), it is retried entry by entry so each
         entry still gets its own result — per-entry errno isolation holds
-        even through the fast path."""
+        even through the fast path. Dedup mounts share one batch-end
+        dedup pass across the whole call."""
+        store = self._blockstore
+        if store is not None:
+            store.batch_begin()
+        try:
+            return self._write_many_runs(reqs)
+        finally:
+            if store is not None:
+                self._dedup_batch_end()
+
+    def _write_many_runs(self, reqs) -> List:
         out: List = []
         with self._oplock:
             i, n = 0, len(reqs)
@@ -333,4 +321,4 @@ class Ext4LikeFileSystem(Xv6FileSystem):
         # a lazily-rebuilt cache: an upgrade FROM plain xv6 (which never
         # emits it) legally starts with an empty index — declaring it
         # optional keeps the schema honest without forcing a migrate hook
-        return ("dirindex",)
+        return super().optional_state_keys() + ("dirindex",)

@@ -81,13 +81,19 @@ def _make_fs(fs_kind: str, opts):
     """Module factory for the daemon's mount matrix. ``prov-<kind>``
     wraps the base fs in the provenance layer at mount time (the
     re-mount/crash-recovery path; live swaps go through the ``wrap_prov``
-    ctl instead)."""
+    ctl instead); ``dedup-<kind>`` enables the content-addressed
+    blockstore (prefixes compose: ``prov-dedup-xv6``)."""
+    import dataclasses as _dc
+
     from repro.fs.ext4like import Ext4LikeFileSystem
     from repro.fs.prov import ProvFilesystem
     from repro.fs.xv6 import Xv6FileSystem
 
     base_kind = fs_kind[len("prov-"):] if fs_kind.startswith("prov-") \
         else fs_kind
+    if base_kind.startswith("dedup-"):
+        base_kind = base_kind[len("dedup-"):]
+        opts = _dc.replace(opts, dedup=True)
     fs = (Ext4LikeFileSystem(opts) if base_kind == "ext4like"
           else Xv6FileSystem(opts))
     return ProvFilesystem(fs) if fs_kind.startswith("prov-") else fs

@@ -91,6 +91,12 @@ class Journal:
         self.chains = 0          # chain reservations taken
         self.chain_precommits = 0  # commits forced to make room for a chain
 
+    @property
+    def room(self) -> int:
+        """Blocks the open transaction can still absorb — the blockstore's
+        dedup pass bounds its per-transaction staging with this."""
+        return self.capacity - len(self._pending)
+
     # --- write path ---------------------------------------------------------------
     def log_write(self, blockno: int, data: bytes) -> None:
         """Stage a block into the current transaction (absorbs duplicates).

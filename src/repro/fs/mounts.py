@@ -60,6 +60,7 @@ class MountedFs:
     mount: Any
     view: PosixView
     services: Any = None
+    dev: Any = None  # the backing device (in-process kinds; fault injection)
 
     def close(self) -> None:
         self.mount.unmount()
@@ -74,22 +75,30 @@ def make_mount(kind: str, n_blocks: int = 16384, *,
     FUSE crash-torture path (repro.fs.crashsim.FuseCrashSim).
     ``prov=True`` mounts the module wrapped in the provenance layer from
     the start (the torture/benchmark baseline; the live-swap path goes
-    through ``repro.core.upgrade.wrap_layer`` instead)."""
+    through ``repro.core.upgrade.wrap_layer`` instead).
+
+    ``dedup-bento`` / ``dedup-ext4like`` mount the same modules with the
+    content-addressed blockstore enabled (repro.fs.blockstore) — plain
+    kinds stay bit-identical to the pre-blockstore format."""
     def _wrap(fs):
         if not prov:
             return fs
         from repro.fs.prov import ProvFilesystem
         return ProvFilesystem(fs)
 
-    if kind == "bento":
+    dedup = kind.startswith("dedup-")
+    base_kind = kind[len("dedup-"):] if dedup else kind
+
+    if base_kind == "bento":
         dev = MemBlockDevice(n_blocks)
         ks = kernel_binding(dev)
         mkfs(ks)
         fs = _wrap(Xv6FileSystem(Xv6Options(group_commit=True,
-                                            batched_install=True)))
+                                            batched_install=True,
+                                            dedup=dedup)))
         m = bento_mount("xv6", ks, module=fs)
-        return MountedFs(kind, m, PosixView(m), ks)
-    if kind == "vfs":
+        return MountedFs(kind, m, PosixView(m), ks, dev)
+    if base_kind == "vfs" and not dedup:
         dev = MemBlockDevice(n_blocks)
         ks = kernel_binding(dev, writeback="through")
         mkfs(ks)
@@ -97,20 +106,23 @@ def make_mount(kind: str, n_blocks: int = 16384, *,
                                             batched_install=False)))
         fs.init(ks.superblock(), ks)
         m = DirectMount(fs)
-        return MountedFs(kind, m, PosixView(m), ks)
-    if kind == "fuse":
+        return MountedFs(kind, m, PosixView(m), ks, dev)
+    if base_kind == "fuse" and not dedup:
         m = FuseMount(n_blocks=n_blocks,
                       fs_kind="prov-xv6" if prov else "xv6",
                       backing_path=backing_path, reuse=reuse)
         return MountedFs(kind, m, PosixView(m))
-    if kind == "ext4like":
+    if base_kind == "ext4like":
         dev = MemBlockDevice(n_blocks)
         ks = kernel_binding(dev)
         mkfs(ks)
-        fs = _wrap(Ext4LikeFileSystem())
+        opts = Xv6Options(group_commit=True, batched_install=True,
+                          dedup=dedup)
+        fs = _wrap(Ext4LikeFileSystem(opts))
         m = bento_mount("ext4like", ks, module=fs)
-        return MountedFs(kind, m, PosixView(m), ks)
+        return MountedFs(kind, m, PosixView(m), ks, dev)
     raise KeyError(kind)
 
 
 ALL_KINDS = ("bento", "vfs", "fuse", "ext4like")
+DEDUP_KINDS = ("dedup-bento", "dedup-ext4like")

@@ -191,12 +191,16 @@ class PosixView:
     def statfs(self) -> Dict[str, int]:
         return self.m.statfs()
 
-    def read_provenance(self, since: int = 0) -> List[Dict]:
+    def read_provenance(self, since: int = 0, offset: int = 0,
+                        limit: Optional[int] = None) -> List[Dict]:
         """Query the mounted provenance layer (paper §6): plain-value
         records for every mutation with ``seq >= since``, in execution
-        order. Raises ``FsError(EINVAL)`` when no provenance layer is
-        mounted — feature-probe with a try/except, like an ioctl."""
-        return self.m.read_provenance(since)
+        order. ``offset``/``limit`` paginate within that selection (the
+        whole triple rides the submission payload, so batched and FUSE
+        dispatch paginate identically). Raises ``FsError(EINVAL)`` when no
+        provenance layer is mounted — feature-probe with a try/except,
+        like an ioctl."""
+        return self.m.read_provenance(since, offset, limit)
 
     # --- batched API (one boundary crossing per batch) ----------------------------
     @staticmethod

@@ -74,6 +74,9 @@ from repro.core.interface import (Attr, BentoFilesystem, CompletionEntry,
 # Reserved root name of the on-device log. Hidden by the layer; visible as
 # an ordinary file if the image is mounted plain (documented, harmless).
 PROV_LOG_NAME = ".bento-prov"
+# Rotation scratch file: the compacted log is built here, then atomically
+# swapped over PROV_LOG_NAME via rename-overwrite (old-XOR-new retention).
+PROV_LOG_TMP = ".bento-prov.new"
 
 # Ops that mutate state and therefore earn a record.
 PROV_MUTATING_OPS = frozenset({
@@ -89,6 +92,11 @@ class ProvFilesystem(BentoFilesystem):
     NAME = "prov"
     VERSION = 1
 
+    # Rotation threshold: once the log exceeds this many bytes, _append
+    # compacts it to the newest half of its records (0 disables). Long
+    # torture runs otherwise grow the log without bound.
+    ROTATE_BYTES = 256 * 1024
+
     def __init__(self, inner: BentoFilesystem):
         self.inner = inner
         self.ks = None
@@ -98,8 +106,13 @@ class ProvFilesystem(BentoFilesystem):
         # appends so incremental queries read only the log's suffix; None
         # until the first full scan (or after a dropped append resync)
         self._line_index: Optional[List[int]] = None
+        # seq of the log's first retained line (> 0 after a rotation
+        # dropped history; recovered from the head marker line on rescan)
+        self._seq_base = 0
+        self.rotate_bytes = self.ROTATE_BYTES
         self._plock = threading.RLock()  # serializes append/size bookkeeping
-        self.prov_stats = {"records": 0, "append_errors": 0, "appends": 0}
+        self.prov_stats = {"records": 0, "append_errors": 0, "appends": 0,
+                           "rotations": 0, "rotate_errors": 0}
 
     # the benchmark/torture tooling reaches for module.journal / .opts —
     # keep those windows open through the layer
@@ -144,6 +157,8 @@ class ProvFilesystem(BentoFilesystem):
     def extract_state(self) -> Dict:
         st = dict(self.inner.extract_state())
         st["prov"] = {"log_ino": self._log_ino, "log_size": self._log_size,
+                      "seq_base": self._seq_base,
+                      "rotate_bytes": self.rotate_bytes,
                       "stats": dict(self.prov_stats)}
         return st
 
@@ -154,6 +169,8 @@ class ProvFilesystem(BentoFilesystem):
         if p:  # prov -> prov upgrade: carry the layer's own state
             self._log_ino = int(p.get("log_ino", 0))
             self._log_size = int(p.get("log_size", 0))
+            self._seq_base = int(p.get("seq_base", 0))
+            self.rotate_bytes = int(p.get("rotate_bytes", self.ROTATE_BYTES))
             self.prov_stats.update(p.get("stats", {}))
         else:  # plain -> prov wrap: bootstrap from the device
             self._discover_log()
@@ -168,9 +185,17 @@ class ProvFilesystem(BentoFilesystem):
 
     # --- the record pipeline -----------------------------------------------------
     def _rec(self, op: str, *, ino: int = 0, parent: int = 0, name: str = "",
-             **extra) -> Dict[str, Any]:
+             sub: Optional[str] = None, **extra) -> Dict[str, Any]:
+        # submitter precedence: the entry's declared identity (SQPOLL-style
+        # queues stamp it), else the run identity the inner fs is currently
+        # draining for, else the executing thread — a guess, but an honest
+        # one, and the only option for direct scalar calls
+        if sub is None:
+            sub = getattr(self.inner, "_current_submitter", None)
+        if sub is None:
+            sub = f"tid:{threading.get_ident()}"
         r = {"op": op, "ino": ino, "parent": parent, "name": name,
-             "pid": os.getpid(), "submitter": threading.get_ident(),
+             "pid": os.getpid(), "submitter": sub,
              "ts": self.ks.time() if self.ks is not None else 0.0}
         r.update(extra)
         return r
@@ -215,6 +240,7 @@ class ProvFilesystem(BentoFilesystem):
                 self._log_size += len(data)
                 self.prov_stats["records"] += len(records)
                 self.prov_stats["appends"] += 1
+                self._maybe_rotate()
             except FsError as e:
                 self.prov_stats["append_errors"] += 1
                 self._line_index = None  # torn tail: rebuild on next read
@@ -225,6 +251,53 @@ class ProvFilesystem(BentoFilesystem):
                         pass
                 if self.ks is not None:
                     self.ks.log_warn(f"prov: record append dropped: {e}")
+
+    def _maybe_rotate(self) -> None:
+        """Compact the log once it exceeds ``rotate_bytes``: keep the newest
+        half of its records behind a ``_rotate`` marker line carrying the
+        first kept record's absolute seq, so sequence numbers stay monotonic
+        across rotations. The compacted log is built at a scratch name and
+        swapped in with rename-overwrite — ONE journal transaction replaces
+        old with new, so a crash mid-rotation leaves either the full old
+        log or the compacted one, never a torn mix (old-XOR-new). Skipped
+        inside chain scopes (a rotation is many transactions) and counted
+        in ``prov_stats["rotations"]``. Callers hold oplock + _plock."""
+        j = self.journal
+        if (self.rotate_bytes <= 0 or self._log_size <= self.rotate_bytes
+                or self._log_ino == 0 or (j is not None and j.in_chain)):
+            return
+        if self._line_index is None:
+            self._rescan()
+        idx = self._line_index
+        if idx is None or len(idx) < 2:
+            return
+        keep_from = len(idx) // 2
+        new_base = self._seq_base + keep_from
+        start = idx[keep_from]
+        marker = json.dumps({"op": "_rotate", "base": new_base},
+                            separators=(",", ":")).encode() + b"\n"
+        try:
+            tail = self.inner.read(self._log_ino, start,
+                                   self._log_size - start)
+            try:  # adopt a stray scratch file from a crashed rotation
+                attr = self.inner.lookup(ROOT_INO, PROV_LOG_TMP)
+                self.inner.truncate(attr.ino, 0)
+            except FsError:
+                attr = self.inner.create(ROOT_INO, PROV_LOG_TMP)
+            self.inner.write(attr.ino, 0, marker + tail)
+            # the atomic cutover: displaces (and frees) the old log inode
+            self.inner.rename(ROOT_INO, PROV_LOG_TMP, ROOT_INO,
+                              PROV_LOG_NAME)
+        except FsError as e:
+            self.prov_stats["rotate_errors"] += 1
+            if self.ks is not None:
+                self.ks.log_warn(f"prov: rotation skipped: {e}")
+            return
+        self._log_ino = attr.ino
+        self._log_size = len(marker) + len(tail)
+        self._seq_base = new_base
+        self._line_index = None  # offsets all shifted: rebuild lazily
+        self.prov_stats["rotations"] += 1
 
     def _append_blocks(self, n_records: int) -> int:
         """Journal-blocks upper bound for appending ``n_records`` (the
@@ -277,7 +350,7 @@ class ProvFilesystem(BentoFilesystem):
     # --- namespace guards (the log hides from the tree) ---------------------------
     @staticmethod
     def _guard_name(parent: int, name) -> bool:
-        return parent == ROOT_INO and name == PROV_LOG_NAME
+        return parent == ROOT_INO and name in (PROV_LOG_NAME, PROV_LOG_TMP)
 
     def _guard_entry(self, e: SubmissionEntry) -> Optional[Errno]:
         """Errno for entries that touch the reserved log name (None for the
@@ -316,7 +389,8 @@ class ProvFilesystem(BentoFilesystem):
     def readdir(self, ino: int) -> List[Tuple[str, int, FileKind]]:
         out = self.inner.readdir(ino)
         if ino == ROOT_INO:
-            out = [e for e in out if e[0] != PROV_LOG_NAME]
+            out = [e for e in out
+                   if e[0] not in (PROV_LOG_NAME, PROV_LOG_TMP)]
         return out
 
     def read(self, ino: int, off: int, size: int) -> bytes:
@@ -423,13 +497,15 @@ class ProvFilesystem(BentoFilesystem):
                 # the log-hiding filter must hold on the batched path too
                 ino = e.args[0] if e.args else (e.kwargs or {}).get("ino")
                 if ino == ROOT_INO:
-                    c.result = [t for t in c.result if t[0] != PROV_LOG_NAME]
+                    c.result = [t for t in c.result
+                                if t[0] not in (PROV_LOG_NAME, PROV_LOG_TMP)]
         self._append(recs)
         return comps
 
     def _rec_for_entry(self, e: SubmissionEntry,
                        c: CompletionEntry) -> Dict[str, Any]:
         kw = e.kwargs or {}
+        sub = getattr(e, "submitter", None)  # the entry's declared identity
 
         def arg(i, k, default=0):
             v = e.args[i] if len(e.args) > i else kw.get(k, default)
@@ -437,19 +513,20 @@ class ProvFilesystem(BentoFilesystem):
 
         if e.op in ("create", "mkdir"):
             return self._rec(e.op, ino=c.result.ino, parent=arg(0, "parent"),
-                             name=arg(1, "name", ""))
+                             name=arg(1, "name", ""), sub=sub)
         if e.op in ("unlink", "rmdir"):
             return self._rec(e.op, parent=arg(0, "parent"),
-                             name=arg(1, "name", ""))
+                             name=arg(1, "name", ""), sub=sub)
         if e.op == "rename":
             return self._rec("rename", parent=arg(0, "parent"),
                              name=arg(1, "name", ""),
                              newparent=arg(2, "newparent"),
-                             newname=arg(3, "newname", ""))
+                             newname=arg(3, "newname", ""), sub=sub)
         if e.op == "write":
             return self._rec("write", ino=arg(0, "ino"), off=arg(1, "off"),
-                             len=c.result)
-        return self._rec("truncate", ino=arg(0, "ino"), size=arg(1, "size"))
+                             len=c.result, sub=sub)
+        return self._rec("truncate", ino=arg(0, "ino"), size=arg(1, "size"),
+                         sub=sub)
 
     # --- chain hooks: one txn spans data + provenance --------------------------------
     def chain_begin(self, entries) -> Optional[Errno]:
@@ -463,48 +540,68 @@ class ProvFilesystem(BentoFilesystem):
         self.inner.chain_end()
 
     # --- the query op -----------------------------------------------------------------
-    def read_provenance(self, since: int = 0) -> List[Dict[str, Any]]:
-        """All records with ``seq >= since``, in append (== execution)
-        order. Reads through the journal overlay, so records of not-yet-
-        committed mutations are visible to a live query — durability
-        follows the data's fsync, exactly like the mutations themselves.
-        Incremental queries (``since > 0``) read only the log's SUFFIX via
-        the line-offset index kept current by ``_append``, so a polling
-        consumer pays for new records, not history. Unparseable lines (a
-        dropped append's torn tail) are skipped, never fatal."""
+    def _rescan(self) -> None:
+        """Full-log scan rebuilding the line-offset index and the seq base
+        (a head ``_rotate`` marker, when present, supplies the base and is
+        itself absorbed — never indexed, never returned)."""
+        raw = self.inner.read(self._log_ino, 0, self._log_size)
+        offsets: List[int] = []
+        base = 0
+        pos = 0
+        for i, line in enumerate(raw.split(b"\n")[:-1]):  # complete lines
+            if i == 0:
+                try:
+                    r = json.loads(line)
+                except ValueError:
+                    r = None
+                if isinstance(r, dict) and r.get("op") == "_rotate":
+                    base = int(r.get("base", 0))
+                    pos += len(line) + 1
+                    continue
+            offsets.append(pos)
+            pos += len(line) + 1
+        self._line_index = offsets
+        self._seq_base = base
+
+    def read_provenance(self, since: int = 0, offset: int = 0,
+                        limit: Optional[int] = None) -> List[Dict[str, Any]]:
+        """Records with ``seq >= since`` in append (== execution) order;
+        ``offset`` skips that many records of the selection and ``limit``
+        caps the page size, so a consumer can walk an arbitrarily large log
+        in bounded payloads (``since=last_seq+1`` between polls, or fixed
+        ``since`` with a sliding ``offset``). Reads through the journal
+        overlay, so records of not-yet-committed mutations are visible to a
+        live query — durability follows the data's fsync, exactly like the
+        mutations themselves. The line-offset index (kept current by
+        ``_append``, rebuilt after drops/rotation) turns any page into ONE
+        ranged read of exactly the lines requested. Records dropped by
+        rotation are simply absent: a ``since`` below the retained base
+        returns from the oldest survivor. Unparseable lines (a dropped
+        append's torn tail) are skipped, never fatal."""
+        if offset < 0 or (limit is not None and limit < 0):
+            raise FsError(Errno.EINVAL, "negative offset/limit")
         oplock = getattr(self.inner, "_oplock", None) or contextlib.nullcontext()
         with oplock, self._plock:  # same order as _append: oplock -> plock
             if self._log_ino == 0:
                 self._discover_log()
             if self._log_ino == 0:
                 return []
-            idx = self._line_index
-            if idx is not None and since > 0:
-                if since >= len(idx):
-                    return []
-                start, base = idx[since], since
-                raw = self.inner.read(self._log_ino, start,
-                                      self._log_size - start)
-                rebuild = False
-            else:
-                raw = self.inner.read(self._log_ino, 0, self._log_size)
-                start, base, rebuild = 0, 0, True
+            if self._line_index is None:
+                self._rescan()
+            idx, base = self._line_index, self._seq_base
+            pos = max(since - base, 0) + offset
+            end = len(idx) if limit is None else min(pos + limit, len(idx))
+            if pos >= end:
+                return []
+            start_b = idx[pos]
+            end_b = idx[end] if end < len(idx) else self._log_size
+            raw = self.inner.read(self._log_ino, start_b, end_b - start_b)
             out = []
-            offsets: List[int] = []
-            pos = 0
-            lines = raw.split(b"\n")
-            for i, line in enumerate(lines[:-1]):  # complete lines only
-                offsets.append(start + pos)
-                pos += len(line) + 1
-                seq = base + i
-                if seq < since:
-                    continue
+            for i, line in enumerate(raw.split(b"\n")[:-1]):
                 try:
                     r = json.loads(line)
                 except ValueError:
                     continue
-                r["seq"] = seq
+                r["seq"] = base + pos + i
                 out.append(r)
-            if rebuild:
-                self._line_index = offsets
             return out

@@ -24,6 +24,7 @@ from repro.core.interface import (Attr, BentoFilesystem, CompletionEntry,
                                   Errno, FileKind, FsError, ROOT_INO,
                                   SubmissionEntry)
 from repro.fs import layout as L
+from repro.fs.blockstore import BlockStore, DEDUP_TABLE_NAME
 from repro.fs.journal import Journal, JournalFull
 
 
@@ -35,6 +36,7 @@ class Xv6Options:
     group_commit: bool = True  # False: commit at end of every operation
     batched_install: bool = True  # writepages-style journal install
     commit_threshold: float = 0.75  # commit when journal this full
+    dedup: bool = False  # content-addressed data plane (repro.fs.blockstore)
 
 
 def mkfs(services, ninodes: int = 4096, nlog: int = 64) -> None:
@@ -94,6 +96,12 @@ class Xv6FileSystem(BentoFilesystem):
         self._free_hint = 0
         self._free_inode_hint = 2
         self.stats = {"ops": 0, "commits_forced": 0}
+        self._blockstore: Optional[BlockStore] = None
+        self._current_submitter = None  # stamped per run by submit_batch
+        # dedup widens the per-write metadata footprint (CoW copy block +
+        # index-table blocks) — reservations must cover it
+        self._chain_write_overhead = (self._CHAIN_WRITE_OVERHEAD
+                                      + (3 if options.dedup else 0))
 
     # --- lifecycle -----------------------------------------------------------------
     def init(self, sb: SuperBlockCap, services) -> None:
@@ -109,6 +117,9 @@ class Xv6FileSystem(BentoFilesystem):
         # abort) the in-memory caches may reflect the rolled-back staging
         self.journal.rollback_listener = self._after_journal_rollback
         self.journal.recover()
+        if self.opts.dedup:
+            self._blockstore = BlockStore(self)
+            self._blockstore.attach()
 
     def destroy(self) -> None:
         if self.journal:
@@ -118,8 +129,9 @@ class Xv6FileSystem(BentoFilesystem):
 
     # --- §4.8 state transfer ------------------------------------------------------------
     def extract_state(self) -> Dict:
+        self._dedup_drain()  # settle the index before quiescing
         self.flush()  # quiesced by the runtime; drain to a clean point
-        return {
+        state = {
             "icache": {ino: dataclasses.asdict(di)
                        for ino, di in self._icache.items()},
             "free_hint": self._free_hint,
@@ -127,6 +139,9 @@ class Xv6FileSystem(BentoFilesystem):
             "journal": self.journal.extract_state(),
             "stats": dict(self.stats),
         }
+        if self._blockstore is not None:
+            state["dedup"] = self._blockstore.extract_state()
+        return state
 
     def restore_state(self, state: Dict, from_version: int) -> None:
         self._icache = {int(k): L.DiskInode(**v)
@@ -135,9 +150,17 @@ class Xv6FileSystem(BentoFilesystem):
         self._free_inode_hint = state.get("free_inode_hint", 2)
         self.journal.restore_state(state.get("journal", {}))
         self.stats.update(state.get("stats", {}))
+        if self._blockstore is not None and "dedup" in state:
+            self._blockstore.restore_state(state["dedup"])
 
     def state_schema(self) -> Tuple[str, ...]:
-        return ("icache", "free_hint", "free_inode_hint", "journal", "stats")
+        base = ("icache", "free_hint", "free_inode_hint", "journal", "stats")
+        return base + ("dedup",) if self.opts.dedup else base
+
+    def optional_state_keys(self) -> Tuple[str, ...]:
+        # a dedup mount can absorb state from a plain predecessor (the
+        # index reloads from the device) and vice versa
+        return ("dedup",)
 
     # --- journal-aware block IO -----------------------------------------------------------
     def _bread(self, blockno: int):
@@ -210,7 +233,7 @@ class Xv6FileSystem(BentoFilesystem):
                 return MAXOP_BLOCKS  # PrevResult/malformed payload: worst case
             start = off % L.BSIZE if isinstance(off, int) else 0
             nblocks = (start + len(data) + L.BSIZE - 1) // L.BSIZE
-            return nblocks + self._CHAIN_WRITE_OVERHEAD
+            return nblocks + self._chain_write_overhead
         return self._CHAIN_OP_BLOCKS.get(e.op, MAXOP_BLOCKS)
 
     def estimate_chain_blocks(self, entries) -> int:
@@ -224,7 +247,7 @@ class Xv6FileSystem(BentoFilesystem):
         a reservation. Data blocks (+1 for a straddled boundary) plus this
         fs's per-write metadata overhead; subclasses with costlier write
         paths inherit their own ``_CHAIN_WRITE_OVERHEAD``."""
-        return (nbytes + L.BSIZE - 1) // L.BSIZE + 1 + self._CHAIN_WRITE_OVERHEAD
+        return (nbytes + L.BSIZE - 1) // L.BSIZE + 1 + self._chain_write_overhead
 
     def chain_begin(self, entries, extra_blocks: int = 0):
         """Reserve ONE journal transaction for a whole chain group.
@@ -245,10 +268,17 @@ class Xv6FileSystem(BentoFilesystem):
             # release here or the fs lock leaks
             self._oplock.release()
             raise
+        if self._blockstore is not None:
+            self._blockstore.batch_begin()
         return None
 
     def chain_end(self) -> None:
         try:
+            store = self._blockstore
+            if store is not None and store.batch_dec() == 0:
+                # dedup pass INSIDE the chain transaction: sharing rewrites
+                # commit atomically with the writes that produced them
+                store.flush_pending()
             self.journal.end_chain()  # runs any deferred (in-chain) commit
         finally:
             self._oplock.release()
@@ -309,7 +339,8 @@ class Xv6FileSystem(BentoFilesystem):
                         return b
             raise FsError(Errno.ENOSPC, "device full")
 
-    def _bfree(self, b: int) -> None:
+    def _bfree_raw(self, b: int) -> None:
+        """Clear the bitmap bit — the physical free, no refcounting."""
         with self._alloc_lock:
             bits_per = L.BSIZE * 8
             bmblock = self.geo.bmapstart + b // bits_per
@@ -319,6 +350,14 @@ class Xv6FileSystem(BentoFilesystem):
                 buf[bit // 8] &= ~(1 << (bit % 8))
                 self._log(bmblock, bytes(buf))
             self._free_hint = min(self._free_hint, b)
+
+    def _bfree(self, b: int) -> None:
+        """Drop a reference to ``b``. On dedup mounts a shared block just
+        loses one index reference (staged in this op's transaction); the
+        bitmap bit clears only with the LAST reference."""
+        if self._blockstore is not None and not self._blockstore.release(b):
+            return
+        self._bfree_raw(b)
 
     # --- bmap: logical file block -> device block ----------------------------------------------
     def _bmap(self, ino: int, di: L.DiskInode, bn: int, alloc: bool) -> int:
@@ -373,6 +412,48 @@ class Xv6FileSystem(BentoFilesystem):
                 self._log(indblock, bytes(buf))
         return val
 
+    def _bmap_install(self, ino: int, di: L.DiskInode, bn: int, blk: int) -> None:
+        """Point logical block bn at device block blk (journaled) — extent
+        preallocation (ext4like) and the blockstore's CoW remapping both
+        rewrite existing mappings through this."""
+        import struct
+        NI = L.NINDIRECT
+        if bn < L.NDIRECT:
+            di.addrs[bn] = blk
+            self._iupdate(ino, di)
+            return
+        bnn = bn - L.NDIRECT
+        if bnn < NI:
+            if di.addrs[L.NDIRECT] == 0:
+                di.addrs[L.NDIRECT] = self._balloc()
+                self._iupdate(ino, di)
+            self._ind_set(di.addrs[L.NDIRECT], bnn, blk)
+            return
+        bnn -= NI
+        if di.addrs[L.NDIRECT + 1] == 0:
+            di.addrs[L.NDIRECT + 1] = self._balloc()
+            self._iupdate(ino, di)
+        l2 = self._ind_entry(di.addrs[L.NDIRECT + 1], bnn // NI, alloc=True)
+        self._ind_set(l2, bnn % NI, blk)
+
+    def _ind_set(self, indblock: int, idx: int, val: int) -> None:
+        import struct
+        with self._bread(indblock) as bh:
+            buf = bh.data()
+            struct.pack_into("<I", buf, idx * 4, val)
+            self._log(indblock, bytes(buf))
+
+    def _write_block_target(self, ino: int, di: L.DiskInode, bn: int) -> int:
+        """Resolve (and allocate) the device block a data write must land
+        on. On dedup mounts the blockstore interposes: a shared block is
+        CoW-broken to a private copy first, the stored hash is invalidated
+        in this same transaction, and the block queues for the batch-end
+        dedup pass."""
+        b = self._bmap(ino, di, bn, alloc=True)
+        if self._blockstore is not None and di.type == L.T_FILE:
+            b = self._blockstore.note_write(ino, di, bn, b)
+        return b
+
     # --- batched boundary: vectorized fast paths ------------------------------------------------
     #
     # One submission batch = one fs-lock acquisition, one journal-overlay
@@ -395,6 +476,16 @@ class Xv6FileSystem(BentoFilesystem):
     def submit_batch(self, entries) -> List[CompletionEntry]:
         if not isinstance(entries, list):
             entries = list(entries)
+        store = self._blockstore
+        if store is not None:
+            store.batch_begin()
+        try:
+            return self._submit_batch_scoped(entries)
+        finally:
+            if store is not None:
+                self._dedup_batch_end()
+
+    def _submit_batch_scoped(self, entries) -> List[CompletionEntry]:
         if self.journal is not None and self.journal.in_chain_here \
                 and any(e.op in self._CHAIN_MUTATING_OPS for e in entries):
             # chain-member dispatch on the chain-owning thread
@@ -422,36 +513,74 @@ class Xv6FileSystem(BentoFilesystem):
         Subclasses layer their derived indexes in ``_invalidate_caches_
         after_abort``."""
         self._icache.clear()
+        if self._blockstore is not None and self._blockstore._table_blocks:
+            # refcounts/hashes staged by the rolled-back transaction are
+            # gone from the journal overlay: rebuild from what survived
+            self._blockstore.reload()
         self._invalidate_caches_after_abort()
 
     def _invalidate_caches_after_abort(self) -> None:
         """Subclass hook: drop derived in-memory state after a journal
         rollback (see ext4like's directory index)."""
 
+    def _dedup_batch_end(self) -> None:
+        """Close one batch scope; at depth zero, run the deferred dedup
+        pass — in the open chain transaction if one is active, else in a
+        trailing reservation of its own."""
+        store = self._blockstore
+        if store.batch_dec() != 0 or not store.pending:
+            return
+        with self._oplock:
+            if self.journal.in_chain:
+                store.flush_pending()
+            else:
+                self._begin_op()
+                store.flush_pending()
+                self._end_op(True)
+
+    def _dedup_drain(self) -> None:
+        """Settle any still-pending dedup work (quiesce/extract path)."""
+        store = self._blockstore
+        if store is None or not store.pending:
+            return
+        with self._oplock:
+            if not self.journal.in_chain:
+                self._begin_op()
+                store.flush_pending()
+                self._end_op(True)
+
     def _submit_batch_runs(self, entries) -> List[CompletionEntry]:
         comps: List[CompletionEntry] = []
         i, n = 0, len(entries)
-        while i < n:
-            # keyword-style entries keep scalar dispatch (the *_many paths
-            # are positional); coalesce only positional same-op runs
-            many = (self._MANY_OPS.get(entries[i].op)
-                    if not entries[i].kwargs else None)
-            if many is None:
-                comps.append(self._dispatch_one(entries[i]))
-                i += 1
-                continue
-            j = i
-            while (j < n and entries[j].op == entries[i].op
-                   and not entries[j].kwargs):
-                j += 1
-            run = entries[i:j]
-            results = getattr(self, many)([e.args for e in run])
-            for e, r in zip(run, results):
-                if isinstance(r, FsError):
-                    comps.append(CompletionEntry(e.user_data, errno=r.errno))
-                else:
-                    comps.append(CompletionEntry(e.user_data, result=r))
-            i = j
+        try:
+            while i < n:
+                # keyword-style entries keep scalar dispatch (the *_many
+                # paths are positional); coalesce only positional same-op
+                # runs — and only entries stamped with the same submitter,
+                # so per-submitter attribution stays exact
+                sub = getattr(entries[i], "submitter", None)
+                self._current_submitter = sub
+                many = (self._MANY_OPS.get(entries[i].op)
+                        if not entries[i].kwargs else None)
+                if many is None:
+                    comps.append(self._dispatch_one(entries[i]))
+                    i += 1
+                    continue
+                j = i
+                while (j < n and entries[j].op == entries[i].op
+                       and not entries[j].kwargs
+                       and getattr(entries[j], "submitter", None) == sub):
+                    j += 1
+                run = entries[i:j]
+                results = getattr(self, many)([e.args for e in run])
+                for e, r in zip(run, results):
+                    if isinstance(r, FsError):
+                        comps.append(CompletionEntry(e.user_data, errno=r.errno))
+                    else:
+                        comps.append(CompletionEntry(e.user_data, result=r))
+                i = j
+        finally:
+            self._current_submitter = None
         return comps
 
     def _bmap_ro(self, di: L.DiskInode, bn: int, ind_cache: Dict[int, bytes]) -> int:
@@ -517,19 +646,32 @@ class Xv6FileSystem(BentoFilesystem):
                     plans.append(e)
                 except (TypeError, ValueError):
                     plans.append(FsError(Errno.EINVAL, "bad read args"))
+            fetched: List[int] = []
             try:
-                heads = self.ks.sb_bread_many(self.sb_cap, sorted(needed))
+                heads = self.ks.sb_bread_many(self.sb_cap, sorted(needed),
+                                              fetched=fetched)
             except Exception as e:  # device error: fail the batch's reads
                 # as per-entry EIO — errors never cross as exceptions
                 io_err = FsError(Errno.EIO, f"batched bread failed: {e}")
                 self.stats["ops"] += len(reqs)
                 return [p if isinstance(p, FsError) else io_err
                         for p in plans]
+            bad = ()
             try:
                 bufs = {bh.blockno: bh.data() for bh in heads}
+                # verified reads: blocks that came off the DEVICE this pass
+                # (cache hits were verified when first fetched; journal-
+                # pending overlays are newer than their stored hash) are
+                # re-hashed in ONE batched launch against the index
+                bad = (self._blockstore.verify_fetched(bufs, fetched)
+                       if self._blockstore is not None else ())
                 for segs in plans:
                     if isinstance(segs, FsError):
                         out.append(segs)
+                        continue
+                    if bad and any(b in bad for b, _, _ in segs):
+                        out.append(FsError(
+                            Errno.EIO, "blockstore: checksum mismatch"))
                         continue
                     chunks = []
                     for b, boff, nn in segs:
@@ -542,6 +684,11 @@ class Xv6FileSystem(BentoFilesystem):
             finally:
                 for bh in heads:
                     bh.brelse()
+            if bad:
+                # a corrupt fetch must not linger as a trusted cache hit:
+                # evict so every later read refetches and re-verifies (EIO
+                # stays sticky until the device matches the index again)
+                self.ks.sb_invalidate_blocks(self.sb_cap, sorted(bad))
             self.stats["ops"] += len(reqs)
         return out
 
@@ -568,8 +715,17 @@ class Xv6FileSystem(BentoFilesystem):
         """Batched write: one fs-lock acquisition; writes land in the open
         group-commit transaction, so a following fsync/flush entry commits
         the whole batch with one journal transaction (and one checksum_batch
-        launch). Returns bytes-written per request, FsError where failed."""
-        return self._scalar_many("write", reqs)
+        launch). Returns bytes-written per request, FsError where failed.
+        On dedup mounts the whole batch shares ONE batch-end dedup pass
+        (one blockhash launch), like submit_batch dispatch."""
+        store = self._blockstore
+        if store is None:
+            return self._scalar_many("write", reqs)
+        store.batch_begin()
+        try:
+            return self._scalar_many("write", reqs)
+        finally:
+            self._dedup_batch_end()
 
     def getattr_many(self, reqs) -> List:
         return self._scalar_many("getattr", reqs)
@@ -616,6 +772,7 @@ class Xv6FileSystem(BentoFilesystem):
                     if (not isinstance(name, str) or not name or "/" in name
                             or len(name.encode()) > L.NAME_MAX):
                         raise FsError(Errno.EINVAL, str(name))
+                    self._check_reserved(name)
                     self._begin_op()
                     pdi = self._iget(parent)
                     if pdi.type != L.T_DIR:
@@ -679,6 +836,7 @@ class Xv6FileSystem(BentoFilesystem):
                     continue
                 parent, name = args
                 try:
+                    self._check_reserved(name)
                     self._begin_op()
                     pdi = self._iget(parent)
                     st = states.get(parent)
@@ -803,17 +961,30 @@ class Xv6FileSystem(BentoFilesystem):
             if di.type != L.T_DIR:
                 raise FsError(Errno.ENOTDIR, str(ino))
             out = []
+            hide = (DEDUP_TABLE_NAME if (self._blockstore is not None
+                                         and ino == ROOT_INO) else None)
             for _, _, e_ino, name in self._dir_entries(ino, di):
                 if e_ino != 0:
+                    if name == hide:
+                        continue
                     edi = self._iget(e_ino)
                     kind = FileKind.DIR if edi.type == L.T_DIR else FileKind.FILE
                     out.append((name, e_ino, kind))
             self._end_op(False)
             return out
 
-    def _create_common(self, parent: int, name: str, kind: int) -> Attr:
+    def _check_reserved(self, name: str) -> None:
+        """The blockstore's index file is fs-internal: user operations may
+        neither create, remove, nor rename over it."""
+        if self._blockstore is not None and name == DEDUP_TABLE_NAME:
+            raise FsError(Errno.EPERM, name)
+
+    def _create_common(self, parent: int, name: str, kind: int,
+                       _internal: bool = False) -> Attr:
         if len(name.encode()) > L.NAME_MAX or not name or "/" in name:
             raise FsError(Errno.EINVAL, name)
+        if not _internal:
+            self._check_reserved(name)
         with self._oplock:
             self._begin_op()
             pdi = self._iget(parent)
@@ -874,6 +1045,7 @@ class Xv6FileSystem(BentoFilesystem):
         self._iupdate(ino, di)
 
     def unlink(self, parent: int, name: str) -> None:
+        self._check_reserved(name)
         with self._oplock:
             self._begin_op()
             pdi = self._iget(parent)
@@ -893,6 +1065,7 @@ class Xv6FileSystem(BentoFilesystem):
             self._end_op(True)
 
     def rmdir(self, parent: int, name: str) -> None:
+        self._check_reserved(name)
         with self._oplock:
             self._begin_op()
             pdi = self._iget(parent)
@@ -943,6 +1116,8 @@ class Xv6FileSystem(BentoFilesystem):
         if (not isinstance(newname, str) or not newname or "/" in newname
                 or len(newname.encode()) > L.NAME_MAX):
             raise FsError(Errno.EINVAL, str(newname))
+        self._check_reserved(name)
+        self._check_reserved(newname)
         with self._oplock:
             self._begin_op()
             pdi = self._iget(parent)
@@ -1041,13 +1216,14 @@ class Xv6FileSystem(BentoFilesystem):
             pos, n = off, len(data)
             written = 0
             blocks_in_subop = MAXOP_BLOCKS  # force reservation on first block
+            meta = self._chain_write_overhead  # bitmap/inode/ind (+dedup)
             while written < n:
-                if blocks_in_subop + 4 >= MAXOP_BLOCKS:  # +4: bitmap/inode/ind
+                if blocks_in_subop + meta >= MAXOP_BLOCKS:
                     self._begin_op()
                     blocks_in_subop = 0
                 bn, boff = divmod(pos, L.BSIZE)
                 chunk = min(L.BSIZE - boff, n - written)
-                b = self._bmap(ino, di, bn, alloc=True)
+                b = self._write_block_target(ino, di, bn)
                 if boff == 0 and chunk == L.BSIZE:
                     self._log(b, bytes(data[written: written + chunk]))
                 else:
@@ -1063,6 +1239,10 @@ class Xv6FileSystem(BentoFilesystem):
                 if pos > di.size:
                     di.size = pos
                     self._iupdate(ino, di)
+            store = self._blockstore
+            if store is not None and store.batch_depth == 0:
+                # scalar (unbatched) write: dedup pass in THIS transaction
+                store.flush_pending()
             self._end_op(True)
             return written
 
@@ -1099,6 +1279,9 @@ class Xv6FileSystem(BentoFilesystem):
                 free += sum(8 - bin(byte).count("1") for byte in raw)
             total_data = self.geo.size - self.geo.datastart
             self._end_op(False)
-            return {"block_size": L.BSIZE, "total_blocks": self.geo.size,
-                    "data_blocks": total_data, "free_blocks_est": free,
-                    "journal_commits": self.journal.commits}
+            out = {"block_size": L.BSIZE, "total_blocks": self.geo.size,
+                   "data_blocks": total_data, "free_blocks_est": free,
+                   "journal_commits": self.journal.commits}
+            if self._blockstore is not None:
+                out.update(self._blockstore.statfs_extras())
+            return out

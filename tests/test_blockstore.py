@@ -1,0 +1,195 @@
+"""Unit tests for the content-addressed data plane (``fs/blockstore.py``).
+
+The crash story lives in ``tests/test_crash_torture.py`` (torture_dedup)
+and the torn-write detection sweeps in ``tests/test_fs_crash.py``; this
+file pins the in-memory contracts: sharing and CoW bookkeeping, free-path
+refcounting, cold-remount index reload, upgrade state transfer, the
+reserved index-file name, per-submitter attribution, and the plain-mount
+bit-identity guarantee.
+"""
+
+import pytest
+
+from repro.core.interface import Errno, FsError, ROOT_INO
+from repro.core.upgrade import upgrade
+from repro.fs.blockstore import DEDUP_TABLE_NAME
+from repro.fs.ext4like import Ext4LikeFileSystem
+from repro.fs.mounts import DEDUP_KINDS, make_mount
+from repro.fs.xv6 import Xv6FileSystem, Xv6Options
+
+A = b"a" * 4096
+B = b"b" * 4096
+C = b"c" * 4096
+
+
+def _mount(kind="dedup-bento"):
+    return make_mount(kind, n_blocks=4096)
+
+
+def _store(mf):
+    return mf.mount.module._blockstore
+
+
+@pytest.mark.parametrize("kind", DEDUP_KINDS)
+def test_identical_blocks_share_physical_storage(kind):
+    mf = _mount(kind)
+    try:
+        v = mf.view
+        free0 = v.statfs()["free_blocks_est"]
+        v.write_file("/one", A + B)
+        v.fsync("/one")
+        v.write_file("/two", A + B)       # byte-identical: should share
+        v.fsync("/two")
+        sf = v.statfs()
+        physical = free0 - sf["free_blocks_est"]
+        assert physical == 2, f"4 logical blocks took {physical} physical"
+        assert sf["dedup_hits"] == 2
+        assert sf["dedup_shared_refs"] == 2
+        assert v.read_file("/one") == A + B
+        assert v.read_file("/two") == A + B
+    finally:
+        mf.close()
+
+
+def test_cow_break_isolates_sharers():
+    mf = _mount()
+    try:
+        v = mf.view
+        v.write_file("/one", A + A)       # self-dedup: one physical block
+        v.fsync("/one")
+        v.write_file("/two", A)
+        v.fsync("/two")
+        assert v.statfs()["dedup_shared_refs"] == 2
+        v.write_file("/two", C, create=False)   # must not bleed into /one
+        v.fsync("/two")
+        assert v.read_file("/one") == A + A
+        assert v.read_file("/two") == C
+        assert v.statfs()["dedup_cow_breaks"] >= 1
+    finally:
+        mf.close()
+
+
+def test_release_drops_refs_and_frees_last():
+    mf = _mount()
+    try:
+        v = mf.view
+        free0 = v.statfs()["free_blocks_est"]
+        v.write_file("/one", A + B)
+        v.fsync("/one")
+        v.write_file("/two", A + B)
+        v.fsync("/two")
+        v.unlink("/two")                  # shared refs drop, blocks stay
+        v.fsync("/one")
+        assert v.read_file("/one") == A + B
+        assert v.statfs()["dedup_shared_refs"] == 0
+        v.unlink("/one")                  # last refs: really freed
+        mf.mount.module.flush()
+        # free count returns to the post-attach baseline (the index file
+        # itself predates free0): nothing leaked, nothing double-freed
+        assert v.statfs()["free_blocks_est"] == free0
+        assert not _store(mf).refcnt
+    finally:
+        mf.close()
+
+
+@pytest.mark.parametrize("kind", DEDUP_KINDS)
+def test_index_survives_cold_remount(kind):
+    """The index is journal-protected on-device state: a second module
+    booted cold on the same device must reload identical refcounts and
+    hashes (the crashsim audit relies on exactly this)."""
+    mf = _mount(kind)
+    try:
+        v = mf.view
+        v.write_file("/one", A + B + A)
+        v.fsync("/one")
+        fs1 = mf.mount.module
+        fs1.flush()
+        refcnt, hashval = dict(fs1._blockstore.refcnt), dict(
+            fs1._blockstore.hashval)
+        assert refcnt and hashval
+        opts = Xv6Options(dedup=True)
+        fs2 = (Xv6FileSystem(opts) if kind == "dedup-bento"
+               else Ext4LikeFileSystem(opts))
+        fs2.init(mf.services.superblock(), mf.services)
+        assert fs2._blockstore.refcnt == refcnt
+        assert fs2._blockstore.hashval == hashval
+    finally:
+        mf.close()
+
+
+def test_upgrade_transfers_dedup_index_live():
+    """§4.8 online upgrade with the data plane attached: the index rides
+    ``extract_state``/``restore_state`` and sharing keeps working in the
+    new module without a rescan."""
+    mf = _mount()
+    try:
+        v = mf.view
+        v.write_file("/one", A + B)
+        v.fsync("/one")
+        old = _store(mf)
+        refcnt = dict(old.refcnt)
+        upgrade(mf.mount, Xv6FileSystem(Xv6Options(dedup=True)))
+        new = _store(mf)
+        assert new is not old and new.refcnt == refcnt
+        v.write_file("/two", A + B)       # dedups against pre-upgrade data
+        v.fsync("/two")
+        assert v.statfs()["dedup_shared_refs"] == 2
+        assert v.read_file("/one") == A + B
+    finally:
+        mf.close()
+
+
+def test_index_file_hidden_and_reserved():
+    mf = _mount()
+    try:
+        v = mf.view
+        v.write_file("/f", A)
+        assert DEDUP_TABLE_NAME not in v.listdir("/")
+        for op in (lambda: v.create("/" + DEDUP_TABLE_NAME),
+                   lambda: v.unlink("/" + DEDUP_TABLE_NAME),
+                   lambda: v.rename("/f", "/" + DEDUP_TABLE_NAME)):
+            with pytest.raises(FsError) as ei:
+                op()
+            assert ei.value.errno == Errno.EPERM
+    finally:
+        mf.close()
+
+
+def test_per_submitter_attribution():
+    """Blocks flushed on behalf of a named SubmitterQueue are attributed
+    to that submitter in the dedup stats, not to a thread id."""
+    from repro.core.registry import SubmitterQueue
+
+    mf = _mount()
+    try:
+        v = mf.view
+        ino = v.create("/q").ino
+        q = SubmitterQueue(mf.mount, submitter="alice")
+        q.prep("write", ino, 0, A + B, user_data=1)
+        q.prep("fsync", ino, user_data=2)
+        q.submit()
+        comps = list(q.drain())
+        assert all(c.ok for c in comps)
+        per = _store(mf).stats["by_submitter"]
+        assert per.get("alice", {}).get("blocks", 0) >= 2
+    finally:
+        mf.close()
+
+
+def test_plain_mounts_stay_bit_identical():
+    """The opt-in guarantee: the same workload on a plain mount and a
+    dedup mount produces identical file contents, and the plain device
+    image carries no dedup index file at all."""
+    plain, dedup = make_mount("bento", n_blocks=4096), _mount()
+    try:
+        for mf in (plain, dedup):
+            mf.view.write_file("/x", A + A + B)
+            mf.view.fsync("/x")
+        assert plain.view.read_file("/x") == dedup.view.read_file("/x")
+        assert plain.view.statfs().get("dedup_hits") is None
+        root = plain.mount.module._iget(ROOT_INO)
+        assert plain.mount.module._dirlookup(
+            ROOT_INO, root, DEDUP_TABLE_NAME) is None
+    finally:
+        plain.close()
+        dedup.close()

@@ -22,6 +22,7 @@ except ImportError:  # deterministic tests still run
     hp = None
     st = None
 
+from repro.core.interface import Errno
 from repro.core.services import kernel_binding
 from repro.fs.blockdev import MemBlockDevice
 from repro.fs.crashsim import CrashSim, all_or_nothing, chain_workload
@@ -180,3 +181,132 @@ def test_crash_mid_chain_never_half_applied():
     payload = b"C" * (2 * 4096 + 17)  # multi-block: a torn chain would show
     points = _sim().sweep(chain_workload(payload), all_or_nothing(payload))
     assert points > 4  # create+write+commit really hit the device
+
+
+# --- torn writes vs verified reads (the BlockStore integrity tripwire) -----------
+#
+# Dedup mounts hash every flushed data block; bulk reads re-hash what the
+# cache fetched and surface mismatches as EIO. These sweeps tear ONE
+# tracked device block at a time behind the cache's back and assert the
+# detector is exact: EIO for precisely the reads that touch the torn
+# block, byte-identical data everywhere else, and clean reads again once
+# the block's true content is restored.
+
+
+def _torn_corpus(kind):
+    """A small dup-heavy corpus on a fresh dedup mount: 6 files x 4
+    blocks from a 6-block pool (shared AND unique blocks end up tracked).
+    Returns (mf, files, block_files) where block_files maps device block
+    -> set of paths referencing it."""
+    from repro.fs.mounts import make_mount
+
+    mf = make_mount(kind, n_blocks=4096)
+    v, fs = mf.view, mf.mount.module
+    pool = [bytes([17 * (i + 1) % 251]) * 4096 for i in range(6)]
+    files = {f"/t{i}": pool[i % 6] + pool[(i + 1) % 6] + pool[0] + pool[i % 3]
+             for i in range(6)}
+    v.write_many([(p, 0, d) for p, d in files.items()], create=True,
+                 fsync=True)
+    block_files = {}
+    for p in files:
+        di = fs._iget(v._walk(p))
+        cache = {}
+        for bn in range((di.size + 4095) // 4096):
+            block_files.setdefault(fs._bmap_ro(di, bn, cache), set()).add(p)
+    return mf, files, block_files
+
+
+def _tear(mf, b, payload=b"torn-behind-the-cache!"):
+    """Corrupt device block b under the cache and drop the cached copy;
+    returns the original bytes for later restore."""
+    orig = bytes(mf.dev.read_block(b))
+    raw = bytearray(orig)
+    raw[:len(payload)] = payload
+    mf.dev.write_block(b, bytes(raw))
+    fs = mf.mount.module
+    mf.services.sb_invalidate_blocks(fs.sb_cap, [b])
+    return orig
+
+
+@pytest.mark.parametrize("kind", ["dedup-bento", "dedup-ext4like"])
+def test_torn_block_sweep_verified_read_many_exact(kind):
+    """Sweep EVERY tracked block: tear it, bulk-read the corpus with
+    strict=False — EIO lands on exactly the files that reference the torn
+    block (shared blocks poison every sharer), clean files stay
+    byte-identical, the corruption counter ticks, and restoring the true
+    bytes makes the whole corpus read clean again."""
+    from repro.core.interface import FsError
+
+    mf, files, block_files = _torn_corpus(kind)
+    try:
+        v, fs = mf.view, mf.mount.module
+        store = fs._blockstore
+        tracked = sorted(store.hashval)
+        assert len(tracked) >= 4  # the corpus really left hashed blocks
+        paths = sorted(files)
+        for b in tracked:
+            expect_bad = block_files.get(b, set())
+            assert expect_bad, f"tracked block {b} not referenced by corpus"
+            c0 = v.statfs()["dedup_corruptions_detected"]
+            orig = _tear(mf, b)
+            got = v.read_many(paths, strict=False)
+            bad = {p for p, r in zip(paths, got) if isinstance(r, FsError)}
+            assert bad == expect_bad, \
+                f"block {b}: EIO on {bad}, expected {expect_bad}"
+            for p, r in zip(paths, got):
+                if p in expect_bad:
+                    assert r.errno == Errno.EIO
+                else:
+                    assert r == files[p], f"{p} dirtied by unrelated tear"
+            assert v.statfs()["dedup_corruptions_detected"] > c0
+            # restore the true content: verification must pass again
+            mf.dev.write_block(b, orig)
+            mf.services.sb_invalidate_blocks(fs.sb_cap, [b])
+            clean = v.read_many(paths, strict=False)
+            assert [r for r in clean if isinstance(r, FsError)] == []
+            assert all(r == files[p] for p, r in zip(paths, clean))
+    finally:
+        mf.close()
+
+
+@pytest.mark.parametrize("kind", ["dedup-bento", "dedup-ext4like"])
+def test_torn_block_slice_reads_are_block_precise(kind):
+    """Detection is per fetched block, not per file: a ranged read_many
+    slice that avoids the torn block succeeds even inside a file whose
+    OTHER blocks are torn, while any slice overlapping it gets EIO."""
+    from repro.core.interface import FsError
+
+    mf, files, block_files = _torn_corpus(kind)
+    try:
+        v, fs = mf.view, mf.mount.module
+        # pick a block referenced mid-file so both sides exist
+        victim_path, victim_bn = None, None
+        for p in sorted(files):
+            di = fs._iget(v._walk(p))
+            b1 = fs._bmap_ro(di, 1, {})
+            if b1 in fs._blockstore.hashval:
+                victim_path, victim_bn, victim_b = p, 1, b1
+                break
+        assert victim_path is not None
+        _tear(mf, victim_b)
+        specs = [(victim_path, 0, 4096),              # before the tear
+                 (victim_path, victim_bn * 4096, 4096),   # the torn block
+                 (victim_path, 2 * 4096, 4096)]       # after the tear
+        got = v.read_many(specs, strict=False)
+        data = files[victim_path]
+        sharers = block_files[victim_b]
+        assert isinstance(got[1], FsError) and got[1].errno == Errno.EIO
+        if victim_b not in (fs._bmap_ro(fs._iget(v._walk(victim_path)), 0, {}),
+                            fs._bmap_ro(fs._iget(v._walk(victim_path)), 2, {})):
+            assert got[0] == data[:4096]
+            assert got[2] == data[2 * 4096:3 * 4096]
+        # strict=True raises out of the batch instead of returning slots
+        with pytest.raises(FsError):
+            v.read_many([(victim_path, victim_bn * 4096, 4096)])
+        # every OTHER sharer of the shared torn block is poisoned too
+        others = sorted(sharers - {victim_path})
+        if others:
+            got2 = v.read_many(others, strict=False)
+            assert all(isinstance(r, FsError) for r in got2)
+    finally:
+        mf.close()
