@@ -18,10 +18,11 @@ threads: ``--threads N`` (with ``--batched``) adds the multi-submitter
          LOCAL SubmitterQueue, against the same N threads hammering the
          scalar path. The mount's drainer carries every queue pending at
          drain time across the boundary in one gate crossing (io_uring
-         SQPOLL-style), so the tripwires here are *aggregate*: gate
-         crossings ≪ submissions (the drain really coalesces concurrent
-         submitters), ≥ 1.5x aggregate throughput over the N scalar
-         threads, and — for the chained phase — exactly one journal chain
+         SQPOLL-style) and fuses every submitter's read-only runs into
+         ONE vectorized cache pass, so the tripwires here are
+         *aggregate*: gate crossings ≪ submissions (the drain really
+         coalesces concurrent submitters), ≥ 3.0x aggregate throughput
+         over the N scalar threads, and — for the chained phase — exactly one journal chain
          reservation per create→write pair regardless of how submissions
          interleaved (chains never split across a drain or merge across
          submitters).
@@ -37,6 +38,7 @@ CLI:  PYTHONPATH=src python -m benchmarks.fs_micro --batched [--kind bento]
 from __future__ import annotations
 
 import concurrent.futures as cf
+import gc
 import threading
 import time
 from typing import Dict, List
@@ -362,10 +364,16 @@ def bench_threaded(kind: str = "bento", *, threads: int = 4, batch: int = 128,
 
     Self-asserting tripwires (CI runs this via --threads):
       * every completion ok, every read byte-identical to the file;
-      * aggregate batched throughput ≥ 1.5x the scalar-shared phase;
+      * aggregate batched throughput ≥ 3.0x the scalar-shared phase;
       * gate crossings ≪ submissions (drains really coalesce; asserted
         at ≤ 80% — uncontended they would be equal);
       * chain reservations == total create→write pairs exactly.
+
+    Both timed phases run ``reps`` INTERLEAVED trials (scalar/SQ pairs)
+    and keep the best wall per phase — the standard microbenchmark noise
+    filter, plus interleaving so an ambient load spike degrades trials of
+    both phases instead of sinking one side of the ratio — with the GC
+    paused during timing: identical treatment on both sides.
     """
     rows: List[Dict] = []
     mf = make_mount(kind, n_blocks=16384)
@@ -381,7 +389,9 @@ def bench_threaded(kind: str = "bento", *, threads: int = 4, batch: int = 128,
     n_off = (FILE_MB << 20) // size
     expect = {i: v.read_file("/readfile", off=(i % n_off) * size, size=size)
               for i in (0, 1, n_off - 1)}
-    start = threading.Barrier(threads)
+    reps = 5  # best-of-5: the tripwire ratio must not trip on tail noise
+    total_ops = threads * batches_per_thread * batch
+    start = threading.Barrier(threads)  # cyclic: reused across reps
 
     # --- phase 1: N threads sharing the scalar path --------------------------
     def scalar_worker(t):
@@ -392,17 +402,20 @@ def bench_threaded(kind: str = "bento", *, threads: int = 4, batch: int = 128,
                        % n_off) * size
                 v.read_file("/readfile", off=off, size=size)
 
-    wall_scalar = _run_workers(threads, scalar_worker)
-    total_ops = threads * batches_per_thread * batch
-    scalar_ops = total_ops / wall_scalar
-
-    # --- phase 2: N threads, thread-local SQs, dedicated SQPOLL drainer -------
-    m.start_sqpoll()  # submitters append; the poller crosses the boundary
-    g0, s0, d0 = m.gate.crossings, m.mq_submissions, m.mq_drains
     errors: List[str] = []
-    start = threading.Barrier(threads)
 
+    # phase 2 worker: N threads, thread-local SQs, dedicated SQPOLL drainer.
+    # The TIMED worker only issues the batches — per-op verification runs
+    # in the untimed pass below (inside the timed loop it would tax the SQ
+    # side of the ratio with checking work the scalar worker never does).
     def sq_worker(t):
+        start.wait()
+        for b in range(batches_per_thread):
+            base = t * batches_per_thread * batch + b * batch
+            v.read_many([("/readfile", ((base + i) % n_off) * size, size)
+                         for i in range(batch)])
+
+    def sq_verify_worker(t):
         start.wait()
         for b in range(batches_per_thread):
             base = t * batches_per_thread * batch + b * batch
@@ -414,11 +427,38 @@ def bench_threaded(kind: str = "bento", *, threads: int = 4, batch: int = 128,
                 if i in expect and data != expect[i]:
                     errors.append(f"thread {t}: bad read at off {off}")
 
-    wall_sq = _run_workers(threads, sq_worker)
-    sq_ops = total_ops / wall_sq
-    crossings = m.gate.crossings - g0
-    submissions = m.mq_submissions - s0
-    drains = m.mq_drains - d0
+    gc_was_on = gc.isenabled()
+    gc.disable()
+    try:
+        # INTERLEAVED trials: scalar/SQ/scalar/SQ..., best wall of each.
+        # Back-to-back phase blocks let one ambient load spike (this often
+        # runs on a one-core CI box) sink only one side of the ratio; with
+        # A/B interleaving the spike degrades trials of BOTH phases and
+        # best-of-reps discards them together.
+        # idle_us=0: under the GIL the drain's own execution time IS the
+        # gather window — submitters pile on while the drainer runs, so a
+        # sleep on top only adds latency.
+        wall_scalar = wall_sq = float("inf")
+        crossings = submissions = drains = 0
+        for _ in range(reps):
+            wall_scalar = min(wall_scalar,
+                              _run_workers(threads, scalar_worker))
+            m.start_sqpoll(idle_us=0, adaptive=False)
+            g0, s0, d0 = m.gate.crossings, m.mq_submissions, m.mq_drains
+            wall_sq = min(wall_sq, _run_workers(threads, sq_worker))
+            crossings += m.gate.crossings - g0
+            submissions += m.mq_submissions - s0
+            drains += m.mq_drains - d0
+            m.stop_sqpoll()  # scalar trials measure the unpolled path
+        scalar_ops = total_ops / wall_scalar
+        sq_ops = total_ops / wall_sq
+        # untimed correctness pass: same batches, every read checked
+        m.start_sqpoll(idle_us=0, adaptive=False)
+        _run_workers(threads, sq_verify_worker)
+        m.stop_sqpoll()
+    finally:
+        if gc_was_on:
+            gc.enable()
     assert not errors, errors[:5]
     rows.append({
         "bench": "threaded_read", "fs": kind, "threads": threads,
@@ -448,6 +488,7 @@ def bench_threaded(kind: str = "bento", *, threads: int = 4, batch: int = 128,
         except Exception as e:  # noqa: BLE001 — surfaced by the assert
             chain_errors.append(f"thread {t}: {type(e).__name__}: {e}")
 
+    m.start_sqpoll(idle_us=0, adaptive=False)  # chains ride the poller too
     wall_chain = _run_workers(threads, chain_worker)
     m.stop_sqpoll()
     assert not chain_errors, chain_errors[:5]
@@ -467,9 +508,9 @@ def bench_threaded(kind: str = "bento", *, threads: int = 4, batch: int = 128,
 
     # --- tripwires -------------------------------------------------------------
     r = rows[0]
-    assert r["speedup"] >= 1.5, \
+    assert r["speedup"] >= 3.0, \
         (f"threaded SQs only {r['speedup']:.2f}x over {threads} scalar "
-         f"threads (target 1.5x)")
+         f"threads (target 3.0x)")
     assert r["submissions"] >= threads * batches_per_thread  # all submitted
     assert r["drains"] <= r["submissions"], "drains cannot exceed submissions"
     assert r["gate_crossings"] <= 0.8 * r["submissions"], \

@@ -1,7 +1,7 @@
 """Variance-aware benchmark matrix — the persisted perf trajectory.
 
-Sweeps {mount kind} x {dispatch mode: scalar / batched / chained} x
-{thread count} with SHUFFLED SHORT-RUN REPETITION (the btrfs-ublk
+Sweeps {mount kind} x {dispatch mode: scalar / batched / chained /
+sqpoll} x {thread count: 1/4/8} with SHUFFLED SHORT-RUN REPETITION (the btrfs-ublk
 benchmark_matrix idiom): instead of timing each cell once in a fixed
 order — where thermal drift, page-cache state and background noise bias
 whole cells — every (cell, repetition) pair becomes one short run, the
@@ -16,7 +16,7 @@ Output: ``BENCH_<pr>.json`` — ``{"meta", "runs", "summary"}`` where
 ``summary`` one aggregate per cell. CI and later perf PRs diff summaries;
 the runs stay for re-analysis.
 
-CLI:  PYTHONPATH=src python -m benchmarks.matrix --out BENCH_6.json
+CLI:  PYTHONPATH=src python -m benchmarks.matrix --out BENCH_7.json
       [--reps 5] [--quick] [--fuse] [--seed 7]
 """
 
@@ -47,8 +47,11 @@ KIND_ARGS = {
 }
 DEFAULT_KINDS = ("bento", "vfs", "ext4like", "prov-bento",
                  "dedup-bento", "dedup-ext4like")
-MODES = ("scalar", "batched", "chained")
-THREADS = (1, 4)
+MODES = ("scalar", "batched", "chained", "sqpoll")
+THREADS = (1, 4, 8)
+# sqpoll cells need the gated multi-submitter mount; the VFS-direct
+# baseline and the FUSE bridge have no SubmitterQueue to poll
+NO_SQPOLL_KINDS = ("vfs", "fuse")
 
 
 def _workers(n: int, worker) -> float:
@@ -98,7 +101,7 @@ def run_one(kind: str, mode: str, threads: int, *, ops: int,
 
             wall = _workers(threads, worker)
             n_ops = threads * ops
-        elif mode == "batched":
+        elif mode in ("batched", "sqpoll"):
             batch = 64
             n_batches = max(1, ops // batch)
 
@@ -108,7 +111,17 @@ def run_one(kind: str, mode: str, threads: int, *, ops: int,
                     v.read_many([("/warm", ((base + i) % n_off) * SIZE, SIZE)
                                  for i in range(batch)])
 
-            wall = _workers(threads, worker)
+            if mode == "sqpoll":
+                # dedicated poller drains every submitter's queue in one
+                # crossing and fuses the read runs into one cache pass;
+                # idle_us=0 — execution itself is the gather window
+                mf.mount.start_sqpoll(idle_us=0, adaptive=False)
+                try:
+                    wall = _workers(threads, worker)
+                finally:
+                    mf.mount.stop_sqpoll()
+            else:
+                wall = _workers(threads, worker)
             n_ops = threads * n_batches * batch
         else:  # chained: create→write(PrevResult)→fsync triples per batch
             files = max(4, ops // 16)
@@ -133,7 +146,8 @@ def run_matrix(kinds=DEFAULT_KINDS, *, reps: int = 5, ops: int = 512,
     cells = [(k, m, t) for k in kinds for m in MODES for t in THREADS
              # scalar-shared at 4 threads exists for every kind; the fuse
              # daemon serializes anyway, so skip its 4-thread rows
-             if not (k == "fuse" and t > 1)]
+             if not (k == "fuse" and t > 1)
+             and not (m == "sqpoll" and k in NO_SQPOLL_KINDS)]
     schedule = [(c, r) for c in cells for r in range(reps)]
     random.Random(seed).shuffle(schedule)  # the variance-awareness
     runs: List[Dict] = []
@@ -169,7 +183,7 @@ def run_matrix(kinds=DEFAULT_KINDS, *, reps: int = 5, ops: int = 512,
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--out", default="BENCH_6.json")
+    ap.add_argument("--out", default="BENCH_7.json")
     ap.add_argument("--reps", type=int, default=5)
     ap.add_argument("--ops", type=int, default=512,
                     help="per-thread op budget of one short run")

@@ -62,12 +62,17 @@ completed, documenting ordering for mixed chain/unchained batches.
 Concurrent submitters compose through ``execute_multi_batch``: many
 per-thread submissions drain under one gate crossing (io_uring
 SQPOLL-style — see ``repro.core.registry``), with chains grouped per
-submitter and unchained runs coalesced across submitters.
+submitter and unchained runs coalesced across submitters. When the module
+exposes lock-domain hooks (``group_footprint``/``domain_scope`` — the
+sharded replacement for the big fs lock, see ``repro.fs.xv6``) and the
+drain is handed a worker ``pool``, non-overlapping dispatch groups
+execute concurrently instead of serially, multi-queue block-driver style.
 """
 
 from __future__ import annotations
 
 import abc
+import concurrent.futures
 import dataclasses
 import enum
 import inspect
@@ -327,7 +332,7 @@ def execute_batch(submit_batch, entries) -> List["CompletionEntry"]:
     return comps
 
 
-def execute_multi_batch(submit_batch, segments
+def execute_multi_batch(submit_batch, segments, pool=None
                         ) -> List[List["CompletionEntry"]]:
     """Multi-submitter batch executor: each *segment* is one submitter's
     submission, and the whole call runs under ONE gate crossing held by
@@ -349,7 +354,25 @@ def execute_multi_batch(submit_batch, segments
 
     Entries execute in segment-major order (each segment's internal order
     preserved); concurrent submissions have no mutual ordering contract.
-    Returns one completion list per segment, each in submission order."""
+    Returns one completion list per segment, each in submission order.
+
+    With a worker ``pool`` (any ``concurrent.futures`` executor) and a
+    module exposing the lock-domain hooks (``group_footprint`` /
+    ``domain_scope`` — see ``repro.fs.xv6``), the drain schedules
+    NON-OVERLAPPING dispatch groups onto the pool concurrently instead of
+    draining serially, multi-queue block-driver style: each group's
+    footprint (the set of lock domains its entries touch, computed by the
+    same estimator machinery ``chain_begin`` sizes transactions with) is
+    consulted, a group waits for every earlier group it could overlap
+    (same submitter, shared domain, or an unanalyzable ``None`` footprint
+    — which overlaps everything), and each group runs under
+    ``domain_scope(footprint)`` so the module's sharded domain locks
+    stand in for the big fs lock. Journal commit remains the only global
+    serialization point. Per-segment completion order, chain atomicity
+    and errno discipline are identical to the serial drain; unchained
+    runs do NOT coalesce across submitters in parallel mode (they may
+    land on different workers). Falls back to the serial drain when the
+    hooks are absent or no footprint is analyzable."""
     segments = [s if isinstance(s, list) else list(s) for s in segments]
     if len(segments) == 1:
         return [execute_batch(submit_batch, segments[0])]
@@ -360,6 +383,11 @@ def execute_multi_batch(submit_batch, segments
     for si, entries in enumerate(segments):
         for is_chain, group in split_chains(entries):
             flat.append((si, is_chain, group))
+    if pool is not None:
+        par = _execute_multi_parallel(submit_batch, owner, chain_begin,
+                                      chain_end, segments, flat, pool)
+        if par is not None:
+            return par
     out: List[List[CompletionEntry]] = [[] for _ in segments]
     i, n = 0, len(flat)
     while i < n:
@@ -383,6 +411,84 @@ def execute_multi_batch(submit_batch, segments
             out[rsi].extend(comps[k:k + len(g)])
             k += len(g)
         i = j
+    return out
+
+
+def _execute_multi_parallel(submit_batch, owner, chain_begin, chain_end,
+                            segments, flat, pool
+                            ) -> Optional[List[List["CompletionEntry"]]]:
+    """Footprint-scheduled parallel drain over a worker pool.
+
+    Returns ``None`` when the module lacks the lock-domain hooks or no
+    group has an analyzable footprint — the caller then falls back to the
+    serial drain, which is byte-identical to the pre-sharding behaviour.
+
+    Scheduling is a dependency DAG over the flattened dispatch groups:
+    group *j* waits on every earlier group *i* that (a) belongs to the
+    same segment (per-submitter order is a contract), or (b) has an
+    overlapping footprint — with ``None`` (unanalyzable) treated as
+    overlapping everything, so such groups act as barriers and run under
+    the table's global exclusive bracket. The DRAINER thread runs this
+    loop and never executes module code itself; workers never touch the
+    op gate (the drainer's single crossing brackets the whole drain) and
+    never wait on futures, so the pool cannot deadlock on itself. The
+    first implementation exception stops new scheduling, lets in-flight
+    groups finish, and re-raises — poisoning the drain exactly like the
+    serial path."""
+    group_footprint = getattr(owner, "group_footprint", None)
+    domain_scope = getattr(owner, "domain_scope", None)
+    if group_footprint is None or domain_scope is None:
+        return None
+    fps = [group_footprint(group) for _, _, group in flat]
+    if all(fp is None for fp in fps):
+        return None  # every group would serialize anyway: serial drain wins
+    n = len(flat)
+    ndeps = [0] * n
+    dependents: List[List[int]] = [[] for _ in range(n)]
+    for j in range(n):
+        sj, fj = flat[j][0], fps[j]
+        for i in range(j):
+            if flat[i][0] == sj or fps[i] is None or fj is None \
+                    or (fps[i] & fj):
+                ndeps[j] += 1
+                dependents[i].append(j)
+    results: List[Optional[List[CompletionEntry]]] = [None] * n
+
+    def run_unit(u: int) -> List[CompletionEntry]:
+        _, is_chain, group = flat[u]
+        with domain_scope(fps[u]):
+            if is_chain:
+                return _run_chain(submit_batch, group, chain_begin,
+                                  chain_end)
+            return submit_batch(group)
+
+    ready = [u for u in range(n) if ndeps[u] == 0]
+    in_flight: Dict[Any, int] = {}
+    first_exc: Optional[BaseException] = None
+    while in_flight or (ready and first_exc is None):
+        if first_exc is None:
+            for u in ready:
+                in_flight[pool.submit(run_unit, u)] = u
+            ready = []
+        done, _ = concurrent.futures.wait(
+            in_flight, return_when=concurrent.futures.FIRST_COMPLETED)
+        for f in done:
+            u = in_flight.pop(f)
+            try:
+                results[u] = f.result()
+            except BaseException as e:  # a module bug, not an fs errno
+                if first_exc is None:
+                    first_exc = e
+                continue
+            for v in dependents[u]:
+                ndeps[v] -= 1
+                if ndeps[v] == 0:
+                    ready.append(v)
+    if first_exc is not None:
+        raise first_exc
+    out: List[List[CompletionEntry]] = [[] for _ in segments]
+    for u in range(n):
+        out[flat[u][0]].extend(results[u])
     return out
 
 

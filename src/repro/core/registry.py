@@ -35,6 +35,35 @@ per-thread SQ handle (``Mount.submitter_queue()``).
 The gate tracks per-thread depth: a module op that re-enters dispatch on
 the same thread (nested ``call``/``submit``) joins its outer crossing
 instead of deadlocking against a concurrent ``freeze``.
+
+Domain-lock protocol (parallel drain)
+-------------------------------------
+A drain normally executes its dispatch groups serially under the module's
+big fs lock. ``Mount.enable_parallel_drain(workers)`` (or
+``start_sqpoll(parallel=N)``) attaches a small worker pool, and the drain
+instead hands NON-OVERLAPPING groups to the pool concurrently
+(``execute_multi_batch(..., pool=...)``): the module's
+``group_footprint`` hook maps each group's submission entries to the set
+of lock domains it touches (per-inode stripes plus ALLOC / BLOCKSTORE /
+PROV specials — the multi-queue analogue of per-hctx locks), groups wait
+only for earlier groups they overlap, and each runs under the module's
+``domain_scope`` so sharded domain locks replace the single ``_oplock``
+acquisition. The protocol's invariants, enforced by the fs side (see
+``repro.fs.xv6``):
+
+* every MUTATING footprint contains ALLOC, so at most one group stages
+  journal blocks at a time — ``Journal`` commit stays the only global
+  serialization point and member-abort rollback can never clobber a
+  concurrent chain's staging;
+* a ``None`` footprint (kwargs, ``PrevResult`` args, ops the estimator
+  does not model) overlaps everything: the group becomes a barrier and
+  runs under the table's global exclusive bracket — exactly the old
+  big-lock behaviour;
+* workers never touch the op gate: the drainer's single crossing
+  brackets the whole drain, so upgrade quiesce still drains whole rounds
+  atomically. Worker threads that re-enter dispatch from module code are
+  recognized (``_drain_tids``) and join the crossing directly, like the
+  drainer itself.
 """
 
 from __future__ import annotations
@@ -139,8 +168,15 @@ class Mount:
         self.module: Optional[BentoFilesystem] = None
         self.table: Dict[str, Callable] = {}
         self.generation = 0
-        # multi-submitter queue state (SQPOLL-style drain-on-submit)
-        self._mq_cv = threading.Condition()
+        # multi-submitter queue state (SQPOLL-style drain-on-submit).
+        # Two condition variables over ONE lock: submitters park on
+        # _mq_cv (completions / drainer-role changes), the SQPOLL poller
+        # parks on _mq_work_cv (new-work signal) — so a submission's
+        # notify wakes exactly the poller instead of broadcasting to
+        # every waiting submitter (a thundering herd per submission)
+        _mq_lock = threading.Lock()
+        self._mq_cv = threading.Condition(_mq_lock)
+        self._mq_work_cv = threading.Condition(_mq_lock)
         self._mq_pending: List[_PendingSubmission] = []
         self._mq_draining = False
         self._mq_drainer_tid: Optional[int] = None
@@ -150,8 +186,12 @@ class Mount:
         self._sqpoll_idle_base_s = 0.0
         self._sqpoll_adaptive = False
         self._tls = threading.local()
+        # parallel drain (sharded lock domains — see module docstring)
+        self._drain_pool = None
+        self._drain_tids: set = set()
         self.mq_submissions = 0  # submit() calls routed through the queue
         self.mq_drains = 0       # gate crossings that drained pending SQs
+        self.mq_gather_skips = 0  # gather windows skipped: backlog present
         self._install(module)
 
     def _install(self, module: BentoFilesystem) -> None:
@@ -168,6 +208,11 @@ class Mount:
         fn = self.table.get(op)
         if fn is None:
             raise FsError(Errno.EINVAL, f"no such op {op}")
+        if self._drain_tids and threading.get_ident() in self._drain_tids:
+            # parallel-drain worker re-entering dispatch: the drainer's
+            # crossing brackets this thread (see submit()); entering the
+            # gate here could deadlock against a pending freeze
+            return fn(*args, **kw)
         self.gate.enter()
         try:
             return fn(*args, **kw)
@@ -196,7 +241,8 @@ class Mount:
         """
         if not isinstance(entries, list):
             entries = list(entries)
-        if self._mq_drainer_tid == threading.get_ident():
+        tid = threading.get_ident()
+        if self._mq_drainer_tid == tid:
             # nested dispatch from inside a module op on the drainer
             # thread: join the outer crossing (the gate is reentrant) —
             # queueing on ourselves would deadlock
@@ -205,12 +251,19 @@ class Mount:
                 return execute_batch(self.table["submit_batch"], entries)
             finally:
                 self.gate.exit()
+        if self._drain_tids and tid in self._drain_tids:
+            # nested dispatch from a parallel-drain worker, which executes
+            # module code on the drainer's behalf: the drainer's crossing
+            # already brackets this thread's work, and its gate depth here
+            # is 0 — entering would deadlock against a freeze waiting for
+            # the drainer (which waits for this worker). Run direct.
+            return execute_batch(self.table["submit_batch"], entries)
         sub = _PendingSubmission(entries)
         with self._mq_cv:
             self._mq_pending.append(sub)
             self.mq_submissions += 1
             if self._sqpoll is not None:
-                self._mq_cv.notify_all()  # wake the poller (it waits; the
+                self._mq_work_cv.notify()  # wake the poller (it waits; the
                 #   opportunistic drainer polls the queue and needs none)
             while sub.comps is None and sub.error is None \
                     and self._mq_draining:
@@ -252,7 +305,8 @@ class Mount:
             self.gate.enter()
             try:
                 segs = execute_multi_batch(self.table["submit_batch"],
-                                           [s.entries for s in batch])
+                                           [s.entries for s in batch],
+                                           pool=self._drain_pool)
             except BaseException as e:
                 # an implementation exception (a bug — fs errors cross as
                 # errnos) poisons the whole drain: deliver it to every
@@ -269,6 +323,34 @@ class Mount:
                     s.comps = comps
                 self._mq_cv.notify_all()
 
+    def enable_parallel_drain(self, workers: int = 4) -> None:
+        """Attach a small worker pool to the drain: dispatch groups with
+        non-overlapping lock-domain footprints execute concurrently
+        (``execute_multi_batch(..., pool=...)`` — see the module
+        docstring for the protocol). Idempotent; ``workers <= 0`` detaches
+        and shuts the pool down, restoring the serial drain. Worker
+        threads register their tids so nested dispatch from module code
+        running on a worker joins the drainer's crossing instead of
+        queueing on itself."""
+        if workers <= 0:
+            pool, self._drain_pool = self._drain_pool, None
+            if pool is not None:
+                pool.shutdown(wait=True)
+                # dead workers' tids could be recycled for unrelated
+                # threads, which would then bypass the gate — forget them
+                self._drain_tids.clear()
+            return
+        if self._drain_pool is not None:
+            return
+        import concurrent.futures as _cf
+
+        def _register_worker():
+            self._drain_tids.add(threading.get_ident())
+
+        self._drain_pool = _cf.ThreadPoolExecutor(
+            max_workers=workers, thread_name_prefix=f"drain-{self.name}",
+            initializer=_register_worker)
+
     def submitter_queue(self, depth: int = 256,
                         submitter: Optional[str] = None) -> "SubmitterQueue":
         """The calling thread's SubmitterQueue over this mount, created on
@@ -282,7 +364,8 @@ class Mount:
         return q
 
     # --- dedicated SQPOLL drainer (io_uring IORING_SETUP_SQPOLL analogue) ------
-    def start_sqpoll(self, idle_us: int = 500, adaptive: bool = True) -> None:
+    def start_sqpoll(self, idle_us: int = 500, adaptive: bool = True,
+                     parallel: int = 0) -> None:
         """Hand the drainer role to a dedicated thread: submitters only
         append and wait, the poller drains everything pending in one gate
         crossing per round. ``idle_us`` is the ``sq_thread_idle``
@@ -297,7 +380,13 @@ class Mount:
         uncontended: a drain that carried ≤ 1 submission paid the gather
         window for nothing, so the window HALVES (down to zero); a full
         drain (≥ 2 submissions actually coalesced) restores the configured
-        window — see ``_adapt_idle``."""
+        window — see ``_adapt_idle``.
+
+        ``parallel`` > 0 additionally attaches a worker pool of that size
+        (``enable_parallel_drain``) so each round's non-overlapping
+        dispatch groups execute concurrently."""
+        if parallel > 0:
+            self.enable_parallel_drain(parallel)
         with self._mq_cv:
             if self._sqpoll is not None:
                 return
@@ -324,7 +413,7 @@ class Mount:
                 return
             self._sqpoll_run = False
             poller = self._sqpoll
-            self._mq_cv.notify_all()
+            self._mq_work_cv.notify_all()  # the poller parks on work-cv
         poller.join()  # its finally released the role
 
     def _adapt_idle(self, carried: int) -> None:
@@ -353,12 +442,24 @@ class Mount:
         try:
             while True:
                 with self._mq_cv:
+                    # Starvation fix: submissions that arrived DURING the
+                    # previous drain are a backlog, not fresh traffic —
+                    # they already waited a whole drain, and sleeping the
+                    # gather window again before serving them starves
+                    # them for (window + drain) per round. Only sleep
+                    # when work appeared while we were genuinely idle
+                    # (parked on the cv), i.e. when the wait loop ran.
+                    backlog = bool(self._mq_pending)
                     while not self._mq_pending and self._sqpoll_run:
-                        self._mq_cv.wait(timeout=0.05)
+                        backlog = False
+                        self._mq_work_cv.wait(timeout=0.05)
                     if not self._sqpoll_run and not self._mq_pending:
                         return
                 if self._sqpoll_idle_s > 0:
-                    _t.sleep(self._sqpoll_idle_s)  # gather window (GIL off)
+                    if backlog:
+                        self.mq_gather_skips += 1
+                    else:
+                        _t.sleep(self._sqpoll_idle_s)  # gather (GIL off)
                 carried = self._drain_pending()
                 if carried:
                     self._adapt_idle(carried)
@@ -382,6 +483,7 @@ class Mount:
         raise AttributeError(op)
 
     def unmount(self) -> None:
+        self.enable_parallel_drain(0)  # retire drain workers first
         self.gate.freeze()
         try:
             self.module.flush()

@@ -56,6 +56,9 @@ class KernelServices:
         self.counters = {"checksum_calls": 0, "checksum_batch_calls": 0,
                          "checksum_blocks": 0, "bread_many_calls": 0,
                          "bread_many_blocks": 0}
+        # counter increments are read-modify-writes; concurrent read units
+        # (parallel multi-submitter drain) share them
+        self._counter_lock = threading.Lock()
 
     # --- capabilities ---------------------------------------------------------------
     def superblock(self) -> SuperBlockCap:
@@ -81,9 +84,16 @@ class KernelServices:
         (brelse / context exit) — ownership rules are per-buffer.
         ``fetched`` collects device-fetched blocknos for verified reads."""
         blocknos = list(blocknos)
-        self.counters["bread_many_calls"] += 1
-        self.counters["bread_many_blocks"] += len(blocknos)
+        with self._counter_lock:
+            self.counters["bread_many_calls"] += 1
+            self.counters["bread_many_blocks"] += len(blocknos)
         return self._cache_of(sb).bread_many(blocknos, fetched=fetched)
+
+    def sb_brelse_many(self, sb: SuperBlockCap,
+                       heads: List[BufferHead]) -> None:
+        """Batched brelse: release a bread_many batch's heads under one
+        cache-lock acquisition instead of one per head."""
+        self._cache_of(sb).brelse_many(heads)
 
     def sb_getblk_zero(self, sb: SuperBlockCap, blockno: int) -> BufferHead:
         return self._cache_of(sb).getblk_zero(blockno)
@@ -108,7 +118,8 @@ class KernelServices:
         return threading.RLock()
 
     def checksum(self, data: bytes) -> int:
-        self.counters["checksum_calls"] += 1
+        with self._counter_lock:
+            self.counters["checksum_calls"] += 1
         return self._checksum(data)
 
     def checksum_batch(self, blocks) -> List[int]:
@@ -116,8 +127,9 @@ class KernelServices:
         this so the Pallas kernel launches once per transaction, not once
         per block."""
         blocks = list(blocks)
-        self.counters["checksum_batch_calls"] += 1
-        self.counters["checksum_blocks"] += len(blocks)
+        with self._counter_lock:
+            self.counters["checksum_batch_calls"] += 1
+            self.counters["checksum_blocks"] += len(blocks)
         if self._checksum_batch is not None:
             return self._checksum_batch(blocks)
         return [self._checksum(b) for b in blocks]

@@ -57,6 +57,23 @@ are a cache of the on-device table, reloaded from the (rolled-back)
 device state after any journal rollback, and carried across live
 upgrades via ``extract_state``/``restore_state`` under the optional
 ``"dedup"`` key.
+
+Index compaction under churn
+----------------------------
+
+The table is direct-mapped (one record slot per data-region block), so
+sustained create/delete churn leaves *tombstones*: table blocks whose
+records are all dead (``refcount == 0``) but which still hold device
+blocks. When the ratio of fully-dead table blocks to materialized ones
+crosses ``_COMPACT_TOMBSTONE_RATIO``, the batch-end pass PUNCHES them:
+the logical→device mapping is cleared and the block returned to the
+allocator, staged in the same journal transaction as the churn that
+exposed them (crash at any point recovers to either state, proven by
+``crashsim.torture_dedup``'s churn sweep). A record landing on a punched
+slot later *rematerializes* the table block (fresh zeroed allocation, in
+that record's transaction). ``reload`` re-derives the table-block map
+from the index inode, so rollbacks and crash recovery see holes exactly
+as the device does.
 """
 
 from __future__ import annotations
@@ -77,6 +94,9 @@ _MAX_REFS = 0xFFFF
 # journal blocks one dedup-pass item may stage (table + inode + indirect +
 # bitmap); the pass defers items when the open transaction has less room
 _ITEM_MARGIN = 8
+# punch fully-dead table blocks once they exceed this fraction of the
+# materialized table (see "Index compaction under churn" above)
+_COMPACT_TOMBSTONE_RATIO = 0.25
 
 
 class BlockStore:
@@ -90,7 +110,13 @@ class BlockStore:
     def __init__(self, fs):
         self.fs = fs
         self.table_ino: Optional[int] = None
-        self._table_blocks: List[int] = []  # lbn -> device block
+        self._table_blocks: List[int] = []  # lbn -> device block (0 = punched)
+        self._live_per_lbn: List[int] = []  # live (rc>0) records per table block
+        # table blocks whose last live record DIED (vs never-populated
+        # ones): only these are tombstones — punching the preallocated
+        # but never-used tail of the table would just churn remats
+        self._dead_churned: Set[int] = set()
+        self._n_live_blocks = 0  # table blocks with any live record
         # in-memory cache of the on-device table
         self.refcnt: Dict[int, int] = {}
         self.hashval: Dict[int, int] = {}      # blockno -> hash (valid only)
@@ -103,6 +129,7 @@ class BlockStore:
             "hash_launches": 0, "hashed_blocks": 0, "dedup_hits": 0,
             "cow_breaks": 0, "dedup_deferred": 0, "verify_launches": 0,
             "verified_blocks": 0, "corruptions_detected": 0,
+            "compactions": 0, "remats": 0,
             "by_submitter": {},
         }
 
@@ -145,24 +172,30 @@ class BlockStore:
             if di.size < table_bytes:  # crash mid-bootstrap: finish the zero
                 fs.write(self.table_ino, di.size, bytes(table_bytes - di.size))
         fs.journal.commit()
-        di = fs._iget(self.table_ino)
-        nlbn = (table_bytes + L.BSIZE - 1) // L.BSIZE
-        cache: Dict[int, bytes] = {}
-        self._table_blocks = [fs._bmap_ro(di, i, cache) for i in range(nlbn)]
         self.reload()
 
     def reload(self) -> None:
         """Rebuild the in-memory maps from the on-device table (through
         the journal overlay). Also the rollback path: after an aborted
         chain member / op the overlay shows pre-transaction state, so a
-        reload drops exactly the rolled-back index mutations."""
+        reload drops exactly the rolled-back index mutations. The
+        table-block map is RE-DERIVED from the index inode each time —
+        compaction punches holes into it (and rematerialization fills
+        them), and both may be the thing that just rolled back."""
         fs = self.fs
+        di = fs._iget(self.table_ino)
+        nlbn = (self._n_entries() * _REC_SIZE + L.BSIZE - 1) // L.BSIZE
+        cache: Dict[int, bytes] = {}
+        self._table_blocks = [fs._bmap_ro(di, i, cache) for i in range(nlbn)]
         refcnt: Dict[int, int] = {}
         hashval: Dict[int, int] = {}
         by_hash: Dict[int, Set[int]] = {}
         datastart = fs.geo.datastart
         per_blk = L.BSIZE // _REC_SIZE
+        live = [0] * nlbn
         for lbn, tb in enumerate(self._table_blocks):
+            if tb == 0:
+                continue  # punched: every record in range is dead
             with fs._bread(tb) as bh:
                 raw = bytes(bh.data())
             base = datastart + lbn * per_blk
@@ -173,12 +206,18 @@ class BlockStore:
                 if b >= fs.geo.size:
                     break
                 refcnt[b] = rc
+                live[lbn] += 1
                 if fl & _F_VALID:
                     hashval[b] = h
                     by_hash.setdefault(h, set()).add(b)
         self.refcnt = refcnt
         self.hashval = hashval
         self._by_hash = by_hash
+        self._live_per_lbn = live
+        self._n_live_blocks = sum(1 for n in live if n > 0)
+        # churn history is transition-derived; the device can't tell a
+        # churned-dead block from a never-used one, so pressure restarts
+        self._dead_churned = set()
         self.pending.clear()
 
     # --- on-device record mutation (journaled: same txn as the caller's op) ----------
@@ -187,12 +226,18 @@ class BlockStore:
         idx = b - fs.geo.datastart
         lbn, off = divmod(idx * _REC_SIZE, L.BSIZE)
         tb = self._table_blocks[lbn]
+        if tb == 0:
+            if rc == 0:
+                return  # dead record on a punched block: already gone
+            tb = self._remat_table_block(lbn)
         with fs._bread(tb) as bh:
             buf = bh.data()
             struct.pack_into(_REC_FMT, buf, off, h & 0xFFFFFFFF, rc,
                              _F_VALID if valid else 0)
             fs._log(tb, bytes(buf))
-        # mirror into the in-memory cache
+        # mirror into the in-memory cache (and the per-block live counts
+        # compaction keys off)
+        was_live = b in self.refcnt
         old_h = self.hashval.pop(b, None)
         if old_h is not None:
             peers = self._by_hash.get(old_h)
@@ -207,6 +252,29 @@ class BlockStore:
             if valid:
                 self.hashval[b] = h
                 self._by_hash.setdefault(h, set()).add(b)
+        if was_live != (rc > 0) and self._live_per_lbn:
+            if rc > 0:
+                if self._live_per_lbn[lbn] == 0:
+                    self._n_live_blocks += 1
+                self._live_per_lbn[lbn] += 1
+                self._dead_churned.discard(lbn)
+            else:
+                self._live_per_lbn[lbn] -= 1
+                if self._live_per_lbn[lbn] == 0:
+                    self._n_live_blocks -= 1
+                    self._dead_churned.add(lbn)
+
+    def _remat_table_block(self, lbn: int) -> int:
+        """A record is landing on a punched (compacted-away) table block:
+        materialize a fresh zeroed block for it, journaled in the current
+        transaction like any other index mutation."""
+        fs = self.fs
+        nb = fs._balloc()  # stages the bitmap bit AND zeroed content
+        di = fs._iget(self.table_ino)
+        fs._bmap_install(self.table_ino, di, lbn, nb)
+        self._table_blocks[lbn] = nb
+        self.stats["remats"] += 1
+        return nb
 
     # --- write-path hook --------------------------------------------------------------
     def note_write(self, ino: int, di, bn: int, b: int) -> int:
@@ -271,7 +339,13 @@ class BlockStore:
         share duplicates copy-on-write style. Runs under the fs lock with
         an open journal scope (the chain transaction for chained writes,
         a trailing reservation otherwise); items that would overflow the
-        open transaction stay pending for the next pass."""
+        open transaction stay pending for the next pass. Piggybacks the
+        tombstone compaction check: churn that killed whole table blocks
+        gets them punched in this same transaction."""
+        self._dedup_pass()
+        self._maybe_compact()
+
+    def _dedup_pass(self) -> None:
         if not self.pending:
             return
         fs = self.fs
@@ -326,6 +400,43 @@ class BlockStore:
                 str(sub), {"blocks": 0, "dedup_hits": 0})
             per["blocks"] += 1
 
+    # --- index compaction under churn ----------------------------------------------------
+    def compaction_due(self) -> bool:
+        """Tombstone pressure: CHURNED fully-dead table blocks (blocks
+        whose last live record died — never-populated preallocated blocks
+        don't count) as a fraction of the USED index (dead + still-live
+        blocks) crossed the punch threshold. O(1): the counts are
+        maintained incrementally by ``_entry_write`` — this runs on every
+        mutating op's epilogue."""
+        dead = len(self._dead_churned)
+        if dead == 0:
+            return False
+        return dead / (dead + self._n_live_blocks) > _COMPACT_TOMBSTONE_RATIO
+
+    def _maybe_compact(self) -> None:
+        """Punch every fully-dead table block back to the allocator,
+        journaled in the caller's open transaction: clear the index
+        inode's mapping, free the device block, leave a hole sentinel in
+        the in-memory map. Stops early when the open transaction runs
+        low on room — the rest punch on a later pass (``compaction_due``
+        stays true until they do)."""
+        if not self.compaction_due():
+            return
+        fs = self.fs
+        di = fs._iget(self.table_ino)
+        for lbn in sorted(self._dead_churned):
+            tb = self._table_blocks[lbn]
+            if tb == 0 or self._live_per_lbn[lbn] != 0:
+                self._dead_churned.discard(lbn)
+                continue
+            if fs.journal.room < _ITEM_MARGIN:
+                return
+            fs._bmap_clear(self.table_ino, di, lbn)
+            fs._bfree_raw(tb)
+            self._table_blocks[lbn] = 0
+            self._dead_churned.discard(lbn)
+            self.stats["compactions"] += 1
+
     # --- verified reads ------------------------------------------------------------------
     def verify_fetched(self, bufs: Dict[int, bytes], fetched) -> Set[int]:
         """Bulk-verify device-fetched blocks against stored hashes (one
@@ -351,11 +462,19 @@ class BlockStore:
         return {
             "dedup_tracked_blocks": len(self.refcnt),
             "dedup_shared_refs": self.shared_refs(),
+            # statfs accounting (the free-block estimate folds these in):
+            # device blocks the index itself occupies, and data blocks
+            # CoW sharing saves (rc-1 per shared block) — what free space
+            # would gain if every share were broken
+            "dedup_index_blocks": sum(1 for tb in self._table_blocks if tb),
+            "dedup_saved_blocks": self.shared_refs(),
             "dedup_hits": self.stats["dedup_hits"],
             "dedup_cow_breaks": self.stats["cow_breaks"],
             "dedup_hash_launches": self.stats["hash_launches"],
             "dedup_verify_launches": self.stats["verify_launches"],
             "dedup_corruptions_detected": self.stats["corruptions_detected"],
+            "dedup_compactions": self.stats["compactions"],
+            "dedup_remats": self.stats["remats"],
         }
 
     def extract_state(self) -> Dict:
@@ -380,6 +499,15 @@ class BlockStore:
         self._by_hash = {}
         for b, h in self.hashval.items():
             self._by_hash.setdefault(h, set()).add(b)
+        # recompute the compaction live counts from the restored refcounts
+        per_blk = L.BSIZE // _REC_SIZE
+        datastart = self.fs.geo.datastart
+        live = [0] * len(self._table_blocks)
+        for b in self.refcnt:
+            live[(b - datastart) // per_blk] += 1
+        self._live_per_lbn = live
+        self._n_live_blocks = sum(1 for n in live if n > 0)
+        self._dead_churned = set()
         st = state.get("stats")
         if st:
             self.stats.update({k: (dict(v) if isinstance(v, dict) else v)

@@ -165,6 +165,24 @@ class BufferCache:
                 else:
                     self._dirty[bh.blockno] = bh._buf
 
+    def brelse_many(self, heads: List[BufferHead]) -> None:
+        """Release many heads under ONE lock acquisition — the unpin
+        counterpart of ``bread_many`` (per-head ``brelse`` pays a cache-lock
+        round trip per block, which dominates large vectorized reads).
+        Already-released heads are skipped, same as ``brelse``."""
+        with self._lock:
+            refs = self._refs
+            for bh in heads:
+                if not bh._held:
+                    continue
+                bh._held = False
+                refs[bh.blockno] -= 1
+                if bh.dirty:
+                    if self.writeback == "through":
+                        self.dev.write_block(bh.blockno, bytes(bh._buf))
+                    else:
+                        self._dirty[bh.blockno] = bh._buf
+
     def write_now(self, bh: BufferHead) -> None:
         """Synchronous write of a held buffer (journal commit path)."""
         with self._lock:

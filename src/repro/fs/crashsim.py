@@ -671,6 +671,151 @@ def torture_dedup(kind: str = "xv6", *, quick: bool = False) -> int:
     return sim.sweep(workload, _dedup_audit, setup=setup, quick=quick)
 
 
+def torture_dedup_churn(kind: str = "xv6", *, quick: bool = False) -> int:
+    """Sweep sustained create/delete churn that drives the dedup index
+    through COMPACTION (a fully-dead table block punched back to the
+    allocator) and REMATERIALIZATION (a record landing on the punched
+    hole), with the refcount-exact audit at every power-loss point.
+
+    Geometry: one table block maps 512 consecutive data blocks, so the
+    durable setup probes where allocation currently sits (root dir and
+    the index file itself claim the first few data blocks) and plants a
+    distinct-block filler that UNDERSHOOTS table block 0's record range
+    by a small margin — metadata blocks (indirects, dir growth) carry no
+    refcount and never keep a table block alive, so exact alignment is
+    unnecessary. The workload's churn file then spans the boundary into
+    table block 1 and is the only thing live there, so emptying it
+    (punch fires inside the unlink transaction) and re-writing across
+    the boundary (remat fires inside the write transaction) exercise
+    both transitions. Every block's content is unique — self-dedup
+    would collapse the ranges. The golden run asserts both transitions
+    actually happen — a sweep that never compacts proves nothing."""
+    per_blk = 4096 // 8  # records per table block (_REC_SIZE == 8)
+
+    def _blocks(tag: int, n: int) -> bytes:
+        # n blocks, each 4096B of globally-unique content (no self-dedup)
+        return b"".join((tag + i).to_bytes(4, "big") * 1024
+                        for i in range(n))
+
+    filler_len = [0]
+
+    def setup(ctx: CrashCtx) -> None:
+        v, store = ctx.view, ctx.fs._blockstore
+        v.write_file("/probe", _blocks(9 << 24, 1))
+        v.fsync("/probe")
+        idx = max(store.refcnt) - ctx.fs.geo.datastart
+        filler_len[0] = per_blk - 1 - idx - 16  # 16-record undershoot
+        v.write_file("/filler", _blocks(0, filler_len[0]))
+        v.fsync("/filler")
+
+    def workload(ctx: CrashCtx) -> None:
+        v = ctx.view
+        v.write_file("/churn", _blocks(1 << 16, 96))  # spans into block 1
+        v.fsync("/churn")
+        v.unlink("/churn")                  # last live records die: punch
+        v.fsync("/filler")
+        v.write_file("/re", _blocks(2 << 16, 64))  # back into hole: remat
+        v.fsync("/re")
+
+    sim = CrashSim(_dedup_factory(kind), n_blocks=2048, nlog=64)
+    # prove the golden run crosses both transitions
+    ctx = sim.boot(setup)
+    workload(ctx)
+    st = ctx.fs._blockstore.stats
+    assert st["compactions"] > 0, "churn workload never compacted"
+    assert st["remats"] > 0, "churn workload never rematerialized"
+
+    def invariant(rec: Recovered) -> None:
+        _dedup_audit(rec)
+        assert rec.view.read_file("/filler") == _blocks(0, filler_len[0])
+
+    return sim.sweep(workload, invariant, setup=setup, quick=quick)
+
+
+# --- parallel-drain torture: sharded lock domains vs the serial drain -------------
+
+
+def torture_parallel(kind: str = "xv6", *, quick: bool = False,
+                     dedup: bool = False, workers: int = 4) -> int:
+    """The tentpole's proof: drive a multi-submitter drain — one mutating
+    submitter (a linked create→write→fsync chain) plus three read-only
+    submitters on disjoint inode stripes — through the footprint-scheduled
+    PARALLEL executor at every power-loss point, and require that
+
+    * the recovered device image is BYTE-IDENTICAL to the serial drain's
+      at the same crash point (mutations are ALLOC-serialized and reads
+      write nothing, so the device write stream — and therefore every
+      crash point — must be exactly the serial drain's), and
+    * the chain stays all-or-nothing and the read targets stay intact,
+      under both executors.
+
+    ``dedup=True`` runs the same sweep on a dedup mount, where every
+    footprint carries the BLOCKSTORE domain — the degenerate
+    fully-serialized schedule must ALSO match the serial drain."""
+    import concurrent.futures as _cf
+
+    from repro.core.interface import (PrevResult, SQE_LINK, SubmissionEntry,
+                                      execute_multi_batch)
+
+    payload = b"P" * (2 * 4096 + 9)
+    seed = b"r" * (4096 + 11)
+
+    def setup(ctx: CrashCtx) -> None:
+        for i in range(4):
+            ctx.view.write_file(f"/r{i}", seed)
+
+    def make_workload(pool):
+        def run(ctx: CrashCtx) -> None:
+            inos = [ctx.view.stat(f"/r{i}").ino for i in range(4)]
+            mut = [
+                SubmissionEntry("create", (1, "f"), user_data="c",
+                                flags=SQE_LINK),
+                SubmissionEntry("write", (PrevResult("ino"), 0, payload),
+                                user_data="w", flags=SQE_LINK),
+                SubmissionEntry("fsync", (PrevResult("ino", back=2),),
+                                user_data="s"),
+            ]
+            readers = [[SubmissionEntry("read", (ino, 0, len(seed)))
+                        for ino in inos] for _ in range(3)]
+            segs = execute_multi_batch(ctx.fs.submit_batch, [mut] + readers,
+                                       pool=pool)
+            bad = [(c.user_data, c.errno) for c in segs[0] if not c.ok]
+            assert not bad, f"chain failed without a crash: {bad}"
+            for seg in segs[1:]:
+                for c in seg:
+                    assert c.ok and c.result == seed, "reader saw bad data"
+        return run
+
+    factory = _dedup_factory(kind) if dedup else _fs_factory(kind)
+    sim = CrashSim(factory)
+    serial, chk = make_workload(None), all_or_nothing(payload)
+    total = sim.measure(serial, setup=setup)
+    points = quick_points(total) if quick else range(total + 1)
+    pool = _cf.ThreadPoolExecutor(max_workers=workers)
+    try:
+        parallel = make_workload(pool)
+        for point in points:
+            rp = sim.run_one(parallel, point, total=total, setup=setup)
+            rs = sim.run_one(serial, point, total=total, setup=setup)
+            try:
+                assert rp.crashed == rs.crashed, \
+                    f"crash divergence: par={rp.crashed} ser={rs.crashed}"
+                assert (rp.dev._data.tobytes() == rs.dev._data.tobytes()), \
+                    "parallel drain produced a different device image"
+                for rec in (rp, rs):
+                    chk(rec)
+                    for i in range(4):
+                        assert rec.view.read_file(f"/r{i}") == seed, \
+                            f"/r{i} damaged by a concurrent-domain drain"
+            except AssertionError as e:
+                raise AssertionError(
+                    f"parallel-drain invariant violated at crash point "
+                    f"{point}/{total}: {e}") from e
+    finally:
+        pool.shutdown(wait=False)
+    return len(list(points))
+
+
 def main() -> None:
     import argparse
 
@@ -688,7 +833,10 @@ def main() -> None:
                          "many bytes instead of losing it whole")
     ap.add_argument("--dedup", action="store_true",
                     help="also torture the content-addressed dedup plane "
-                         "(refcount-exact index audit at every point)")
+                         "(refcount-exact index audit at every point) and "
+                         "the index compaction/remat path under churn")
+    ap.add_argument("--no-parallel", action="store_true",
+                    help="skip the parallel-drain differential sweep")
     args = ap.parse_args()
     kinds = ["xv6", "ext4like"] if args.kind == "both" else [args.kind]
     mode = "quick subset" if args.quick else "exhaustive"
@@ -706,10 +854,20 @@ def main() -> None:
         n = torture_prov_chain(kind, quick=args.quick)
         print(f"crashsim {kind}: chain txn spans data + provenance records "
               f"at {n} crash points ({mode}) — OK")
+        if not args.no_parallel:
+            n = torture_parallel(kind, quick=args.quick)
+            print(f"crashsim {kind}: parallel drain byte-identical to "
+                  f"serial at {n} crash points ({mode}) — OK")
         if args.dedup:
             n = torture_dedup(kind, quick=args.quick)
             print(f"crashsim {kind}: dedup index refcount-exact (+no "
                   f"leaks, hashes fresh) at {n} crash points ({mode}) — OK")
+            n = torture_dedup_churn(kind, quick=args.quick)
+            print(f"crashsim {kind}: index compaction punch + remat under "
+                  f"churn at {n} crash points ({mode}) — OK")
+            n = torture_parallel(kind, quick=args.quick, dedup=True)
+            print(f"crashsim {kind}: dedup-mount parallel drain matches "
+                  f"serial at {n} crash points ({mode}) — OK")
     if args.fuse:
         n = torture_fuse(quick=True, torn_bytes=args.torn_bytes)
         torn = (f", torn at {args.torn_bytes}B" if args.torn_bytes >= 0

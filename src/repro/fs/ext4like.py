@@ -239,7 +239,8 @@ class Ext4LikeFileSystem(Xv6FileSystem):
                     out.append(e)
                 except (TypeError, ValueError):
                     out.append(FsError(Errno.EINVAL, "bad lookup args"))
-            self.stats["ops"] += len(reqs)  # count per entry, like scalar
+            with self._stats_lock:  # concurrent lookup units share this
+                self.stats["ops"] += len(reqs)  # count per entry, like scalar
         return out
 
     def write_many(self, reqs) -> List:
@@ -292,7 +293,8 @@ class Ext4LikeFileSystem(Xv6FileSystem):
                     out.extend(len(p) for p in parts)
                     # scalar write counted the merged run as one op; keep
                     # stats['ops'] meaning entries, like the other paths
-                    self.stats["ops"] += len(parts) - 1
+                    with self._stats_lock:
+                        self.stats["ops"] += len(parts) - 1
                 except FsError as e:
                     if len(parts) == 1:
                         out.append(e)

@@ -39,6 +39,30 @@ commits leaves a half-applied chain on disk.  ``begin_chain`` /
 
 A crash at any device write therefore leaves either the whole chain
 installed after ``recover`` or none of it.
+
+Concurrent reservations (sharded lock domains)
+----------------------------------------------
+
+The parallel multi-submitter drain (``core.registry`` +
+``fs/xv6.LockDomainTable``) dispatches non-overlapping groups on worker
+threads, so more than one chain scope can be OPEN at once — one per
+thread. The chain scope is therefore per-thread state
+(``_chain_scopes[tid]``), and the journal stays the ONLY global
+serialization point:
+
+* ``begin_chain`` admits a new reservation only while the pending
+  transaction plus every ACTIVE reservation still fits capacity; when
+  other chains hold reservations it waits for them to close instead of
+  forcing a commit (commit mid-chain would tear them);
+* ``commit`` defers while the CALLING thread holds a chain scope (the
+  single-thread rule, unchanged) or while ANY open chain has staged
+  blocks — committing then would split that chain across two commit
+  records. The deferred commit runs when the last scope closes.
+* the mutating side above the journal serializes on the allocation
+  domain (``fs/xv6.LockDomainTable``), so at most one chain with staged
+  blocks exists at a time — member-abort rollback can never clobber a
+  concurrent chain's staging. Read-only chains stage nothing and run
+  fully concurrent.
 """
 
 from __future__ import annotations
@@ -66,6 +90,19 @@ class JournalFull(FsError):
         super().__init__(Errno.ENOSPC, msg)
 
 
+class _ChainScope:
+    """One thread's open chain reservation: its size (for admission of
+    further concurrent chains), its member undo log, and whether any of
+    its blocks are already staged (a staged chain pins ``commit``)."""
+
+    __slots__ = ("est", "member_undo", "staged")
+
+    def __init__(self, est: int):
+        self.est = est
+        self.member_undo: Optional[Dict[int, Optional[bytes]]] = None
+        self.staged = False
+
+
 class Journal:
     def __init__(self, services, sb_cap: SuperBlockCap, sb: SuperBlock,
                  *, batched_install: bool = False):
@@ -75,13 +112,15 @@ class Journal:
         self.capacity = sb.nlog - 1  # minus header block
         self.batched_install = batched_install  # writepages-style install
         self._lock = threading.RLock()
+        self._cv = threading.Condition(self._lock)  # chain-scope transitions
         self._pending: Dict[int, bytes] = {}  # home blockno -> data (absorbed)
         self._seq = 0
-        self._in_chain = False        # chain scope open: commits defer
-        self._chain_owner: Optional[int] = None  # thread id holding the scope
+        # chain scopes are PER-THREAD: the parallel drain runs independent
+        # chains on worker threads concurrently (each serialized above the
+        # journal by its lock domains); tid -> scope
+        self._chain_scopes: Dict[int, _ChainScope] = {}
         self._chain_deferred = False  # a commit was requested mid-chain
-        self._member_undo: Optional[Dict[int, Optional[bytes]]] = None
-        self._op_undo: Optional[Dict[int, Optional[bytes]]] = None
+        self._op_undo: Dict[int, Optional[Dict[int, Optional[bytes]]]] = {}
         # called after any undo-rollback so the fs can drop in-memory
         # state (inode cache, dir indexes) derived from the rolled-back
         # staging; set by the fs at init
@@ -106,31 +145,41 @@ class Journal:
         via ``begin_chain``, so a crash can only land between whole
         operations/chains, keeping each one atomic."""
         with self._lock:
+            tid = threading.get_ident()
+            scope = self._chain_scopes.get(tid)
             # undo entry BEFORE the overflow check: callers mutate the
             # cache buffer first, so even a refused log_write must leave
             # its block invalidatable by the rollback
-            undo = self._member_undo if self._in_chain else self._op_undo
+            undo = (scope.member_undo if scope is not None
+                    else self._op_undo.get(tid))
             if undo is not None and blockno not in undo:
                 undo[blockno] = self._pending.get(blockno)
             if len(self._pending) >= self.capacity and blockno not in self._pending:
-                if not self._in_chain:
+                if scope is None:
                     # overflow outside a chain: roll the current op scope
                     # back NOW, so the ENOSPC that reaches the caller means
                     # "this (sub-)op staged nothing" — a later group commit
                     # can never install a torn op (in-chain overflows roll
                     # back in chain_member_abort instead)
-                    self._rollback_locked(self._op_undo)
-                    self._op_undo = None
+                    self._rollback_locked(self._op_undo.get(tid))
+                    self._op_undo[tid] = None
                 raise JournalFull(
                     f"operation overflowed the journal ({self.capacity} blocks) "
                     "— missing _begin_op/begin_chain reservation")
             self._pending[blockno] = bytes(data)
+            if scope is not None:
+                scope.staged = True
 
     def commit(self) -> None:
         with self._lock:
-            if self._in_chain:
-                # Refused mid-chain: the chain must land in ONE transaction.
-                # Recorded and executed by end_chain.
+            if threading.get_ident() in self._chain_scopes or \
+                    any(s.staged for s in self._chain_scopes.values()):
+                # Refused mid-chain: a chain must land in ONE transaction,
+                # so neither the chain's own thread nor a concurrent
+                # committer may split an open chain's staged blocks across
+                # two commit records. Recorded and executed by the LAST
+                # end_chain. (A concurrent commit while only empty chain
+                # scopes are open proceeds — nothing of theirs can tear.)
                 self._chain_deferred = True
                 return
             self._commit_locked()
@@ -138,7 +187,8 @@ class Journal:
     # --- chain-scoped reservation (linked SQE chains) ------------------------------
     @property
     def in_chain(self) -> bool:
-        return self._in_chain
+        """Some thread holds an open chain scope (any thread)."""
+        return bool(self._chain_scopes)
 
     @property
     def in_chain_here(self) -> bool:
@@ -146,7 +196,7 @@ class Journal:
         bracketing fast path in ``submit_batch`` checks this BEFORE taking
         the fs lock — a concurrent submitter on another thread must see
         False, or it would clobber the owner's member undo log."""
-        return self._in_chain and self._chain_owner == threading.get_ident()
+        return threading.get_ident() in self._chain_scopes
 
     def begin_chain(self, estimated_blocks: int) -> None:
         """Open a chain scope sized for ``estimated_blocks`` journal blocks
@@ -154,32 +204,42 @@ class Journal:
 
         Raises ``JournalFull`` (ENOSPC) BEFORE anything is staged when the
         chain can never fit the journal; commits the open transaction first
-        when the chain fits but not alongside the pending blocks."""
+        when the chain fits but not alongside the pending blocks. While
+        OTHER threads hold chain reservations the open transaction cannot
+        be committed out from under them, so an admission that does not fit
+        waits for those scopes to close instead."""
         with self._lock:
-            if self._in_chain:
+            tid = threading.get_ident()
+            if tid in self._chain_scopes:
                 raise RuntimeError("nested begin_chain — chains may not nest")
             if estimated_blocks > self.capacity:
                 raise JournalFull(
                     f"chain needs ~{estimated_blocks} journal blocks, "
                     f"capacity is {self.capacity} — cannot be made atomic")
-            if len(self._pending) + estimated_blocks > self.capacity:
-                self.chain_precommits += 1
-                self._commit_locked()
-            self._in_chain = True
-            self._chain_owner = threading.get_ident()
-            self._chain_deferred = False
+            while True:
+                reserved = sum(s.est for s in self._chain_scopes.values())
+                if len(self._pending) + reserved + estimated_blocks \
+                        <= self.capacity:
+                    break
+                if not self._chain_scopes:
+                    # alone: a pre-chain commit is a legal boundary
+                    self.chain_precommits += 1
+                    self._commit_locked()
+                    break
+                self._cv.wait()  # concurrent scopes close via end_chain
+            self._chain_scopes[tid] = _ChainScope(estimated_blocks)
             self.chains += 1
 
     def end_chain(self) -> None:
-        """Close the chain scope; run the commit an in-chain fsync/flush
-        deferred (the whole chain becomes durable atomically)."""
+        """Close the calling thread's chain scope; when the LAST scope
+        closes, run the commit an in-chain fsync/flush deferred (the whole
+        chain becomes durable atomically)."""
         with self._lock:
-            self._in_chain = False
-            self._chain_owner = None
-            self._member_undo = None
-            if self._chain_deferred:
+            self._chain_scopes.pop(threading.get_ident(), None)
+            if not self._chain_scopes and self._chain_deferred:
                 self._chain_deferred = False
                 self._commit_locked()
+            self._cv.notify_all()
 
     # Per-MEMBER bracketing inside a chain scope: the reservation estimate
     # is an upper bound only for literal payloads (a PrevResult-fed write's
@@ -190,15 +250,22 @@ class Journal:
     # io_uring link semantics, and no torn member can ever be committed.
     def chain_member_begin(self) -> None:
         with self._lock:
-            self._member_undo = {}
+            scope = self._chain_scopes.get(threading.get_ident())
+            if scope is not None:
+                scope.member_undo = {}
 
     def chain_member_end(self) -> None:
         with self._lock:
-            self._member_undo = None
+            scope = self._chain_scopes.get(threading.get_ident())
+            if scope is not None:
+                scope.member_undo = None
 
     def chain_member_abort(self) -> None:
         with self._lock:
-            undo, self._member_undo = self._member_undo, None
+            scope = self._chain_scopes.get(threading.get_ident())
+            if scope is None:
+                return
+            undo, scope.member_undo = scope.member_undo, None
             self._rollback_locked(undo)
 
     # --- op-scoped undo (non-chain reservations) ------------------------------------
@@ -206,9 +273,10 @@ class Journal:
         """Arm the undo log for one (sub-)operation's staging — called by
         the fs's ``_begin_op``. An overflow before the next scope rolls
         back to this point, so ENOSPC always means "nothing staged by the
-        failing (sub-)op" on the scalar and unchained paths too."""
+        failing (sub-)op" on the scalar and unchained paths too. The scope
+        is per-thread, like the chain scopes."""
         with self._lock:
-            self._op_undo = {}
+            self._op_undo[threading.get_ident()] = {}
 
     def _rollback_locked(self, undo: Optional[Dict[int, Optional[bytes]]]
                          ) -> None:
@@ -322,8 +390,6 @@ class Journal:
             self._seq = int(state.get("seq", 0))
             # chains never span an upgrade (the gate drains whole batches,
             # and a chain lives inside one batch) — reset defensively
-            self._in_chain = False
-            self._chain_owner = None
+            self._chain_scopes = {}
             self._chain_deferred = False
-            self._member_undo = None
-            self._op_undo = None
+            self._op_undo = {}

@@ -356,6 +356,14 @@ class PosixView:
                         resolved[i] = s
                     else:
                         norm[i] = (p, off, max(s - off, 0))
+        if not any(isinstance(r, FsError) for r in resolved):
+            # common case: everything resolved — build the entries in one
+            # comprehension instead of a per-slot closure call
+            return self._unwrap(
+                self._submit([SubmissionEntry("read", (r, off, sz),
+                                              user_data=p)
+                              for r, (p, off, sz) in zip(resolved, norm)]),
+                strict)
         return self._submit_sparse(
             resolved,
             lambda i: SubmissionEntry("read",

@@ -264,7 +264,8 @@ class ProvFilesystem(BentoFilesystem):
         in ``prov_stats["rotations"]``. Callers hold oplock + _plock."""
         j = self.journal
         if (self.rotate_bytes <= 0 or self._log_size <= self.rotate_bytes
-                or self._log_ino == 0 or (j is not None and j.in_chain)):
+                or self._log_ino == 0
+                or (j is not None and j.in_chain_here)):
             return
         if self._line_index is None:
             self._rescan()
@@ -326,14 +327,14 @@ class ProvFilesystem(BentoFilesystem):
         if j is None or oplock is None:
             yield
             return
-        # take the fs lock BEFORE inspecting chain state: a concurrent
-        # submitter's chain scope holds this lock for its whole extent, so
-        # once acquired, in_chain can only mean OUR thread's scope — the
-        # unlocked check would race and silently skip the one-txn guarantee
+        # take the fs lock BEFORE inspecting chain state — and ask about
+        # THIS thread's chain scope specifically (in_chain_here): with
+        # sharded lock domains another thread's chain can be open
+        # concurrently, and it must not suppress our one-txn scope
         oplock.acquire()
         opened = False
         try:
-            if not j.in_chain:
+            if not j.in_chain_here:
                 est = (getattr(self.inner, "_CHAIN_OP_BLOCKS", {})
                        .get(op, 16) + self._append_blocks(1))
                 try:
@@ -538,6 +539,20 @@ class ProvFilesystem(BentoFilesystem):
 
     def chain_end(self) -> None:
         self.inner.chain_end()
+
+    # --- lock-domain hooks: scheduling delegates to the inner fs ---------------------
+    def group_footprint(self, entries):
+        """Parallel-drain footprint — the inner module's own estimate.
+        Every mutating group carries the inner fs's ALLOC domain, which
+        also serializes this layer's log appends (the log inode is not in
+        any footprint, but only ALLOC holders write it); read_provenance
+        is unknown to the inner estimator and maps to None, the global
+        exclusive lock."""
+        fn = getattr(self.inner, "group_footprint", None)
+        return fn(entries) if fn is not None else None
+
+    def domain_scope(self, footprint):
+        return self.inner.domain_scope(footprint)
 
     # --- the query op -----------------------------------------------------------------
     def _rescan(self) -> None:

@@ -85,9 +85,16 @@ def test_release_drops_refs_and_frees_last():
         v.unlink("/one")                  # last refs: really freed
         mf.mount.module.flush()
         # free count returns to the post-attach baseline (the index file
-        # itself predates free0): nothing leaked, nothing double-freed
-        assert v.statfs()["free_blocks_est"] == free0
-        assert not _store(mf).refcnt
+        # itself predates free0): nothing leaked, nothing double-freed.
+        # Churn may additionally have PUNCHED now-dead index blocks back
+        # to the allocator (compaction), each one raising free by one —
+        # account for the net index shrinkage explicitly.
+        sf = v.statfs()
+        store = _store(mf)
+        punched = len(store._table_blocks) - sf["dedup_index_blocks"]
+        assert punched >= 0
+        assert sf["free_blocks_est"] == free0 + punched
+        assert not store.refcnt
     finally:
         mf.close()
 
@@ -172,6 +179,153 @@ def test_per_submitter_attribution():
         assert all(c.ok for c in comps)
         per = _store(mf).stats["by_submitter"]
         assert per.get("alice", {}).get("blocks", 0) >= 2
+    finally:
+        mf.close()
+
+
+def _blocks(tag, n):
+    """n blocks of 4096B each, globally unique content (no self-dedup)."""
+    return b"".join((tag + i).to_bytes(4, "big") * 1024 for i in range(n))
+
+
+def _full_walk(fs):
+    """Walk every inode and rebuild, from metadata alone, the per-block
+    file reference map and the full reachable set (meta blocks included)
+    — the ground truth the statfs estimates are asserted against."""
+    import repro.fs.layout as L
+
+    store, geo = fs._blockstore, fs.geo
+    refs, reachable = {}, set()
+    for ino in range(1, geo.ninodes):
+        di = fs._iget(ino)
+        if di.type not in (L.T_FILE, L.T_DIR):
+            continue
+        counted = di.type == L.T_FILE and ino != store.table_ino
+        cache = {}
+        for bn in range((di.size + L.BSIZE - 1) // L.BSIZE):
+            b = fs._bmap_ro(di, bn, cache)
+            if b == 0:
+                continue
+            reachable.add(b)
+            if counted:
+                refs[b] = refs.get(b, 0) + 1
+        l1, l2 = di.addrs[L.NDIRECT], di.addrs[L.NDIRECT + 1]
+        if l1:
+            reachable.add(l1)
+        if l2:
+            reachable.add(l2)
+            with fs._bread(l2) as bh:
+                raw = bytes(bh.data())
+            for k in range(L.NINDIRECT):
+                p = int.from_bytes(raw[4 * k: 4 * k + 4], "little")
+                if p:
+                    reachable.add(p)
+    return refs, reachable
+
+
+@pytest.mark.parametrize("kind", DEDUP_KINDS)
+def test_free_estimates_match_full_walk_through_churn(kind):
+    """The dedup-aware statfs bugfix, asserted against ground truth:
+    ``free_blocks_est`` (physical, bitmap view) must equal data blocks
+    minus everything reachable from some inode, and
+    ``free_blocks_logical_est`` must add back exactly what sharing saved
+    (walked refs minus unique blocks) — before churn, during sharing,
+    and after a delete/overwrite churn cycle."""
+    mf = _mount(kind)
+    try:
+        v, fs = mf.view, mf.mount.module
+
+        def check():
+            fs.flush()
+            sf = v.statfs()
+            refs, reachable = _full_walk(fs)
+            assert sf["free_blocks_est"] == \
+                sf["data_blocks"] - len(reachable), "physical est drifted"
+            saved = sum(refs.values()) - len(refs)
+            assert sf["dedup_saved_blocks"] == saved
+            assert sf["free_blocks_logical_est"] == \
+                sf["free_blocks_est"] + saved, "logical est drifted"
+
+        check()                               # empty fs
+        v.write_file("/a", A + B + A)
+        v.fsync("/a")
+        v.write_file("/b", A + C)
+        v.fsync("/b")
+        check()                               # sharing active
+        v.unlink("/a")
+        v.write_file("/b", C + C + B, create=False)
+        v.fsync("/b")
+        for i in range(6):
+            v.write_file(f"/t{i}", _blocks(i << 20, 2))
+            v.fsync(f"/t{i}")
+        for i in range(6):
+            v.unlink(f"/t{i}")
+        check()                               # after churn
+    finally:
+        mf.close()
+
+
+def test_index_compaction_punches_dead_block_and_remats():
+    """Sustained churn that kills every live record in a table block must
+    PUNCH it back to the allocator inside the churn op's own transaction
+    (compactions stat, index-block count drops, hole sentinel in the
+    table map), and a later write into the punched range must
+    REMATERIALIZE the block transparently — with the free estimates
+    matching a full walk across both transitions."""
+    mf = _mount()
+    try:
+        v, fs, store = mf.view, mf.mount.module, _store(mf)
+
+        def walk_free():
+            sf = v.statfs()
+            _, reachable = _full_walk(fs)
+            assert sf["free_blocks_est"] == sf["data_blocks"] - len(reachable)
+            return sf
+
+        v.write_file("/churn", _blocks(0, 48))
+        v.fsync("/churn")
+        assert not store.compaction_due()     # everything still live
+        nidx0 = v.statfs()["dedup_index_blocks"]
+        v.unlink("/churn")                    # last live records die
+        fs.flush()
+        assert store.stats["compactions"] >= 1, "churn never compacted"
+        assert store._table_blocks[0] == 0    # punched hole sentinel
+        sf = walk_free()
+        assert sf["dedup_index_blocks"] < nidx0
+        assert sf["dedup_compactions"] == store.stats["compactions"]
+        v.write_file("/re", _blocks(1 << 16, 8))   # back into the hole
+        v.fsync("/re")
+        assert store.stats["remats"] >= 1, "write onto hole never remat'd"
+        assert store._table_blocks[0] != 0
+        assert v.read_file("/re") == _blocks(1 << 16, 8)
+        walk_free()
+    finally:
+        mf.close()
+
+
+def test_compacted_index_survives_cold_remount():
+    """A punched table block is durable on-device state: a second module
+    booted cold must re-derive the same hole map (``_bmap_ro`` returns 0
+    for the punched lbn) and identical refcounts and hashes."""
+    mf = _mount()
+    try:
+        v, fs1 = mf.view, mf.mount.module
+        v.write_file("/keep", _blocks(7 << 20, 3))
+        v.fsync("/keep")
+        # span past table block 0 (which /keep holds live) so the churn
+        # file is the only thing live in table block 1
+        v.write_file("/churn", _blocks(0, 560))
+        v.fsync("/churn")
+        v.unlink("/churn")
+        fs1.flush()
+        store = _store(mf)
+        assert store.stats["compactions"] >= 1
+        assert 0 in store._table_blocks      # a durable punched hole
+        fs2 = Xv6FileSystem(Xv6Options(dedup=True))
+        fs2.init(mf.services.superblock(), mf.services)
+        assert fs2._blockstore._table_blocks == store._table_blocks
+        assert fs2._blockstore.refcnt == store.refcnt
+        assert fs2._blockstore.hashval == store.hashval
     finally:
         mf.close()
 

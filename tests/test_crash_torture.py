@@ -22,7 +22,8 @@ from repro.core.interface import (Errno, PrevResult, ROOT_INO, SQE_LINK,
                                   SubmissionEntry)
 from repro.fs.crashsim import (CrashSim, all_or_nothing, chain_workload,
                                quick_points, torture_chain, torture_dedup,
-                               torture_fuse, torture_prov,
+                               torture_dedup_churn, torture_fuse,
+                               torture_parallel, torture_prov,
                                torture_prov_chain, torture_rename)
 from repro.fs.ext4like import Ext4LikeFileSystem
 from repro.fs.xv6 import Xv6FileSystem, Xv6Options
@@ -563,3 +564,55 @@ def test_dedup_refcount_torture_exhaustive_scaled(kind):
 
     sim = CrashSim(_dedup_factory(kind), nlog=64)
     assert sim.sweep(workload, _dedup_audit, setup=setup) > 50
+
+
+# --- index compaction under churn: punch + remat crash-proven --------------------
+
+
+@pytest.mark.parametrize("kind", ["xv6", "ext4like"])
+def test_dedup_index_compaction_churn_quick_subset(kind):
+    """Sustained create/delete churn drives the dedup index through a
+    compaction PUNCH (fully-dead table block returned to the allocator)
+    and a REMATERIALIZATION (a record landing on the punched hole), with
+    the refcount-exact audit at a bounded crash-point subset. The golden
+    run asserts both transitions fire — a sweep that never compacts
+    proves nothing."""
+    assert torture_dedup_churn(kind, quick=True) > 10
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("kind", ["xv6", "ext4like"])
+def test_dedup_index_compaction_churn_every_crash_point(kind):
+    assert torture_dedup_churn(kind) > 100
+
+
+# --- concurrent lock domains: parallel drain vs serial, every power-loss point ---
+
+
+@pytest.mark.parametrize("kind", ["xv6", "ext4like"])
+def test_parallel_drain_byte_identical_quick_subset(kind):
+    """One mutating chain + three read-only submitters on disjoint inode
+    stripes, drained through the footprint-scheduled worker pool: at a
+    bounded subset of power-loss points the recovered device image is
+    byte-identical to the serial drain's and the chain stays
+    all-or-nothing (CI smoke; exhaustive behind --runslow)."""
+    assert torture_parallel(kind, quick=True) > 5
+
+
+def test_parallel_drain_dedup_mount_quick_subset():
+    """Same differential on a dedup mount, where every footprint carries
+    the BLOCKSTORE domain: the degenerate fully-serialized schedule must
+    also reproduce the serial drain's image at every sampled point."""
+    assert torture_parallel("xv6", quick=True, dedup=True) > 5
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("kind", ["xv6", "ext4like"])
+def test_parallel_drain_byte_identical_every_crash_point(kind):
+    assert torture_parallel(kind) > 30
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("kind", ["xv6", "ext4like"])
+def test_parallel_drain_dedup_every_crash_point(kind):
+    assert torture_parallel(kind, dedup=True) > 30

@@ -186,10 +186,12 @@ def _thread_program(v, t):
     assert all(s.nlink == 1 for s in stats)
 
 
-@pytest.mark.parametrize("sqpoll", [False, True])
+@pytest.mark.parametrize("sqpoll", [False, True, "parallel"])
 def test_threaded_equals_sequential_tree(sqpoll):
     mf = make_mount("bento", n_blocks=8192)
-    if sqpoll:
+    if sqpoll == "parallel":
+        mf.mount.start_sqpoll(parallel=4)   # footprint-scheduled workers
+    elif sqpoll:
         mf.mount.start_sqpoll()
     errors = []
 
@@ -527,6 +529,124 @@ def test_sqpoll_adaptive_idle_decays_then_frozen_pileup_restores():
             assert results[t][0].ok and results[t][0].result == b"a"
     finally:
         m.stop_sqpoll()
+    mf.close()
+
+
+# --- SQPOLL backlog must skip the gather window (starvation fix) ------------------
+
+
+def test_sqpoll_backlog_skips_gather_window():
+    """The drainer-starvation fix, pinned deterministically: a submission
+    already pending when the poller checks its queue must be drained
+    IMMEDIATELY — the gather window exists to let a batch accumulate, but
+    sleeping it when a backlog has already accumulated just starves the
+    waiting submitters. Pre-stage a pending submission, then start the
+    poller with an absurd 5-second window: the backlog path must skip
+    the sleep (counter increments) and complete promptly. The pre-fix
+    loop slept the full window here and this test timed out."""
+    from repro.core.registry import _PendingSubmission
+
+    mf = make_mount("bento", n_blocks=2048)
+    m = mf.mount
+    sub = _PendingSubmission([SubmissionEntry("statfs", (),
+                                              user_data="backlog")])
+    with m._mq_cv:
+        m._mq_pending.append(sub)
+    k0 = m.mq_gather_skips
+    t0 = time.time()
+    m.start_sqpoll(idle_us=5_000_000, adaptive=False)
+    try:
+        _wait_until(lambda: sub.comps is not None or sub.error is not None,
+                    timeout=2.0)
+        assert time.time() - t0 < 2.0  # never slept the 5s window
+        assert sub.error is None
+        assert sub.comps[0].ok and sub.comps[0].user_data == "backlog"
+        assert m.mq_gather_skips - k0 == 1
+    finally:
+        m.stop_sqpoll()
+    mf.close()
+
+
+def test_sqpoll_idle_queue_still_gathers():
+    """The complement: with NO backlog at wake-up the gather window still
+    applies (lone submissions coalesce opportunistically), so the skip
+    counter stays put on an idle→submit→drain round trip."""
+    mf = make_mount("bento", n_blocks=2048)
+    m = mf.mount
+    m.start_sqpoll(idle_us=200, adaptive=False)
+    try:
+        time.sleep(0.1)   # let the poller settle into its idle wait
+        k0 = m.mq_gather_skips
+        assert m.submit([SubmissionEntry("statfs", ())])[0].ok
+        assert m.mq_gather_skips == k0
+    finally:
+        m.stop_sqpoll()
+    mf.close()
+
+
+# --- parallel drain: worker pool behind the drainer's single crossing -------------
+
+
+def test_parallel_drain_pool_correctness_and_lifecycle():
+    """4 submitters pile up behind a frozen gate; the thaw drains them
+    through the footprint-scheduled worker pool. Completions and data
+    must be exact, the gate is still crossed once per drain (workers run
+    INSIDE the drainer's crossing, never their own), and unmount retires
+    the pool."""
+    mf = make_mount("bento", n_blocks=8192)
+    m = mf.mount
+    m.enable_parallel_drain(4)
+    assert m._drain_pool is not None
+    v = mf.view
+    v.write_file("/f", b"d" * (8 * 4096))
+    v.fsync("/f")
+    ino = v.stat("/f").ino
+    m.gate.freeze()
+    s0, g0, d0 = m.mq_submissions, m.gate.crossings, m.mq_drains
+    results = {}
+
+    def worker(t):
+        if t == 0:   # one mutating chain among read-only submitters
+            results[t] = m.submit([
+                SubmissionEntry("create", (1, "n0"), user_data="c",
+                                flags=SQE_LINK),
+                SubmissionEntry("write", (PrevResult("ino"), 0,
+                                          b"x" * 3000), user_data="w"),
+            ])
+        else:
+            results[t] = m.submit(
+                [SubmissionEntry("read", (ino, i * 4096, 4096),
+                                 user_data=(t, i)) for i in range(8)])
+
+    threads = [threading.Thread(target=worker, args=(t,), daemon=True)
+               for t in range(4)]
+    for t in threads:
+        t.start()
+    _wait_until(lambda: m.mq_submissions - s0 == 4)
+    time.sleep(0.05)
+    m.gate.thaw()
+    _join_all(threads)
+    assert m.mq_drains - d0 <= 2, "pileup did not coalesce"
+    assert m.gate.crossings - g0 <= 2, "a drain worker crossed the gate"
+    assert all(c.ok for c in results[0]), results[0]
+    for t in (1, 2, 3):
+        assert [c.user_data for c in results[t]] == \
+            [(t, i) for i in range(8)]
+        assert all(c.ok and c.result == b"d" * 4096 for c in results[t])
+    assert v.read_file("/n0") == b"x" * 3000
+    mf.close()                       # unmount retires the drain workers
+    assert m._drain_pool is None
+
+
+def test_enable_parallel_drain_zero_disables():
+    mf = make_mount("bento", n_blocks=2048)
+    m = mf.mount
+    m.enable_parallel_drain(4)
+    assert m._drain_pool is not None
+    m.enable_parallel_drain(0)
+    assert m._drain_pool is None and not m._drain_tids
+    # still serves serially afterwards
+    assert m.submit([SubmissionEntry("statfs", ())])[0].ok
     mf.close()
 
 
