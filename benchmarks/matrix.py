@@ -16,7 +16,7 @@ Output: ``BENCH_<pr>.json`` — ``{"meta", "runs", "summary"}`` where
 ``summary`` one aggregate per cell. CI and later perf PRs diff summaries;
 the runs stay for re-analysis.
 
-CLI:  PYTHONPATH=src python -m benchmarks.matrix --out BENCH_7.json
+CLI:  PYTHONPATH=src python -m benchmarks.matrix --out BENCH_8.json
       [--reps 5] [--quick] [--fuse] [--seed 7]
 """
 
@@ -43,10 +43,12 @@ KIND_ARGS = {
     "prov-bento": ("bento", True),
     "dedup-bento": ("dedup-bento", False),
     "dedup-ext4like": ("dedup-ext4like", False),
+    "overlay-bento": ("overlay-bento", False),
+    "overlay-ext4like": ("overlay-ext4like", False),
     "fuse": ("fuse", False),
 }
 DEFAULT_KINDS = ("bento", "vfs", "ext4like", "prov-bento",
-                 "dedup-bento", "dedup-ext4like")
+                 "dedup-bento", "dedup-ext4like", "overlay-bento")
 MODES = ("scalar", "batched", "chained", "sqpoll")
 THREADS = (1, 4, 8)
 # sqpoll cells need the gated multi-submitter mount; the VFS-direct
@@ -183,7 +185,7 @@ def run_matrix(kinds=DEFAULT_KINDS, *, reps: int = 5, ops: int = 512,
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--out", default="BENCH_7.json")
+    ap.add_argument("--out", default="BENCH_8.json")
     ap.add_argument("--reps", type=int, default=5)
     ap.add_argument("--ops", type=int, default=512,
                     help="per-thread op budget of one short run")

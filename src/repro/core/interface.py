@@ -76,6 +76,7 @@ import concurrent.futures
 import dataclasses
 import enum
 import inspect
+import time
 from typing import Any, Dict, Iterable, List, Optional, Tuple
 
 from repro.core.capability import SuperBlockCap
@@ -86,12 +87,14 @@ class Errno(enum.IntEnum):
     ENOENT = 2
     EIO = 5
     EEXIST = 17
+    EXDEV = 18  # overlay: rename would cross the base/upper "device" line
     ENOTDIR = 20
     EISDIR = 21
     EINVAL = 22
     EFBIG = 27
     ENOSPC = 28
     ENOTEMPTY = 39
+    ETIME = 62  # linked timeout fired: its chain's deadline passed
     ESTALE = 116
     ECANCELED = 125  # chained entry cancelled: an earlier link failed
 
@@ -141,6 +144,24 @@ BATCHABLE_OPS = frozenset(FS_OPS)
 
 # SubmissionEntry.flags bits (io_uring IOSQE_* analogues).
 SQE_LINK = 0x1   # link the NEXT entry into this entry's chain
+SQE_LINK_TIMEOUT = 0x4  # this entry is a deadline guard for its chain
+#   (io_uring IOSQE_IO_LINK + link-timeout SQE): args=(monotonic_deadline,)
+#   where the deadline is a ``time.monotonic()`` timestamp. The entry is
+#   never dispatched to the module; conventionally its op is
+#   "link_timeout" (rejected EINVAL by modules, so a stray flagless copy
+#   fails loudly). If the deadline has already passed when the chain
+#   DRAINS, the whole chain is refused before anything is staged: the
+#   timeout entry completes ``Errno.ETIME`` and every other member
+#   ``ECANCELED``. If the deadline passes between members (this executor
+#   is synchronous, so that is the only other observation point), the
+#   remaining members are cancelled the same way. Otherwise the chain
+#   runs to completion and the timeout entry completes with result 0,
+#   io_uring's "timeout cancelled because the link finished first". A
+#   guard is invisible to ``PrevResult`` data flow: ``back`` counts REAL
+#   members only, so an op right after the guard still reads the op
+#   right before it with the default back=1. The
+#   flag is only meaningful inside a chain — a bare flagged entry reaches
+#   the module as an ordinary op and EINVALs on the conventional opname.
 SQE_DRAIN = 0x2  # barrier: run only after ALL prior entries in the batch
 #   completed (io_uring IOSQE_IO_DRAIN). In this synchronous executor every
 #   entry already completes before the next starts; the observable effect is
@@ -267,25 +288,71 @@ def _run_chain(submit_batch, group, chain_begin, chain_end
                ) -> List["CompletionEntry"]:
     """Execute ONE chain group member-by-member under the module's chain
     reservation scope — the single implementation of the SQE_LINK rules
-    shared by ``execute_batch`` and ``execute_multi_batch``."""
+    (including SQE_LINK_TIMEOUT deadline guards) shared by
+    ``execute_batch`` and ``execute_multi_batch``."""
+    has_timeout = any(e.flags & SQE_LINK_TIMEOUT for e in group)
+    deadline = None
+    if has_timeout:
+        ds = [e.args[0] for e in group
+              if e.flags & SQE_LINK_TIMEOUT and e.args
+              and isinstance(e.args[0], (int, float))
+              and not isinstance(e.args[0], bool)]
+        deadline = min(ds) if ds else None
+        if deadline is not None and time.monotonic() >= deadline:
+            # expired before the drain reached this chain: refuse it whole
+            # with nothing staged (no chain_begin, no journal reservation)
+            return [CompletionEntry(e.user_data, errno=(
+                        Errno.ETIME if e.flags & SQE_LINK_TIMEOUT
+                        else Errno.ECANCELED)) for e in group]
+    members = ([e for e in group if not (e.flags & SQE_LINK_TIMEOUT)]
+               if has_timeout else group)
     if chain_begin is not None:
-        err = chain_begin(group)
+        err = chain_begin(members)
         if err is not None:  # chain can never fit: nothing was staged
             return ([CompletionEntry(group[0].user_data, errno=err)]
                     + [CompletionEntry(e.user_data, errno=Errno.ECANCELED)
                        for e in group[1:]])
     done: List[CompletionEntry] = []
+    # guards are timers, not data producers: PrevResult resolves against
+    # the completions of REAL members only, so ``back=1`` after a guard
+    # still names the op before it (io_uring's timeout SQE is likewise
+    # invisible to the data flow of its link chain)
+    data_done: List[CompletionEntry] = []
+    expired = False
     try:
         for e in group:
-            if done and not done[-1].ok:
+            is_guard = bool(e.flags & SQE_LINK_TIMEOUT)
+            # every entry (guards included) observes the clock at its
+            # position: a guard reached after the deadline passed reports
+            # ETIME itself rather than letting a later member's ECANCELED
+            # contradict a "timer cancelled" completion
+            if not expired and deadline is not None \
+                    and time.monotonic() >= deadline:
+                expired = True
+            if is_guard:
+                if expired:
+                    done.append(CompletionEntry(e.user_data,
+                                                errno=Errno.ETIME))
+                elif done and not done[-1].ok:
+                    done.append(CompletionEntry(e.user_data,
+                                                errno=Errno.ECANCELED))
+                elif not (e.args and isinstance(e.args[0], (int, float))
+                          and not isinstance(e.args[0], bool)):
+                    done.append(CompletionEntry(e.user_data,
+                                                errno=Errno.EINVAL))
+                else:  # the chain beat its deadline: timeout cancelled
+                    done.append(CompletionEntry(e.user_data, result=0))
+                continue
+            if expired or (done and not done[-1].ok):
                 done.append(CompletionEntry(e.user_data,
                                             errno=Errno.ECANCELED))
                 continue
-            resolved = _resolve_placeholders(e, done)
+            resolved = _resolve_placeholders(e, data_done)
             if isinstance(resolved, CompletionEntry):
                 done.append(resolved)
             else:
                 done.append(submit_batch([resolved])[0])
+            data_done.append(done[-1])
     finally:
         if chain_end is not None:
             chain_end()

@@ -99,34 +99,56 @@ class BufferCache:
     def bread_many(self, blocknos, fetched=None) -> List[BufferHead]:
         """Read many blocks under ONE lock acquisition (the batched-boundary
         analogue of plugging a bio list): same semantics as bread per block,
-        heads returned in the order requested. All-or-nothing: a device
-        error mid-batch releases the refs already taken before re-raising,
-        so a failed bulk read can never strand pinned buffers.
+        heads returned in the order requested. All-or-nothing: the miss
+        run hits the device BEFORE any ref is taken, so a failed bulk read
+        can never strand pinned buffers.
 
         ``fetched`` (optional list) collects the blocknos that actually hit
         the DEVICE this call — the verified-read path (repro.fs.blockstore)
         re-hashes exactly those, never cache hits it already vouched for."""
+        if not isinstance(blocknos, list):
+            blocknos = list(blocknos)
         out: List[BufferHead] = []
         with self._lock:
+            # warm fast path: serve hits with exactly bread's per-block
+            # cost until the first miss — the all-cached case (the steady
+            # state of every benchmark loop) never pays for miss plumbing
+            for blockno in blocknos:
+                buf = self._blocks.get(blockno)
+                if buf is None:
+                    break
+                self.hits += 1
+                self._blocks.move_to_end(blockno)
+                self._refs[blockno] += 1
+                out.append(BufferHead(blockno, buf, self))
+            else:
+                return out
+            # cold suffix: the remaining miss run hits the device as ONE
+            # call, so a lazy device materializes the whole run in a
+            # single provider round-trip instead of one fetch per block
+            rest = blocknos[len(out):]
+            missing = [b for b in dict.fromkeys(rest)
+                       if b not in self._blocks]
             try:
-                for blockno in blocknos:
-                    buf = self._blocks.get(blockno)
-                    if buf is None:
-                        self.misses += 1
-                        buf = bytearray(self.dev.read_block(blockno))
-                        self._insert(blockno, buf)
-                        if fetched is not None:
-                            fetched.append(blockno)
-                    else:
-                        self.hits += 1
-                        self._blocks.move_to_end(blockno)
-                    self._refs[blockno] += 1
-                    out.append(BufferHead(blockno, buf, self))
+                prefetched = dict(zip(missing, self.dev.read_many(missing)))
             except BaseException:
                 for bh in out:  # clean (never dirtied) — just unpin
                     bh._held = False
                     self._refs[bh.blockno] -= 1
                 raise
+            for blockno in rest:
+                buf = self._blocks.get(blockno)
+                if buf is None:
+                    self.misses += 1
+                    buf = bytearray(prefetched[blockno])
+                    self._insert(blockno, buf)
+                    if fetched is not None:
+                        fetched.append(blockno)
+                else:
+                    self.hits += 1
+                    self._blocks.move_to_end(blockno)
+                self._refs[blockno] += 1
+                out.append(BufferHead(blockno, buf, self))
         return out
 
     def getblk_zero(self, blockno: int) -> BufferHead:

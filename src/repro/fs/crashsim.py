@@ -37,7 +37,8 @@ import dataclasses
 from typing import Callable, Iterable, List, Optional, Sequence
 
 from repro.core.services import kernel_binding
-from repro.fs.blockdev import BlockDeviceError, MemBlockDevice
+from repro.fs.blockdev import (BlockDeviceError, LazyBlockDevice,
+                               MemBlockDevice)
 from repro.fs.mounts import DirectMount
 from repro.fs.posix import PosixView
 from repro.fs.xv6 import mkfs
@@ -84,12 +85,19 @@ class CrashSim:
 
     def __init__(self, fs_factory: Callable[[], object], *,
                  n_blocks: int = 2048, ninodes: int = 256, nlog: int = 32,
-                 writeback: str = "delayed"):
+                 writeback: str = "delayed",
+                 device_factory: Optional[Callable[[], object]] = None,
+                 format_device: bool = True):
         self.fs_factory = fs_factory
         self.n_blocks = n_blocks
         self.ninodes = ninodes
         self.nlog = nlog
         self.writeback = writeback
+        # non-default devices (a LazyBlockDevice over a golden image) plug
+        # in here; format_device=False skips mkfs for devices whose
+        # provider already carries a formatted image
+        self.device_factory = device_factory
+        self.format_device = format_device
 
     # --- plumbing -------------------------------------------------------------------
     def _mount(self, dev: MemBlockDevice) -> CrashCtx:
@@ -107,9 +115,11 @@ class CrashSim:
         non-crash setups too): fresh device + mkfs + mount + durable
         setup, write counter armed at zero so crash points index workload
         writes only."""
-        dev = MemBlockDevice(self.n_blocks)
-        ks = kernel_binding(dev, writeback=self.writeback)
-        mkfs(ks, ninodes=self.ninodes, nlog=self.nlog)
+        dev = (MemBlockDevice(self.n_blocks) if self.device_factory is None
+               else self.device_factory())
+        if self.format_device:
+            ks = kernel_binding(dev, writeback=self.writeback)
+            mkfs(ks, ninodes=self.ninodes, nlog=self.nlog)
         ctx = self._mount(dev)
         if setup is not None:
             setup(ctx)
@@ -816,6 +826,154 @@ def torture_parallel(kind: str = "xv6", *, quick: bool = False,
     return len(list(points))
 
 
+# --- lazy-materialization + overlay tortures (repro.fs.blockdev / .overlay) ------
+
+
+def _golden_image(kind: str, populate, *, n_blocks: int = 2048,
+                  ninodes: int = 256, nlog: int = 32) -> MemBlockDevice:
+    """A formatted, populated, CLEANLY unmounted image at the CrashSim
+    geometry — the provider a ``LazyBlockDevice`` fetches from. The clean
+    unmount matters: a provider image must never need recovery writes."""
+    dev = MemBlockDevice(n_blocks)
+    ks = kernel_binding(dev)
+    mkfs(ks, ninodes=ninodes, nlog=nlog)
+    fs = _fs_factory(kind)()
+    fs.init(ks.superblock(), ks)
+    m = DirectMount(fs)
+    populate(PosixView(m))
+    m.unmount()
+    return dev
+
+
+def torture_lazy(kind: str = "xv6", *, quick: bool = False) -> int:
+    """Sweep a read-then-mutate workload on an fs mounted directly ON a
+    ``LazyBlockDevice`` over a golden image, with power loss at every
+    LOCAL device write — which includes both halves of the 2-step
+    materialization protocol (data landing, valid-bit commit), so crash
+    points land BETWEEN them. The invariant: a half-materialized block is
+    NEVER visible — after remounting the SAME device (local store and
+    valid bitmap survive, like a disk), base content reads back exactly
+    (invalid blocks re-fetch from the provider), the mutation chain stays
+    all-or-nothing, and the provider image is never written."""
+    base_payload = b"G" * (3 * 4096 + 41)
+
+    def populate(view: PosixView) -> None:
+        view.write_file("/base", base_payload)
+
+    image = _golden_image(kind, populate)
+    image_writes0 = image.writes
+    image_bytes0 = image._data.tobytes()
+
+    new_payload = b"L" * (2 * 4096 + 17)
+    run_chain = chain_workload(new_payload)
+
+    def workload(ctx: CrashCtx) -> None:
+        # the read MATERIALIZES /base's blocks: counted local writes, so
+        # the sweep enumerates power loss inside the fetch protocol
+        got = ctx.view.read_file("/base")
+        assert got == base_payload, "golden read failed without a crash"
+        run_chain(ctx)
+
+    chk = all_or_nothing(new_payload)
+
+    def invariant(rec: Recovered) -> None:
+        assert isinstance(rec.dev, LazyBlockDevice)
+        got = rec.view.read_file("/base")
+        assert got == base_payload, (
+            f"half-materialized base content visible: /base has "
+            f"{len(got)}B, {sum(a != b for a, b in zip(got, base_payload))}"
+            f" bytes differ")
+        chk(rec)
+        assert image.writes == image_writes0, \
+            "the provider image took a write"
+
+    sim = CrashSim(
+        _fs_factory(kind), format_device=False,
+        device_factory=lambda: LazyBlockDevice(
+            image, n_blocks=image.n_blocks, device_id="lazy-torture"))
+    n = sim.sweep(workload, invariant, quick=quick)
+    assert image._data.tobytes() == image_bytes0, \
+        "the provider image was dirtied during the sweep"
+    return n
+
+
+def torture_overlay(kind: str = "xv6", *, quick: bool = False) -> int:
+    """Sweep the overlay-specific multi-step mutations — whiteout,
+    create-over-whiteout, copy-up overwrite, copy-up + rename — on a CoW
+    tenant (writable upper, lazy immutable base) with power loss at every
+    UPPER device write. At every point the merged view must show each
+    name old-XOR-new (a deleted base name never resurrects half-way, a
+    copied-up file is never torn between base and upper content, a
+    renamed name never exists on both sides), no copy-up temp file is
+    ever visible, and the shared base image stays byte-identical."""
+    from repro.fs.mounts import build_base_image
+    from repro.fs.overlay import COWTMP_PREFIX, OverlayFilesystem, \
+        OverlayOptions
+
+    image = build_base_image(kind, n_blocks=2048)
+    image_writes0 = image.writes
+    image_bytes0 = image._data.tobytes()
+
+    BASE_MOTD = b"welcome to the base image\n"
+    BASE_HOST = b"golden\n"
+    BASE_README = b"base readme\n"
+    BASE_WORDS = b"alpha beta gamma delta\n" * 64
+    NEW_MOTD = b"tenant motd, reborn over the whiteout\n"
+    NEW_HOST = b"tenant-hostname-longer-than-the-golden-one\n"
+
+    def factory():
+        lazy = LazyBlockDevice(image, n_blocks=image.n_blocks,
+                               device_id="lazy-base", immutable_base=True)
+        return OverlayFilesystem(OverlayOptions(kind=kind, base_dev=lazy))
+
+    def workload(ctx: CrashCtx) -> None:
+        v = ctx.view
+        v.unlink("/etc/motd")                   # whiteout over a base name
+        v.write_file("/etc/motd", NEW_MOTD)     # create over the whiteout
+        v.write_file("/etc/hostname", NEW_HOST)  # copy-up overwrite
+        v.rename("/readme", "/readme2")         # copy-up + move + whiteout
+        ctx.fs.flush()
+
+    def invariant(rec: Recovered) -> None:
+        v = rec.view
+        # unlink → recreate: base content XOR gone XOR empty-new XOR new
+        # (write_file is create-then-write, so the fresh empty file is a
+        # legal intermediate; a torn HYBRID of base and new is not)
+        if v.exists("/etc/motd"):
+            motd = v.read_file("/etc/motd")
+            assert motd in (BASE_MOTD, b"", NEW_MOTD), \
+                f"torn whiteout/recreate: /etc/motd = {motd!r}"
+        else:
+            assert rec.crashed, "no crash, yet /etc/motd is missing"
+        # copy-up overwrite is ONE transaction: old XOR new content
+        host = v.read_file("/etc/hostname")
+        assert host in (BASE_HOST, NEW_HOST), \
+            f"half-copied-up file visible: /etc/hostname = {host!r}"
+        # copy-up + rename + source whiteout is ONE transaction: exactly
+        # one of the two names resolves, with the COMPLETE content
+        src, dst = v.exists("/readme"), v.exists("/readme2")
+        assert src != dst, (
+            "rename not atomic: /readme and /readme2 " +
+            ("both visible" if src else "both missing"))
+        assert v.read_file("/readme2" if dst else "/readme") == BASE_README
+        if not rec.crashed:  # control: every step must be durable
+            assert dst and motd == NEW_MOTD and host == NEW_HOST, \
+                "no crash, yet the workload's end state is not visible"
+        # a half-copied-up temp name must never appear in any listing
+        for d in ("/", "/etc"):
+            tmp = [n for n in v.listdir(d) if n.startswith(COWTMP_PREFIX)]
+            assert not tmp, f"copy-up temp visible in {d}: {tmp}"
+        # untouched base names still merge intact (re-fetch path)
+        assert v.read_file("/usr/share/words") == BASE_WORDS
+        # the shared base image is immutable — never even one write
+        assert image.writes == image_writes0, "base image took a write"
+        assert image._data.tobytes() == image_bytes0, "base image dirtied"
+        v.statfs()
+
+    sim = CrashSim(factory, nlog=64)
+    return sim.sweep(workload, invariant, quick=quick)
+
+
 def main() -> None:
     import argparse
 
@@ -837,6 +995,12 @@ def main() -> None:
                          "the index compaction/remat path under churn")
     ap.add_argument("--no-parallel", action="store_true",
                     help="skip the parallel-drain differential sweep")
+    ap.add_argument("--lazy", action="store_true",
+                    help="also torture the lazy-materialization protocol "
+                         "(power loss inside the 2-step block fetch)")
+    ap.add_argument("--overlay", action="store_true",
+                    help="also torture CoW overlay tenants (whiteouts, "
+                         "copy-up, rename — old-XOR-new at every point)")
     args = ap.parse_args()
     kinds = ["xv6", "ext4like"] if args.kind == "both" else [args.kind]
     mode = "quick subset" if args.quick else "exhaustive"
@@ -858,6 +1022,14 @@ def main() -> None:
             n = torture_parallel(kind, quick=args.quick)
             print(f"crashsim {kind}: parallel drain byte-identical to "
                   f"serial at {n} crash points ({mode}) — OK")
+        if args.lazy:
+            n = torture_lazy(kind, quick=args.quick)
+            print(f"crashsim {kind}: no half-materialized block visible, "
+                  f"provider untouched at {n} crash points ({mode}) — OK")
+        if args.overlay:
+            n = torture_overlay(kind, quick=args.quick)
+            print(f"crashsim {kind}: overlay whiteout/copy-up/rename "
+                  f"old-XOR-new at {n} crash points ({mode}) — OK")
         if args.dedup:
             n = torture_dedup(kind, quick=args.quick)
             print(f"crashsim {kind}: dedup index refcount-exact (+no "

@@ -168,11 +168,20 @@ class Ext4LikeFileSystem(Xv6FileSystem):
 
     def _dirlookup(self, dino: int, di: L.DiskInode, name: str):
         hit = self._index(dino, di).get(name)
+        if hit is not None and hit[2] == L.WHITEOUT_INO:
+            return None  # overlay delete marker: the name reads as absent
         return hit if hit is not None else None
 
     def _dirlink(self, dino: int, name: str, ino: int) -> None:
         di = self._iget(dino)
         idx = self._index(dino, di)
+        hit = idx.get(name)
+        if hit is not None and hit[2] == L.WHITEOUT_INO:
+            # create-over-whiteout flips the delete marker's slot in place
+            # (same rule as xv6's scan path): one slot write, no duplicate
+            # whiteout+live records for the name
+            self._dir_set(dino, hit[0], hit[1], ino, name)
+            return
         # append at end (holes tracked lazily via index rebuild)
         bn = di.size // L.BSIZE
         off = di.size % L.BSIZE
@@ -231,7 +240,7 @@ class Ext4LikeFileSystem(Xv6FileSystem):
                     if pdi.type != L.T_DIR:
                         raise FsError(Errno.ENOTDIR, str(parent))
                     hit = self._index(parent, pdi).get(name)
-                    if hit is None:
+                    if hit is None or hit[2] == L.WHITEOUT_INO:
                         raise FsError(Errno.ENOENT, name)
                     ino = hit[2]
                     out.append(self._attr(ino, self._iget(ino)))

@@ -33,6 +33,14 @@ T_FREE, T_FILE, T_DIR = 0, 1, 2
 DIRENT_SIZE = 64
 NAME_MAX = DIRENT_SIZE - 4 - 1  # u32 ino + NUL
 
+# Whiteout sentinel for overlay mounts (fs/overlay.py): a dirent whose ino
+# field is this value records "NAME IS DELETED HERE" in a writable upper
+# directory, masking a same-named entry in the immutable base below. Plain
+# (non-overlay) mounts never create one; their namespace ops skip it like
+# a hole but never REUSE its slot for a different name (the overlay's
+# delete marker must not be silently evicted by an unrelated create).
+WHITEOUT_INO = 0xFFFFFFFF  # u32 max — can never collide with a real ino
+
 
 @dataclasses.dataclass
 class SuperBlock:

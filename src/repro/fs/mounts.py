@@ -18,9 +18,10 @@ from typing import Any, Callable, Dict
 from repro.core.interface import FS_OPS as _FS_OPS, execute_batch
 from repro.core.registry import Mount, mount as bento_mount
 from repro.core.services import kernel_binding, userspace_binding
-from repro.fs.blockdev import MemBlockDevice
+from repro.fs.blockdev import LazyBlockDevice, MemBlockDevice
 from repro.fs.ext4like import Ext4LikeFileSystem
 from repro.fs.fusebridge import FuseMount
+from repro.fs.overlay import OverlayFilesystem, OverlayOptions
 from repro.fs.posix import PosixView
 from repro.fs.xv6 import Xv6FileSystem, Xv6Options, mkfs
 
@@ -79,12 +80,25 @@ def make_mount(kind: str, n_blocks: int = 16384, *,
 
     ``dedup-bento`` / ``dedup-ext4like`` mount the same modules with the
     content-addressed blockstore enabled (repro.fs.blockstore) — plain
-    kinds stay bit-identical to the pre-blockstore format."""
+    kinds stay bit-identical to the pre-blockstore format.
+
+    ``overlay-bento`` / ``overlay-ext4like`` mount a CoW overlay tenant
+    (repro.fs.overlay): a small writable upper over a freshly built,
+    default-populated base image. Sharing ONE image across many tenants
+    (the provisioning story) goes through ``build_base_image`` +
+    ``overlay_tenant`` instead."""
     def _wrap(fs):
         if not prov:
             return fs
         from repro.fs.prov import ProvFilesystem
         return ProvFilesystem(fs)
+
+    if kind.startswith("overlay-"):
+        fs_kind = {"bento": "xv6", "ext4like": "ext4like"}[
+            kind[len("overlay-"):]]
+        image = build_base_image(fs_kind)
+        return overlay_tenant(image, fs_kind, kind=kind,
+                              n_blocks=n_blocks, prov=prov)
 
     dedup = kind.startswith("dedup-")
     base_kind = kind[len("dedup-"):] if dedup else kind
@@ -124,5 +138,63 @@ def make_mount(kind: str, n_blocks: int = 16384, *,
     raise KeyError(kind)
 
 
+# --- CoW overlay provisioning (repro.fs.overlay) ----------------------------------
+
+
+def default_base_populate(view: PosixView) -> None:
+    """The deterministic tree the default base image carries: a few dirs
+    and files with recognizable content, enough to exercise every merge
+    rule (lookup-through, copy-up, whiteouts, nested dirs)."""
+    view.mkdir("/etc")
+    view.mkdir("/usr")
+    view.mkdir("/usr/share")
+    view.write_file("/etc/hostname", b"golden\n")
+    view.write_file("/etc/motd", b"welcome to the base image\n")
+    view.write_file("/usr/share/words", b"alpha beta gamma delta\n" * 64)
+    view.write_file("/readme", b"base readme\n")
+
+
+def build_base_image(fs_kind: str = "xv6", n_blocks: int = 8192,
+                     populate=None) -> MemBlockDevice:
+    """Build ONE golden base image: mkfs, run ``populate(view)`` (default
+    tree when None), unmount cleanly. The returned device is the shared
+    read-only artifact every tenant's ``LazyBlockDevice`` fetches from —
+    the clean unmount matters, because an immutable base may never need
+    journal recovery writes."""
+    dev = MemBlockDevice(n_blocks)
+    ks = kernel_binding(dev)
+    mkfs(ks)
+    cls = Ext4LikeFileSystem if fs_kind == "ext4like" else Xv6FileSystem
+    fs = cls(Xv6Options(group_commit=True, batched_install=True))
+    m = bento_mount("base-image", ks, module=fs)
+    (populate or default_base_populate)(PosixView(m))
+    m.unmount()
+    return dev
+
+
+def overlay_tenant(image: MemBlockDevice, fs_kind: str = "xv6", *,
+                   kind: str = None, n_blocks: int = 4096,
+                   ninodes: int = 1024, prov: bool = False) -> MountedFs:
+    """Provision ONE tenant over a shared base image: a fresh small
+    upper device (mkfs'd) plus a per-tenant lazy immutable view of the
+    image — O(metadata), never a data copy. ``MountedFs.dev`` is the
+    UPPER device (the writable side fault injection arms)."""
+    upper_dev = MemBlockDevice(n_blocks)
+    ks = kernel_binding(upper_dev)
+    # a tenant upper holds deltas, not a whole tree: a smaller inode table
+    # keeps provisioning (per-tenant mkfs) O(small metadata)
+    mkfs(ks, ninodes=ninodes, nlog=64)
+    lazy = LazyBlockDevice(image, n_blocks=image.n_blocks,
+                           device_id="lazy-base", immutable_base=True)
+    fs = OverlayFilesystem(OverlayOptions(kind=fs_kind, base_dev=lazy))
+    if prov:
+        from repro.fs.prov import ProvFilesystem
+        fs = ProvFilesystem(fs)
+    m = bento_mount(kind or f"overlay-{fs_kind}", ks, module=fs)
+    return MountedFs(kind or f"overlay-{fs_kind}", m, PosixView(m), ks,
+                     upper_dev)
+
+
 ALL_KINDS = ("bento", "vfs", "fuse", "ext4like")
 DEDUP_KINDS = ("dedup-bento", "dedup-ext4like")
+OVERLAY_KINDS = ("overlay-bento", "overlay-ext4like")

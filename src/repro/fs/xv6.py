@@ -1182,6 +1182,8 @@ class Xv6FileSystem(BentoFilesystem):
         names: Dict[str, Tuple[int, int, int]] = {}
         holes = collections.deque()
         for bn, off, e_ino, name in self._dir_entries(dino, pdi):
+            if e_ino == L.WHITEOUT_INO:
+                continue  # delete marker: not a live name, not a free slot
             if e_ino != 0:
                 names.setdefault(name, (bn, off, e_ino))
             else:
@@ -1323,16 +1325,27 @@ class Xv6FileSystem(BentoFilesystem):
                 yield bn, off, e_ino, name
 
     def _dirlookup(self, dino: int, di: L.DiskInode, name: str):
+        # whiteout markers (overlay delete sentinels) are not live entries:
+        # the name they carry reads as ENOENT at this level — the overlay
+        # inspects them through dir_entry_state instead
         for bn, off, e_ino, e_name in self._dir_entries(dino, di):
-            if e_ino != 0 and e_name == name:
+            if e_ino != 0 and e_ino != L.WHITEOUT_INO and e_name == name:
                 return bn, off, e_ino
         return None
 
     def _dirlink(self, dino: int, name: str, ino: int) -> None:
         di = self._iget(dino)
-        # reuse a hole if any
+        # reuse a hole if any; a whiteout marker for the SAME name is
+        # flipped in place instead (one slot write replaces the delete
+        # marker with the live entry — create-over-whiteout is atomic and
+        # the directory never holds two slots for one name). Foreign
+        # whiteouts are NOT holes: evicting another name's delete marker
+        # would resurrect base content under an overlay.
         slot = None
-        for bn, off, e_ino, _ in self._dir_entries(dino, di):
+        for bn, off, e_ino, e_name in self._dir_entries(dino, di):
+            if e_ino == L.WHITEOUT_INO and e_name == name:
+                self._dir_set(dino, bn, off, ino, name)
+                return
             if e_ino == 0 and slot is None:
                 slot = (bn, off)
         if slot is None:
@@ -1374,6 +1387,129 @@ class Xv6FileSystem(BentoFilesystem):
                  name: str) -> None:
         self._dir_set_raw(dino, bn, off, ino, name)
 
+    # --- whiteout primitives (overlay mounts — see fs/overlay.py) -------------------
+    # Plain mounts never create whiteouts; these exist so the overlay can
+    # record "name deleted here" in a writable upper directory, masking the
+    # same name in the immutable base. All mutations are journal-logged and
+    # join the caller's open op/chain transaction.
+
+    def dir_entry_state(self, dino: int, name: str):
+        """Raw three-way dirent probe: ``("present", ino)`` for a live
+        entry, ``("whiteout", None)`` for a delete marker, ``None`` when
+        the name has no slot. Unlike ``lookup``, whiteouts are REPORTED,
+        not skipped — the overlay's merge logic needs the distinction."""
+        with self._oplock:
+            di = self._iget(dino)
+            if di.type != L.T_DIR:
+                raise FsError(Errno.ENOTDIR, str(dino))
+            out = None
+            for _, _, e_ino, e_name in self._dir_entries(dino, di):
+                if e_ino != 0 and e_name == name:
+                    out = (("whiteout", None) if e_ino == L.WHITEOUT_INO
+                           else ("present", e_ino))
+                    break
+            self._end_op(False)
+            return out
+
+    def dir_whiteouts(self, dino: int) -> List[str]:
+        """Names carrying a delete marker in ``dino`` (readdir-merge and
+        rmdir-purge input for the overlay)."""
+        with self._oplock:
+            di = self._iget(dino)
+            if di.type != L.T_DIR:
+                raise FsError(Errno.ENOTDIR, str(dino))
+            out = [name for _, _, e_ino, name in self._dir_entries(dino, di)
+                   if e_ino == L.WHITEOUT_INO]
+            self._end_op(False)
+            return out
+
+    def dir_set_whiteout(self, dino: int, name: str) -> None:
+        """Install a delete marker for ``name``. A live entry's slot is
+        flipped in place (ONE slot write — no window where the name is
+        missing but not yet masked; the caller owns the displaced inode's
+        links), an existing marker is left alone, otherwise a slot is
+        allocated like ``_dirlink``."""
+        with self._oplock:
+            self._begin_op()
+            di = self._iget(dino)
+            if di.type != L.T_DIR:
+                raise FsError(Errno.ENOTDIR, str(dino))
+            for bn, off, e_ino, e_name in self._dir_entries(dino, di):
+                if e_ino != 0 and e_name == name:
+                    if e_ino != L.WHITEOUT_INO:
+                        self._dir_set(dino, bn, off, L.WHITEOUT_INO, name)
+                    self._end_op(True)
+                    return
+            self._dirlink(dino, name, L.WHITEOUT_INO)
+            self._end_op(True)
+
+    def dir_clear_whiteout(self, dino: int, name: str) -> None:
+        """Remove ``name``'s delete marker, leaving a reusable hole (no-op
+        when none exists). Rename-over-base uses it when the moved name
+        stops masking base content."""
+        with self._oplock:
+            self._begin_op()
+            di = self._iget(dino)
+            mutated = False
+            for bn, off, e_ino, e_name in self._dir_entries(dino, di):
+                if e_ino == L.WHITEOUT_INO and e_name == name:
+                    self._dir_unset(dino, bn, off)
+                    mutated = True
+                    break
+            self._end_op(mutated)
+
+    def exchange(self, parent: int, name: str, newparent: int,
+                 newname: str) -> None:
+        """RENAME_EXCHANGE analogue: atomically swap two existing entries
+        (both must resolve — ENOENT otherwise). Two in-place slot rewrites
+        inside one journal reservation, so neither name ever dangles: even
+        mid-transaction each slot always holds one of the two inodes, and
+        a crash recovers to both-old or both-new. Directories may swap
+        with files; a cross-directory dir swap re-homes both ".."
+        back-links."""
+        self._check_reserved(name)
+        self._check_reserved(newname)
+        with self._oplock:
+            self._begin_op()
+            pdi = self._iget(parent)
+            if pdi.type != L.T_DIR:
+                raise FsError(Errno.ENOTDIR, str(parent))
+            ndi = self._iget(newparent)
+            if ndi.type != L.T_DIR:
+                raise FsError(Errno.ENOTDIR, str(newparent))
+            a = self._dirlookup(parent, pdi, name)
+            if a is None:
+                raise FsError(Errno.ENOENT, name)
+            b = self._dirlookup(newparent, ndi, newname)
+            if b is None:
+                raise FsError(Errno.ENOENT, newname)
+            abn, aoff, aino = a
+            bbn, boff, bino = b
+            if aino == bino or (parent == newparent and name == newname):
+                self._end_op(False)
+                return
+            adi = self._iget(aino)
+            bdi = self._iget(bino)
+            if parent != newparent:
+                # swapping directories across parents moves each subtree
+                # under the other parent — the cycle check applies both ways
+                if adi.type == L.T_DIR:
+                    self._assert_not_in_subtree(aino, newparent)
+                if bdi.type == L.T_DIR:
+                    self._assert_not_in_subtree(bino, parent)
+            self._dir_set(parent, abn, aoff, bino, name)
+            self._dir_set(newparent, bbn, boff, aino, newname)
+            if parent != newparent and adi.type != bdi.type:
+                # ".." re-homing nets out unless exactly one side is a dir
+                gain = 1 if bdi.type == L.T_DIR else -1
+                pdi = self._iget(parent)
+                pdi.nlink += gain
+                self._iupdate(parent, pdi)
+                ndi = self._iget(newparent)
+                ndi.nlink -= gain
+                self._iupdate(newparent, ndi)
+            self._end_op(True)
+
     def lookup(self, parent: int, name: str) -> Attr:
         with self._oplock:
             pdi = self._iget(parent)
@@ -1395,7 +1531,7 @@ class Xv6FileSystem(BentoFilesystem):
             hide = (DEDUP_TABLE_NAME if (self._blockstore is not None
                                          and ino == ROOT_INO) else None)
             for _, _, e_ino, name in self._dir_entries(ino, di):
-                if e_ino != 0:
+                if e_ino != 0 and e_ino != L.WHITEOUT_INO:
                     if name == hide:
                         continue
                     edi = self._iget(e_ino)
@@ -1530,7 +1666,8 @@ class Xv6FileSystem(BentoFilesystem):
                 raise FsError(Errno.EINVAL, "rename into own subtree")
             ddi = self._iget(d)
             for _, _, e_ino, _ in self._dir_entries(d, ddi):
-                if e_ino != 0 and self._iget(e_ino).type == L.T_DIR:
+                if e_ino != 0 and e_ino != L.WHITEOUT_INO \
+                        and self._iget(e_ino).type == L.T_DIR:
                     stack.append(e_ino)
 
     def rename(self, parent: int, name: str, newparent: int, newname: str) -> None:

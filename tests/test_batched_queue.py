@@ -825,3 +825,126 @@ def test_transfer_state_enforces_schema():
     transfer_state(ModA(), b2,
                    migrate=lambda s, o, n: {**s, "momentum": 0})
     assert b2.got == {"w": 1, "momentum": 0}
+
+
+# --- linked timeouts (IOSQE_IO_LINK_TIMEOUT analogue) ----------------------------
+#
+# A SQE_LINK_TIMEOUT entry guards its chain with a monotonic deadline:
+# expired before the drain -> the guard completes ETIME and every other
+# member ECANCELED with NOTHING staged; expiring mid-chain cancels the
+# remaining members; a chain that beats its deadline completes the guard
+# with result 0.  (repro.core.interface.SQE_LINK_TIMEOUT)
+
+
+def _lt(deadline, **kw):
+    from repro.core.interface import SQE_LINK_TIMEOUT
+
+    return SubmissionEntry("link_timeout", (deadline,),
+                           flags=SQE_LINK_TIMEOUT | SQE_LINK, **kw)
+
+
+def test_link_timeout_chain_beats_far_deadline(mounted):
+    comps = mounted.mount.submit([
+        SubmissionEntry("create", (1, "lt1"), user_data="c",
+                        flags=SQE_LINK),
+        _lt(time.monotonic() + 60.0, user_data="t"),
+        # guards are invisible to the data flow: the default back=1
+        # reaches straight through the timer to create's completion
+        SubmissionEntry("write", (PrevResult("ino"), 0, b"hi"),
+                        user_data="w"),
+    ])
+    assert [(c.user_data, c.errno) for c in comps] == \
+        [("c", None), ("t", None), ("w", None)]
+    assert comps[1].result == 0  # the guard's "timer cancelled" completion
+    assert mounted.view.read_file("/lt1") == b"hi"
+
+
+def test_link_timeout_expired_at_drain_stages_nothing(mounted):
+    """Deadline already past when the chain drains: ETIME on the guard,
+    ECANCELED on every member, and the namespace untouched — the chain
+    never reached the fs."""
+    comps = mounted.mount.submit([
+        SubmissionEntry("create", (1, "never"), user_data="c",
+                        flags=SQE_LINK),
+        _lt(time.monotonic() - 0.001, user_data="t"),
+        SubmissionEntry("write", (PrevResult("ino"), 0, b"x"),
+                        user_data="w"),
+    ])
+    assert [(c.user_data, c.errno) for c in comps] == \
+        [("c", Errno.ECANCELED), ("t", Errno.ETIME),
+         ("w", Errno.ECANCELED)]
+    assert not mounted.view.exists("/never")
+
+
+def test_link_timeout_expiring_mid_chain_cancels_remainder(
+        mounted, monkeypatch):
+    """The deadline passes while the chain is executing: members already
+    run keep their completions, the guard answers ETIME, the rest are
+    ECANCELED. Driven by a fake monotonic clock (real op timings are
+    microseconds — far too noisy to race a deadline against)."""
+    from repro.core.interface import SQE_LINK_TIMEOUT, Errno as E
+
+    # the executor reads the clock: once at the drain check, then once
+    # per entry until expiry. Tick the 4th read past the deadline — the
+    # guard's own read — so expiry lands exactly between w1 and w2.
+    reads = iter([0.0, 0.0, 0.0, 100.0])
+    monkeypatch.setattr(time, "monotonic", lambda: next(reads, 100.0))
+    comps = mounted.mount.submit([
+        SubmissionEntry("create", (1, "mid"), user_data="c",
+                        flags=SQE_LINK),
+        SubmissionEntry("write", (PrevResult("ino"), 0, b"payload"),
+                        user_data="w1", flags=SQE_LINK),
+        SubmissionEntry("link_timeout", (50.0,), user_data="t",
+                        flags=SQE_LINK_TIMEOUT | SQE_LINK),
+        # back=2 skips w1 (guards don't count) to reach create's ino
+        SubmissionEntry("write", (PrevResult("ino", back=2), 7, b"tail"),
+                        user_data="w2"),
+    ])
+    assert [(c.user_data, c.errno) for c in comps] == \
+        [("c", None), ("w1", None), ("t", E.ETIME),
+         ("w2", E.ECANCELED)]
+    # the members that ran before expiry are durable; the canceled tail
+    # never landed
+    assert mounted.view.read_file("/mid") == b"payload"
+
+
+def test_link_timeout_malformed_deadline_is_einval(mounted):
+    from repro.core.interface import SQE_LINK_TIMEOUT
+
+    comps = mounted.mount.submit([
+        SubmissionEntry("create", (1, "bad-dl"), user_data="c",
+                        flags=SQE_LINK),
+        SubmissionEntry("link_timeout", ("soon",), user_data="t",
+                        flags=SQE_LINK_TIMEOUT | SQE_LINK),
+        SubmissionEntry("getattr", (1,), user_data="g"),
+    ])
+    by = {c.user_data: c for c in comps}
+    assert by["t"].errno == Errno.EINVAL
+    assert by["g"].errno == Errno.ECANCELED  # guard failure cancels on
+
+
+def test_link_timeout_after_failed_member_is_canceled(mounted):
+    """A guard behind an already-failed link is ECANCELED like any other
+    member — it never reports ETIME for a chain that died on its own."""
+    mounted.view.write_file("/dup", b"")
+    comps = mounted.mount.submit([
+        SubmissionEntry("create", (1, "dup"), user_data="c",
+                        flags=SQE_LINK),                     # EEXIST
+        _lt(time.monotonic() + 60.0, user_data="t"),
+        SubmissionEntry("getattr", (1,), user_data="g"),
+    ])
+    assert [(c.user_data, c.errno) for c in comps] == \
+        [("c", Errno.EEXIST), ("t", Errno.ECANCELED),
+         ("g", Errno.ECANCELED)]
+
+
+def test_link_timeout_flag_outside_chain_is_einval(mounted):
+    """A bare flagged entry with no chain reaches the dispatch table,
+    where "link_timeout" is not a filesystem op: EINVAL."""
+    from repro.core.interface import SQE_LINK_TIMEOUT
+
+    comps = mounted.mount.submit([
+        SubmissionEntry("link_timeout", (time.monotonic() + 60.0,),
+                        user_data="t", flags=SQE_LINK_TIMEOUT),
+    ])
+    assert comps[0].errno == Errno.EINVAL

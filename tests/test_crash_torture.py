@@ -23,6 +23,7 @@ from repro.core.interface import (Errno, PrevResult, ROOT_INO, SQE_LINK,
 from repro.fs.crashsim import (CrashSim, all_or_nothing, chain_workload,
                                quick_points, torture_chain, torture_dedup,
                                torture_dedup_churn, torture_fuse,
+                               torture_lazy, torture_overlay,
                                torture_parallel, torture_prov,
                                torture_prov_chain, torture_rename)
 from repro.fs.ext4like import Ext4LikeFileSystem
@@ -616,3 +617,37 @@ def test_parallel_drain_byte_identical_every_crash_point(kind):
 @pytest.mark.parametrize("kind", ["xv6", "ext4like"])
 def test_parallel_drain_dedup_every_crash_point(kind):
     assert torture_parallel(kind, dedup=True) > 30
+
+
+# --- lazy materialization + CoW overlay, every power-loss point ------------------
+
+
+@pytest.mark.parametrize("kind", ["xv6", "ext4like"])
+def test_lazy_materialization_torture_quick_subset(kind):
+    """Power loss inside the 2-step block fetch (data landing vs valid-bit
+    commit): a half-materialized block must NEVER be visible — after
+    remounting the SAME lazy device, base content reads back exactly
+    (invalid blocks re-fetch from the provider) and the mutation chain
+    stays all-or-nothing (CI smoke; exhaustive behind --runslow)."""
+    assert torture_lazy(kind, quick=True) > 5
+
+
+@pytest.mark.parametrize("kind", ["xv6", "ext4like"])
+def test_overlay_tenant_torture_quick_subset(kind):
+    """Whiteout, create-over-whiteout, copy-up overwrite and copy-up +
+    rename on a CoW tenant, power loss at every sampled upper write: each
+    merged name is old-XOR-new, no copy-up temp is ever visible, and the
+    shared base image stays byte-identical (exhaustive behind --runslow)."""
+    assert torture_overlay(kind, quick=True) > 5
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("kind", ["xv6", "ext4like"])
+def test_lazy_materialization_torture_every_crash_point(kind):
+    assert torture_lazy(kind) > 20
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("kind", ["xv6", "ext4like"])
+def test_overlay_tenant_torture_every_crash_point(kind):
+    assert torture_overlay(kind) > 10

@@ -245,8 +245,11 @@ class _Submitter:
 
 
 def _torture(kind, n_submitters, swap_cycles=1, phase_s=0.25,
-             pause_budget_s=10.0, n_blocks=16384, max_rounds=800):
-    mf = make_mount(kind, n_blocks=n_blocks)
+             pause_budget_s=10.0, n_blocks=16384, max_rounds=800,
+             mf=None):
+    # callers may hand in a pre-built mount (overlay tenants over a
+    # shared base image); the default builds a plain matrix entry
+    mf = mf or make_mount(kind, n_blocks=n_blocks)
     v = mf.view
     subs = []
     for t in range(n_submitters):
@@ -321,6 +324,30 @@ def test_upgrade_torture_under_load_fuse():
     # generation observations ride the ctl channel; the swap lands between
     # two daemon service rounds, the address-space analogue of the gate
     _torture("fuse", n_submitters=3, phase_s=0.35)
+
+
+@pytest.mark.parametrize("kind", ["overlay-bento", "overlay-ext4like"])
+def test_upgrade_torture_on_overlay_tenant(kind):
+    """Hot-swap prov onto a TENANT's writable upper mid-stream: the full
+    under-load protocol (zero lost/dup completions, contiguous log
+    windows, bounded pause) must hold on an overlay mount, and the shared
+    base image must come out bit-identical — the layer stack only ever
+    touches the upper."""
+    from repro.fs.mounts import build_base_image, overlay_tenant
+
+    fs_kind = {"overlay-bento": "xv6",
+               "overlay-ext4like": "ext4like"}[kind]
+    image = build_base_image(fs_kind)
+    image_bytes0 = image._data.tobytes()
+    image_writes0 = image.writes
+    mf = overlay_tenant(image, fs_kind, kind=kind, n_blocks=16384,
+                        ninodes=4096)  # 4 submitters x 800 rounds of files
+    # merged reads from the base keep working across the whole swap dance
+    assert mf.view.read_file("/etc/hostname") == b"golden\n"
+    _torture(kind, n_submitters=4, mf=mf)
+    assert image.writes == image_writes0, \
+        "the prov swap dance wrote to the immutable base image"
+    assert image._data.tobytes() == image_bytes0
 
 
 def test_upgrade_mid_storm_pause_is_reported_and_bounded():
