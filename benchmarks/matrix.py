@@ -1,7 +1,9 @@
 """Variance-aware benchmark matrix — the persisted perf trajectory.
 
 Sweeps {mount kind} x {dispatch mode: scalar / batched / chained /
-sqpoll} x {thread count: 1/4/8} with SHUFFLED SHORT-RUN REPETITION (the btrfs-ublk
+sqpoll, plus single-threaded v2 checkpoint save+restore cycles on the
+kinds a trainer checkpoints to} x {thread count: 1/4/8} with SHUFFLED
+SHORT-RUN REPETITION (the btrfs-ublk
 benchmark_matrix idiom): instead of timing each cell once in a fixed
 order — where thermal drift, page-cache state and background noise bias
 whole cells — every (cell, repetition) pair becomes one short run, the
@@ -16,7 +18,7 @@ Output: ``BENCH_<pr>.json`` — ``{"meta", "runs", "summary"}`` where
 ``summary`` one aggregate per cell. CI and later perf PRs diff summaries;
 the runs stay for re-analysis.
 
-CLI:  PYTHONPATH=src python -m benchmarks.matrix --out BENCH_8.json
+CLI:  PYTHONPATH=src python -m benchmarks.matrix --out BENCH_9.json
       [--reps 5] [--quick] [--fuse] [--seed 7]
 """
 
@@ -49,11 +51,14 @@ KIND_ARGS = {
 }
 DEFAULT_KINDS = ("bento", "vfs", "ext4like", "prov-bento",
                  "dedup-bento", "dedup-ext4like", "overlay-bento")
-MODES = ("scalar", "batched", "chained", "sqpoll")
+MODES = ("scalar", "batched", "chained", "sqpoll", "ckpt")
 THREADS = (1, 4, 8)
 # sqpoll cells need the gated multi-submitter mount; the VFS-direct
 # baseline and the FUSE bridge have no SubmitterQueue to poll
 NO_SQPOLL_KINDS = ("vfs", "fuse")
+# checkpoint save+restore cycles (v2 sharded store, re-save swap + load):
+# single-threaded, on the kinds a trainer actually checkpoints to
+CKPT_KINDS = ("bento", "ext4like", "dedup-bento")
 
 
 def _workers(n: int, worker) -> float:
@@ -125,7 +130,7 @@ def run_one(kind: str, mode: str, threads: int, *, ops: int,
             else:
                 wall = _workers(threads, worker)
             n_ops = threads * n_batches * batch
-        else:  # chained: create→write(PrevResult)→fsync triples per batch
+        elif mode == "chained":  # create→write(PrevResult)→fsync triples
             files = max(4, ops // 16)
             payload = b"p" * 1024
 
@@ -137,6 +142,37 @@ def run_one(kind: str, mode: str, threads: int, *, ops: int,
 
             wall = _workers(threads, worker)
             n_ops = threads * files
+        elif mode == "ckpt":
+            # v2 sharded checkpoint cycles: each round re-saves over the
+            # live checkpoint (generation bump + tmp/rename swap) and
+            # restores it back — the durable save/restore path a trainer
+            # pays every ckpt_every steps. One op = one shard file
+            # written or read.
+            import numpy as np
+
+            from repro import checkpoint as ckpt_store
+            from repro.distributed.resharding import ShardGrid
+
+            rng = np.random.default_rng(seed)
+            tree = {"w": rng.normal(size=(64, 32)).astype(np.float32),
+                    "b": rng.normal(size=(256,)).astype(np.float32),
+                    "s": np.float32(seed)}
+            grids = {"w": ShardGrid.from_spec((64, 32), ("d", "m"),
+                                              {"d": 2, "m": 2}),
+                     "b": None, "s": None}
+            cks = mf.services.checksum
+            cycles = max(1, ops // 64)
+            shard_files = 0
+            t0 = time.perf_counter()
+            for c in range(cycles):
+                man = ckpt_store.save(v, "/ck/step_1", tree, step=1,
+                                      checksum=cks, shardings=grids)
+                shard_files = sum(len(r["shards"]) for r in man["leaves"])
+                back, _ = ckpt_store.load(v, "/ck/step_1", tree,
+                                          checksum=cks)
+                assert float(np.asarray(back["s"])) == float(tree["s"])
+            wall = time.perf_counter() - t0
+            n_ops = cycles * shard_files * 2
         return {"kind": kind, "mode": mode, "threads": threads,
                 "ops": n_ops, "wall_s": wall, "ops_per_s": n_ops / wall}
     finally:
@@ -149,7 +185,8 @@ def run_matrix(kinds=DEFAULT_KINDS, *, reps: int = 5, ops: int = 512,
              # scalar-shared at 4 threads exists for every kind; the fuse
              # daemon serializes anyway, so skip its 4-thread rows
              if not (k == "fuse" and t > 1)
-             and not (m == "sqpoll" and k in NO_SQPOLL_KINDS)]
+             and not (m == "sqpoll" and k in NO_SQPOLL_KINDS)
+             and not (m == "ckpt" and (k not in CKPT_KINDS or t != 1))]
     schedule = [(c, r) for c in cells for r in range(reps)]
     random.Random(seed).shuffle(schedule)  # the variance-awareness
     runs: List[Dict] = []
@@ -176,6 +213,7 @@ def run_matrix(kinds=DEFAULT_KINDS, *, reps: int = 5, ops: int = 512,
     return {
         "meta": {"bench": "matrix", "reps": reps, "ops": ops, "seed": seed,
                  "kinds": list(kinds), "modes": list(MODES),
+                 "ckpt_kinds": list(CKPT_KINDS),
                  "threads": list(THREADS), "shuffled": True,
                  "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S")},
         "runs": runs,
@@ -185,7 +223,7 @@ def run_matrix(kinds=DEFAULT_KINDS, *, reps: int = 5, ops: int = 512,
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--out", default="BENCH_8.json")
+    ap.add_argument("--out", default="BENCH_9.json")
     ap.add_argument("--reps", type=int, default=5)
     ap.add_argument("--ops", type=int, default=512,
                     help="per-thread op budget of one short run")

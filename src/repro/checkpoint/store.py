@@ -1,36 +1,47 @@
-"""Checkpointing through the Bento file system.
+"""Checkpointing through the Bento file system — shard-native v2 format.
 
-Pytrees serialize leaf-per-file with a JSON manifest carrying shapes,
-dtypes, tree structure and per-leaf checksums (the kernel-services hash —
+Pytrees serialize SHARD-PER-FILE with a JSON manifest carrying shapes,
+dtypes, tree structure, the per-leaf shard grid (logical PartitionSpec +
+mesh axis sizes) and per-shard checksums (the kernel-services hash —
 Pallas blockhash in the kernel binding). Save/restore round-trips through
 the journaled xv6/ext4like store, so checkpoint durability inherits the
-journal's crash-atomicity (manifest written last = commit point).
+journal's crash-atomicity (manifest written last = commit point), and the
+grid makes the checkpoint topology-elastic: restore onto a DIFFERENT mesh
+plans per-target-shard reads (repro.distributed.resharding) and executes
+them as streamed offset reads over ``read_many``, re-slicing in flight —
+a full leaf is never materialized on the restoring host.
 
-The same extract->serialize path backs all four fault-tolerance features
-(upgrade / restart / elastic reshard / failure recovery): restore accepts a
-target sharding context and device_puts leaves to a NEW mesh, which is the
-elastic-rescale path.
+v1 manifests (whole-leaf files, no shard records) keep loading through
+the same machinery as a 1-shard grid. The same extract->serialize path
+backs all four fault-tolerance features (upgrade / restart / elastic
+reshard / failure recovery).
 """
 
 from __future__ import annotations
 
 import io
 import json
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import numpy as np
+from jax.sharding import NamedSharding
 
 from repro.core.interface import Errno, FsError
+from repro.distributed.resharding import (
+    Index, ShardGrid, index_volume, normalize_index, plan_target_shard,
+    plan_volume,
+)
 from repro.fs.posix import PosixView
 
 MANIFEST = "manifest.json"
+FORMAT_VERSION = 2
 
-# Leaves cross the boundary in bounded submission batches: one crossing per
-# ~chunk instead of per leaf, without buffering the whole checkpoint
+# Shards cross the boundary in bounded submission batches: one crossing per
+# ~chunk instead of per file, without buffering the whole checkpoint
 # (serialized bytes would otherwise double peak memory on save).
 _BATCH_BYTES = 64 << 20
-_BATCH_LEAVES = 64
+_BATCH_FILES = 64
 
 # ml_dtypes that numpy serializes as void: stored as integer views instead.
 _WIRE_DTYPES = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
@@ -42,16 +53,107 @@ def _flatten(tree):
     return leaves, treedef
 
 
+def _flatten_shardings(tree) -> List:
+    """Flatten a per-leaf sharding/grid tree. None entries mean "this leaf
+    is unsharded" and must stay leaves, not collapse as empty subtrees."""
+    return jax.tree.flatten(tree, is_leaf=lambda v: v is None)[0]
+
+
+def _np_dtype(dtype_s: str) -> np.dtype:
+    if dtype_s in _WIRE_DTYPES:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, dtype_s))
+    return np.dtype(dtype_s)
+
+
+def _serialize(arr: np.ndarray) -> bytes:
+    # numpy can't serialize ml_dtypes (bf16 -> void): save a same-width
+    # integer view and record the real dtype in the manifest.
+    wire = arr.view(_WIRE_DTYPES[str(arr.dtype)]) \
+        if str(arr.dtype) in _WIRE_DTYPES else arr
+    if not wire.flags["C_CONTIGUOUS"]:  # ascontiguousarray promotes 0-d
+        wire = np.ascontiguousarray(wire)
+    buf = io.BytesIO()
+    np.save(buf, wire)
+    return buf.getvalue()
+
+
+def _resolve_grid(shape, leaf, sharding) -> ShardGrid:
+    """Per-leaf shard grid: an explicit ShardGrid (virtual grids — crash
+    torture and single-device tests shard without devices), a
+    NamedSharding, or the leaf's OWN sharding when none is given (a leaf
+    already laid out across a mesh saves shard-per-device for free)."""
+    if isinstance(sharding, ShardGrid):
+        if sharding.shape != tuple(shape):
+            raise ValueError(
+                f"ShardGrid shape {sharding.shape} != leaf shape {shape}")
+        grid = sharding
+    elif isinstance(sharding, NamedSharding):
+        grid = ShardGrid.from_sharding(shape, sharding)
+    elif sharding is None and isinstance(leaf, jax.Array) \
+            and isinstance(getattr(leaf, "sharding", None), NamedSharding):
+        grid = ShardGrid.from_sharding(shape, leaf.sharding)
+    else:
+        grid = ShardGrid.trivial(shape)
+    return grid if grid.n_shards > 1 else ShardGrid.trivial(shape)
+
+
+def _shard_arrays(leaf, grid: ShardGrid):
+    """Yield ``(j, shard ndarray)`` without materializing the full leaf
+    when the leaf's device layout already matches the grid (the common
+    save path); otherwise fall back to slicing a device_get'd copy."""
+    if grid.n_shards == 1:
+        yield 0, np.asarray(jax.device_get(leaf))
+        return
+    by_index = {}
+    if isinstance(leaf, jax.Array):
+        try:
+            for sh in leaf.addressable_shards:
+                by_index.setdefault(
+                    normalize_index(sh.index, grid.shape), sh.data)
+        except Exception:  # noqa: BLE001 — any layout oddity -> fallback
+            by_index = {}
+    full = None
+    for j in range(grid.n_shards):
+        idx = grid.index(j)
+        data = by_index.get(idx)
+        if data is not None:
+            yield j, np.asarray(jax.device_get(data))
+        else:
+            if full is None:
+                full = np.asarray(jax.device_get(leaf))
+            yield j, np.ascontiguousarray(
+                full[tuple(slice(lo, hi) for lo, hi in idx)])
+
+
+def _first_leaf_names(root: str, gen: int):
+    sfx = f"_g{gen}" if gen else ""
+    # both naming lines: v1 whole-leaf files and v2 shard files — a
+    # crashed attempt from either format must not be overwritten short
+    return (f"{root}/leaf_00000{sfx}.npy", f"{root}/leaf_00000_s000{sfx}.npy")
+
+
 def save(view: PosixView, root: str, tree, *, step: int,
-         checksum=None, extra: Optional[Dict] = None) -> Dict:
+         checksum=None, extra: Optional[Dict] = None,
+         shardings=None) -> Dict:
+    """Save ``tree`` shard-per-file. ``shardings``: optional pytree
+    matching ``tree`` of NamedSharding | ShardGrid | None deciding each
+    leaf's grid (default: the leaf's own device layout)."""
     view.makedirs(root)
     leaves, treedef = _flatten(tree)
+    grids = None
+    if shardings is not None:
+        grids = _flatten_shardings(shardings)
+        if len(grids) != len(leaves):
+            raise ValueError(
+                f"shardings tree has {len(grids)} leaves, model has "
+                f"{len(leaves)} — incompatible trees")
     manifest_path = f"{root}/{MANIFEST}"
-    # Re-saves bump a GENERATION tag baked into the leaf names, so the new
-    # leaves never overwrite the ones the LIVE manifest references — the
+    # Re-saves bump a GENERATION tag baked into the shard names, so the new
+    # files never overwrite the ones the LIVE manifest references — the
     # old checkpoint (manifest AND data) stays fully intact until the
-    # manifest swap commits, and stale-generation leaves are collected
-    # after it. Without this, a crash mid-leaf-write would tear the
+    # manifest swap commits, and stale-generation shards are collected
+    # after it. Without this, a crash mid-shard-write would tear the
     # previous good checkpoint's data under its still-live manifest.
     gen, old_exists = 0, view.exists(manifest_path)
     if old_exists:
@@ -60,16 +162,17 @@ def save(view: PosixView, root: str, tree, *, step: int,
                       .get("gen", 0)) + 1
         except (ValueError, FsError):
             gen = 1  # old manifest torn/unreadable: start a fresh line
-    # whatever suggested the tag, probe past any leaf names a CRASHED
+    # whatever suggested the tag, probe past any shard names a CRASHED
     # attempt already occupies (its swap never committed, so the live
-    # manifest still names the previous gen): fresh leaf writes must
-    # never land on a stale same-name file — a shorter overwrite would
-    # keep the old tail, because write never truncates
-    while leaves and view.exists(
-            f"{root}/leaf_00000{f'_g{gen}' if gen else ''}.npy"):
+    # manifest still names the previous gen): fresh writes must never
+    # land on a stale same-name file — a shorter overwrite would keep
+    # the old tail, because write never truncates
+    while leaves and any(view.exists(p)
+                         for p in _first_leaf_names(root, gen)):
         gen += 1
     suffix = f"_g{gen}" if gen else ""
     manifest = {
+        "version": FORMAT_VERSION,
         "step": step,
         "gen": gen,
         "treedef": str(treedef),
@@ -79,50 +182,55 @@ def save(view: PosixView, root: str, tree, *, step: int,
     }
     items, pending_bytes = [], 0
     for i, leaf in enumerate(leaves):
-        arr = np.asarray(jax.device_get(leaf))
-        # numpy can't serialize ml_dtypes (bf16 -> void): save a same-width
-        # integer view and record the real dtype in the manifest.
-        save_arr = arr.view(_WIRE_DTYPES[str(arr.dtype)]) \
-            if str(arr.dtype) in _WIRE_DTYPES else arr
-        buf = io.BytesIO()
-        np.save(buf, save_arr)
-        raw = buf.getvalue()
-        path = f"{root}/leaf_{i:05d}{suffix}.npy"
-        items.append((path, raw))
-        pending_bytes += len(raw)
-        manifest["leaves"].append({
-            "path": path,
-            "shape": list(arr.shape),
-            "dtype": str(arr.dtype),
-            "checksum": checksum(raw) if checksum else None,
-        })
-        if len(items) >= _BATCH_LEAVES or pending_bytes >= _BATCH_BYTES:
-            view.write_many(items)
-            items, pending_bytes = [], 0
+        if not (hasattr(leaf, "shape") and hasattr(leaf, "dtype")):
+            leaf = np.asarray(leaf)  # python scalars
+        shape = tuple(int(d) for d in leaf.shape)
+        grid = _resolve_grid(shape, leaf, grids[i] if grids else None)
+        rec = {"shape": list(shape), "dtype": str(leaf.dtype),
+               "shards": []}
+        rec.update(grid.to_manifest())
+        for j, shard in _shard_arrays(leaf, grid):
+            raw = _serialize(shard)
+            path = f"{root}/leaf_{i:05d}_s{j:03d}{suffix}.npy"
+            items.append((path, raw))
+            pending_bytes += len(raw)
+            rec["shards"].append({
+                "path": path,
+                "coords": list(grid.coords(j)),
+                "index": [[lo, hi] for lo, hi in grid.index(j)],
+                # payload position inside the .npy — lets restore stream
+                # sub-shard slices as offset reads without parsing headers
+                "data_off": len(raw) - shard.nbytes,
+                "checksum": checksum(raw) if checksum else None,
+            })
+            if len(items) >= _BATCH_FILES or pending_bytes >= _BATCH_BYTES:
+                view.write_many(items)
+                items, pending_bytes = [], 0
+        manifest["leaves"].append(rec)
     # The manifest is the commit point, enforced by the manifest's own
-    # linked chain: leaf batches (including the final one) are plain
-    # batches — strict mode raises a failing leaf's real errno before the
+    # linked chain: shard batches (including the final one) are plain
+    # batches — strict mode raises a failing write's real errno before the
     # manifest submission ever happens — and then the manifest's
     # create→write→flush CHAIN commits everything. Since the chain-aware
     # journal reservation landed, a chain is one bounded journal
-    # transaction (crash-atomic, sized by capacity), so bulk leaf data
+    # transaction (crash-atomic, sized by capacity), so bulk shard data
     # must NOT be chained — only the small manifest chain is, and its
-    # flush commits any still-pending leaf blocks with it (one transaction
+    # flush commits any still-pending shard blocks with it (one transaction
     # when they fit together; begin_chain pre-commits them first when they
     # don't, which is equally safe — they are invisible without the
     # manifest). A crash at any device write before that commit leaves no
     # manifest at all — the aborted save is invisible to latest_step;
-    # after it, manifest AND every leaf it names are durable together.
+    # after it, manifest AND every shard it names are durable together.
     #
     # Re-saves over an EXISTING checkpoint never touch the live manifest
-    # (or, thanks to the generation tag, its leaves): the new manifest is
+    # (or, thanks to the generation tag, its shards): the new manifest is
     # committed under a tmp name, then swapped in with one journaled
     # rename-overwrite (+fsync to make the swap durable). The old
     # checkpoint stays fully intact until the rename transaction commits,
     # so the previous good one survives a crash at ANY device write of a
     # re-save — the old truncate-then-rewrite path had a window where
     # neither version did. Both properties are enumerated per crash point
-    # by tests/test_crash_torture.py.
+    # by tests/test_crash_torture.py (v1 whole-leaf and v2 sharded saves).
     raw_manifest = json.dumps(manifest).encode()
     if items:
         view.write_many(items)
@@ -156,11 +264,12 @@ def save(view: PosixView, root: str, tree, *, step: int,
         except FsError:
             pass
         raise
-    # the swap is durable: collect leaves the live manifest no longer
+    # the swap is durable: collect shard files the live manifest no longer
     # references (prior generations + orphans of crashed attempts). Pure
     # garbage collection — a crash skipping it just leaves dead files the
     # next successful save sweeps up.
-    live = {rec["path"].rsplit("/", 1)[-1] for rec in manifest["leaves"]}
+    live = {s["path"].rsplit("/", 1)[-1]
+            for rec in manifest["leaves"] for s in rec["shards"]}
     stale = [f"{root}/{name}" for name in view.listdir(root)
              if name.startswith("leaf_") and name not in live]
     if stale:
@@ -187,41 +296,340 @@ def _commit_manifest(view: PosixView, path: str, raw: bytes) -> None:
         view.fsync(path)
 
 
-def load(view: PosixView, root: str, like_tree, *, checksum=None,
-         sharding_tree=None):
-    """Restore into the structure of ``like_tree``; optionally device_put
-    each leaf with the matching sharding from ``sharding_tree`` (elastic
-    rescale onto a different mesh)."""
-    manifest = json.loads(view.read_file(f"{root}/{MANIFEST}"))
-    leaves_like, treedef = _flatten(like_tree)
+# --- restore ----------------------------------------------------------------
+
+
+def _leaf_name(rec: Dict) -> str:
+    return rec["shards"][0]["path"].rsplit("/", 1)[-1]
+
+
+def _normalize_rec(rec: Dict) -> Dict:
+    """v1 whole-leaf records load through the v2 machinery as a 1-shard
+    grid covering the full leaf."""
+    if "shards" in rec:
+        return rec
+    shape = rec["shape"]
+    return {"shape": shape, "dtype": rec["dtype"],
+            "spec": [[] for _ in shape], "axes": {},
+            "shards": [{"path": rec["path"], "coords": [0] * len(shape),
+                        "index": [[0, int(d)] for d in shape],
+                        "checksum": rec.get("checksum")}]}
+
+
+def _validate_manifest(manifest: Dict, leaves_like, treedef) -> List[Dict]:
+    """n_leaves + treedef + per-leaf dtype/shape against ``like_tree`` —
+    an incompatible tree must fail loudly naming the first bad leaf, not
+    silently unflatten into the wrong structure."""
     if manifest["n_leaves"] != len(leaves_like):
         raise ValueError(
             f"checkpoint has {manifest['n_leaves']} leaves, model expects "
             f"{len(leaves_like)} — incompatible trees")
-    shardings = None
+    saved_td = manifest.get("treedef")
+    if saved_td is not None and saved_td != str(treedef):
+        raise ValueError(
+            "checkpoint tree structure does not match the model:\n"
+            f"  checkpoint: {saved_td}\n"
+            f"  model:      {treedef}")
+    recs = [_normalize_rec(rec) for rec in manifest["leaves"]]
+    for i, (rec, like) in enumerate(zip(recs, leaves_like)):
+        if not (hasattr(like, "shape") and hasattr(like, "dtype")):
+            like = np.asarray(like)
+        if str(like.dtype) != rec["dtype"]:
+            raise ValueError(
+                f"leaf {i} ({_leaf_name(rec)}): checkpoint dtype "
+                f"{rec['dtype']} != model dtype {like.dtype}")
+        if list(tuple(like.shape)) != list(rec["shape"]):
+            raise ValueError(
+                f"leaf {i} ({_leaf_name(rec)}): checkpoint shape "
+                f"{tuple(rec['shape'])} != model shape "
+                f"{tuple(like.shape)}")
+    return recs
+
+
+class _Peak:
+    """Host-side materialized-byte ledger for one leaf restore: raw read
+    bytes + assembly buffers in flight (the thing the reshard path must
+    keep strictly below full-tensor size for sharded targets)."""
+
+    def __init__(self):
+        self.cur = 0
+        self.peak = 0
+
+    def add(self, n: int) -> None:
+        self.cur += n
+        self.peak = max(self.peak, self.cur)
+
+    def sub(self, n: int) -> None:
+        self.cur -= n
+
+
+def _verify_shards(view: PosixView, srecs, src_idx, need, checksum,
+                   peak: _Peak, itemsize: int, full_bytes: int):
+    """Whole-file checksum pass over the shards a restore will touch,
+    BEFORE assembly buffers exist: read chunks are byte-budgeted (sized
+    from the manifest's index extents) and dropped right after hashing,
+    so verification never stacks up toward full-tensor bytes."""
+    todo = [j for j in sorted(need)
+            if srecs[j].get("checksum") is not None]
+    est = {j: index_volume(src_idx[j]) * itemsize + 512 for j in todo}
+    budget = max(1, min(_BATCH_BYTES, full_bytes // 2))
+    while todo:
+        chunk, pend = [], 0
+        while todo and (not chunk or (pend + est[todo[0]] <= budget
+                                      and len(chunk) < _BATCH_FILES)):
+            pend += est[todo[0]]
+            chunk.append(todo.pop(0))
+        raws = view.read_many([srecs[j]["path"] for j in chunk])
+        total = sum(len(r) for r in raws)
+        peak.add(total)
+        bad = None
+        for j, raw in zip(chunk, raws):
+            if bad is None and checksum(raw) != srecs[j]["checksum"]:
+                bad = srecs[j]["path"]
+        peak.sub(total)
+        if bad is not None:
+            raise IOError(f"checksum mismatch in shard {bad}")
+
+
+def _file_runs(src_index: Index, src_slice: Index, dtype: np.dtype):
+    """Contiguous byte runs of ``src_slice`` inside its shard's .npy
+    payload (C order): yields ``(payload_off, nbytes, outer_coords,
+    piece_shape)``. Runs coalesce over the largest fully-covered suffix
+    of dims, so a slice wanting the whole shard is ONE run."""
+    s_shape = tuple(hi - lo for lo, hi in src_index)
+    ext = tuple(hi - lo for lo, hi in src_slice)
+    ndim = len(s_shape)
+    # strides (in elements) of the shard array
+    strides = [1] * ndim
+    for d in range(ndim - 2, -1, -1):
+        strides[d] = strides[d + 1] * s_shape[d + 1]
+    # t = first dim of the contiguous tail: every dim AFTER t is fully
+    # covered, so dim t's extent rides along in one run
+    t = ndim - 1
+    while t > 0 and ext[t] == s_shape[t] \
+            and src_slice[t][0] == 0:
+        t -= 1
+    if ndim == 0:
+        yield 0, dtype.itemsize, (), ()
+        return
+    tail = 1
+    for d in range(t + 1, ndim):
+        tail *= s_shape[d]
+    run_elems = ext[t] * tail
+    piece_shape = ext[t:]
+    if run_elems == 0 or any(e == 0 for e in ext):
+        return
+    for outer in np.ndindex(*ext[:t]):
+        off = src_slice[t][0] * strides[t]
+        for d, c in enumerate(outer):
+            off += (src_slice[d][0] + c) * strides[d]
+        yield (off * dtype.itemsize, run_elems * dtype.itemsize,
+               outer, piece_shape)
+
+
+def _flat_dst(buf: np.ndarray, dst_slice: Index):
+    """Flat view of ``buf[dst_slice]`` when the slab is C-contiguous
+    (the slice covers every dim after the first), else None."""
+    for d, (lo, hi) in enumerate(dst_slice[1:], 1):
+        if (lo, hi) != (0, buf.shape[d]):
+            return None
+    return buf[tuple(slice(lo, hi) for lo, hi in dst_slice)].reshape(-1)
+
+
+def _fill_buffer(view: PosixView, buf: np.ndarray, ops, srecs, src_idx,
+                 dtype: np.dtype, peak: _Peak) -> int:
+    """Execute one target shard's read plan as budget-bounded batches of
+    OFFSET reads (the streamed ``read_many`` path): raw bytes in flight
+    stay under ~half the target buffer, so assembly peaks at ~1.5x the
+    target shard — never the full leaf. A single run bigger than the
+    budget (target shard == whole source shard, the identity-transfer
+    case) lands on a contiguous slab of ``buf`` and is itself read in
+    budget-sized flat pieces. Returns crossings issued."""
+    budget = max(1, min(_BATCH_BYTES, buf.nbytes // 2 or buf.itemsize))
+    specs, places, pend, crossings = [], [], 0, 0
+
+    def flush():
+        nonlocal specs, places, pend, crossings
+        if not specs:
+            return
+        raws = view.read_many(specs)
+        crossings += 1
+        total = sum(len(r) for r in raws)
+        peak.add(total)
+        for raw, (dst_view, outer, piece_shape) in zip(raws, places):
+            piece = np.frombuffer(raw, dtype=dtype).reshape(piece_shape)
+            if outer == ():
+                dst_view[...] = piece
+            else:
+                dst_view[outer] = piece
+        peak.sub(total)
+        specs, places, pend = [], [], 0
+
+    for op in ops:
+        s = srecs[op.src]
+        if "data_off" not in s:
+            # no payload offset recorded (hand-written manifest): fall
+            # back to one whole-file read for this shard
+            raw = view.read_file(s["path"])
+            crossings += 1
+            peak.add(len(raw))
+            arr = np.load(io.BytesIO(raw)).view(dtype)
+            buf[tuple(slice(lo, hi) for lo, hi in op.dst_slice)] = \
+                arr[tuple(slice(lo, hi) for lo, hi in op.src_slice)]
+            peak.sub(len(raw))
+            continue
+        sl = tuple(slice(lo, hi) for lo, hi in op.dst_slice)
+        # 0-d: buf[()] yields a scalar copy, not a view — use buf[...]
+        dst_view = buf[sl] if sl else buf[...]
+        for off, nbytes, outer, piece_shape in _file_runs(
+                src_idx[op.src], op.src_slice, dtype):
+            if outer == () and nbytes > budget:
+                flat = _flat_dst(buf, op.dst_slice) if sl else None
+                if flat is not None:
+                    # one run would peak at buf + run: stream it instead
+                    step = max(dtype.itemsize,
+                               budget // dtype.itemsize * dtype.itemsize)
+                    base, done = s["data_off"] + off, 0
+                    while done < nbytes:
+                        n = min(step, nbytes - done)
+                        raw = view.read_many([(s["path"], base + done, n)])[0]
+                        crossings += 1
+                        peak.add(len(raw))
+                        e0 = done // dtype.itemsize
+                        flat[e0:e0 + n // dtype.itemsize] = \
+                            np.frombuffer(raw, dtype=dtype)
+                        peak.sub(len(raw))
+                        done += n
+                    continue
+            specs.append((s["path"], s["data_off"] + off, nbytes))
+            places.append((dst_view, outer, piece_shape))
+            pend += nbytes
+            if pend >= budget or len(specs) >= 4 * _BATCH_FILES:
+                flush()
+    flush()
+    return crossings
+
+
+def _restore_streamed(view: PosixView, rec: Dict, target, checksum,
+                      peak: _Peak, info: Dict):
+    """Multi-shard leaf restore: plan per target shard, stream slices."""
+    shape = tuple(rec["shape"])
+    dtype = _np_dtype(rec["dtype"])
+    srecs = rec["shards"]
+    src_idx = [tuple((int(lo), int(hi)) for lo, hi in s["index"])
+               for s in srecs]
+    if isinstance(target, NamedSharding):
+        dmap = target.addressable_devices_indices_map(shape)
+        groups: Dict[Index, list] = {}
+        for dev, idx in dmap.items():
+            groups.setdefault(normalize_index(idx, shape), []).append(dev)
+        plans = {di: plan_target_shard(src_idx, di) for di in groups}
+        need = {op.src for ops in plans.values() for op in ops}
+    else:
+        full = tuple((0, d) for d in shape)
+        plans = {full: plan_target_shard(src_idx, full)}
+        groups = {full: None}
+        need = {op.src for op in plans[full]}
+    info["n_target_groups"] = len(groups)
+    info["max_target_bytes"] = max(
+        (index_volume(di) * dtype.itemsize for di in groups), default=0)
+    if checksum:
+        full_bytes = index_volume(
+            tuple((0, d) for d in shape)) * dtype.itemsize
+        _verify_shards(view, srecs, src_idx, need, checksum, peak,
+                       dtype.itemsize, full_bytes)
+    arrays = []
+    for di in sorted(groups):
+        ops = plans[di]
+        if plan_volume(ops) != index_volume(di):
+            raise IOError(
+                f"shard records cover {plan_volume(ops)} of "
+                f"{index_volume(di)} elements for slice {di} of "
+                f"{_leaf_name(rec)} — incomplete checkpoint")
+        buf = np.empty(tuple(hi - lo for lo, hi in di), dtype)
+        peak.add(buf.nbytes)
+        _fill_buffer(view, buf, ops, srecs, src_idx, dtype, peak)
+        if groups[di] is None:
+            leaf = jax.device_put(buf) if target is None \
+                else jax.device_put(buf, target)
+            peak.sub(buf.nbytes)
+            return leaf
+        for dev in groups[di]:
+            arrays.append(jax.device_put(buf, dev))
+        peak.sub(buf.nbytes)
+    return jax.make_array_from_single_device_arrays(shape, target, arrays)
+
+
+def load(view: PosixView, root: str, like_tree, *, checksum=None,
+         sharding_tree=None, stats: Optional[Dict] = None):
+    """Restore into the structure of ``like_tree``; optionally assemble
+    each leaf under the matching sharding from ``sharding_tree`` (elastic
+    rescale onto a different mesh — multi-shard leaves restore via the
+    streamed reshard plan, never materializing the full tensor). ``stats``
+    (a dict, mutated) collects per-leaf peak/full byte counts."""
+    manifest = json.loads(view.read_file(f"{root}/{MANIFEST}"))
+    leaves_like, treedef = _flatten(like_tree)
+    recs = _validate_manifest(manifest, leaves_like, treedef)
+    shardings: List[Any] = [None] * len(leaves_like)
     if sharding_tree is not None:
-        shardings = _flatten(sharding_tree)[0]
-    out = []
-    # leaves read in bounded submission batches (see _BATCH_LEAVES): one
-    # boundary crossing per chunk, raw bytes live only within their chunk
-    recs = manifest["leaves"]
-    for lo in range(0, len(recs), _BATCH_LEAVES):
-        chunk = recs[lo: lo + _BATCH_LEAVES]
-        raws = view.read_many([rec["path"] for rec in chunk])
-        for i, (rec, raw) in enumerate(zip(chunk, raws), start=lo):
-            if checksum and rec.get("checksum") is not None:
-                if checksum(raw) != rec["checksum"]:
-                    raise IOError(f"checksum mismatch in {rec['path']}")
+        shardings = _flatten_shardings(sharding_tree)
+        if len(shardings) != len(leaves_like):
+            raise ValueError(
+                f"sharding tree has {len(shardings)} leaves, model has "
+                f"{len(leaves_like)} — incompatible trees")
+    out: List[Any] = [None] * len(recs)
+    leaf_stats: List[Dict] = []
+
+    def note(i, rec, peak, streamed, info=None):
+        full = index_volume(tuple(
+            (0, d) for d in rec["shape"])) * _np_dtype(rec["dtype"]).itemsize
+        leaf_stats.append({"leaf": i, "peak_bytes": peak.peak,
+                           "full_bytes": full,
+                           "n_src_shards": len(rec["shards"]),
+                           "streamed": streamed, **(info or {})})
+
+    # single-shard leaves batch v1-style: one crossing per ~_BATCH_FILES
+    # whole files; multi-shard leaves go through the streamed plan
+    pend: List[int] = []
+
+    def flush_simple():
+        raws = view.read_many([recs[i]["shards"][0]["path"] for i in pend])
+        for i, raw in zip(pend, raws):
+            rec, s = recs[i], recs[i]["shards"][0]
+            peak = _Peak()
+            peak.add(len(raw))
+            if checksum and s.get("checksum") is not None \
+                    and checksum(raw) != s["checksum"]:
+                raise IOError(f"checksum mismatch in shard {s['path']}")
             arr = np.load(io.BytesIO(raw))
             if rec["dtype"] in _WIRE_DTYPES:
                 import ml_dtypes
                 arr = arr.view(getattr(ml_dtypes, rec["dtype"]))
-            if list(arr.shape) != rec["shape"]:
-                raise IOError(f"shape mismatch in {rec['path']}")
-            if shardings is not None:
-                out.append(jax.device_put(arr, shardings[i]))
-            else:
-                out.append(jax.device_put(arr))
+            if list(arr.shape) != list(rec["shape"]):
+                raise IOError(f"shape mismatch in {s['path']}")
+            peak.add(arr.nbytes)
+            target = shardings[i]
+            out[i] = jax.device_put(arr) if target is None \
+                else jax.device_put(arr, target)
+            peak.sub(len(raw) + arr.nbytes)
+            note(i, rec, peak, streamed=False)
+        pend.clear()
+
+    for i, rec in enumerate(recs):
+        if len(rec["shards"]) == 1:
+            pend.append(i)
+            if len(pend) >= _BATCH_FILES:
+                flush_simple()
+        else:
+            peak, info = _Peak(), {}
+            out[i] = _restore_streamed(view, rec, shardings[i], checksum,
+                                       peak, info)
+            note(i, rec, peak, streamed=True, info=info)
+    if pend:
+        flush_simple()
+    if stats is not None:
+        stats["leaves"] = leaf_stats
+        stats["version"] = manifest.get("version", 1)
     return jax.tree.unflatten(treedef, out), manifest
 
 

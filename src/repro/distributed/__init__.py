@@ -1,3 +1,7 @@
+from repro.distributed.resharding import (
+    ReadOp, ShardGrid, normalize_index, plan_reshard, plan_target_shard,
+)
 from repro.distributed.sharding import RULESETS, ShardingCtx, resolve_spec
 
-__all__ = ["RULESETS", "ShardingCtx", "resolve_spec"]
+__all__ = ["RULESETS", "ShardingCtx", "resolve_spec", "ShardGrid",
+           "ReadOp", "normalize_index", "plan_reshard", "plan_target_shard"]

@@ -18,7 +18,10 @@ the daemon drains every channel with a readable ``submit_batch`` request
 per service round into ONE ``execute_multi_batch`` call — the SQPOLL-style
 drain of ``repro.core.registry``, carried across the address-space
 boundary. Chains stay within their channel's submission; unchained runs
-coalesce across channels into the fs's vectorized paths.
+coalesce across channels into the fs's vectorized paths. Scalar ops ride
+the same per-thread channels (multi-queue /dev/fuse): a service round
+collects every readable channel's scalar request, so N scalar callers
+no longer serialize behind one connection's request/response turn.
 
 Crash torture: a ``__ctl__`` side-channel arms write-stream fault
 injection in the daemon's FileBlockDevice (power loss after the Nth
@@ -178,8 +181,12 @@ def serve(sock_path: str, backing_path: str, n_blocks: int, fs_kind: str,
 
     # drain observability (read via __ctl__ "stats"): drains counts service
     # rounds that executed submit_batch traffic, batch_requests the client
-    # submissions they carried — requests ≫ drains is the multi-channel win
-    stats = {"drains": 0, "batch_requests": 0, "multi_channel_drains": 0}
+    # submissions they carried — requests ≫ drains is the multi-channel win.
+    # scalar_requests counts one-op calls the same way (they ride per-thread
+    # channels too), multi_channel_scalar_rounds the service rounds that
+    # collected scalars from more than one channel at once.
+    stats = {"drains": 0, "batch_requests": 0, "multi_channel_drains": 0,
+             "scalar_requests": 0, "multi_channel_scalar_rounds": 0}
 
     srv = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
     srv.bind(sock_path)
@@ -246,6 +253,10 @@ def serve(sock_path: str, backing_path: str, n_blocks: int, fs_kind: str,
                         dev.sync()  # whole-file sync penalty, once per drain
                     for (conn, _), comps in zip(batch_reqs, segs):
                         _send_quiet(conn, ("ok", comps))
+            if scalar_reqs:
+                stats["scalar_requests"] += len(scalar_reqs)
+                if len({id(c) for c, _, _, _ in scalar_reqs}) > 1:
+                    stats["multi_channel_scalar_rounds"] += 1
             for conn, op, args, kw in scalar_reqs:
                 try:
                     if op == "__ctl__":
@@ -279,11 +290,14 @@ def serve(sock_path: str, backing_path: str, n_blocks: int, fs_kind: str,
 class FuseMount:
     """Client-side mount handle: same call surface as core.registry.Mount.
 
-    Scalar calls share one primary channel (one in-flight request, like a
-    single FUSE /dev/fuse fd); ``submit`` uses a per-THREAD channel so
-    concurrent submitters overlap in flight and the daemon drains them
-    together (``mq_submissions`` counts this client's submissions —
-    the daemon-side drain count comes back via ``ctl("stats")``)."""
+    Scalar calls AND ``submit`` both ride a per-THREAD channel (the
+    multi-queue /dev/fuse clone of the multi-submitter design), so
+    concurrent scalar callers stop funneling through one connection:
+    each thread has one request in flight on its own socket and the
+    daemon collects every readable channel per service round
+    (``mq_submissions`` counts this client's submissions — daemon-side
+    drain/scalar counts come back via ``ctl("stats")``). The primary
+    socket opened at mount is reserved for the shutdown sentinel."""
 
     def __init__(self, n_blocks: int = 16384, fs_kind: str = "xv6",
                  backing_path: Optional[str] = None, reuse: bool = False):
@@ -305,7 +319,6 @@ class FuseMount:
         self._sock = self._connect(deadline_s=30)
         self.generation = 1
         self.name = f"fuse-{fs_kind}"
-        self._lock = threading.Lock()  # one in-flight request per channel
         self._tls = threading.local()
         self._channels: List[socket.socket] = [self._sock]
         self._chan_lock = threading.Lock()
@@ -328,8 +341,10 @@ class FuseMount:
 
     def _channel(self) -> socket.socket:
         """This thread's private daemon connection (created on first
-        submit): the per-thread SQ of the multi-submitter design, carried
-        over the address-space boundary."""
+        use): the per-thread SQ of the multi-submitter design, carried
+        over the address-space boundary. Scalar ops and submissions
+        share it — one in-flight request per thread by construction, so
+        no lock is needed."""
         ch = getattr(self._tls, "ch", None)
         if ch is None:
             ch = self._connect(deadline_s=10)
@@ -339,9 +354,9 @@ class FuseMount:
         return ch
 
     def call(self, op: str, *args, **kw) -> Any:
-        with self._lock:
-            _send(self._sock, (op, args, kw))
-            status, payload = _recv(self._sock)
+        ch = self._channel()
+        _send(ch, (op, args, kw))
+        status, payload = _recv(ch)
         if status == "ok":
             return payload
         if status == "fs_error":

@@ -10,11 +10,18 @@ from __future__ import annotations
 import jax
 
 
+def _make_mesh(shape, axes, **kw):
+    # jax.sharding.AxisType (and make_mesh's axis_types kwarg) only exist
+    # on newer jax lines; Auto is already the default everywhere it does
+    if hasattr(jax.sharding, "AxisType"):
+        kw["axis_types"] = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, **kw)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=axis_types)
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
@@ -22,8 +29,24 @@ def make_host_mesh(data: int = 1, model: int = 1):
     n = data * model
     if len(jax.devices()) < n:
         raise RuntimeError(f"need {n} devices, have {len(jax.devices())}")
-    axis_types = (jax.sharding.AxisType.Auto,) * 2
-    return jax.make_mesh((data, model), ("data", "model"), axis_types=axis_types)
+    return _make_mesh((data, model), ("data", "model"))
+
+
+def make_elastic_mesh(data: int = 1, model: int = 1, *, devices=None):
+    """Mesh over an explicit device PREFIX — the elastic-restore shapes.
+
+    ``make_host_mesh`` spans every host device, so halved/doubled
+    topologies of the same job can't coexist in one process; this builds
+    ("data", "model") over ``devices`` (default: the first data*model
+    host devices), which is how the reshard benchmark/tests stand up
+    source and target meshes side by side."""
+    n = data * model
+    if devices is None:
+        devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(f"need {n} devices, have {len(devices)}")
+    return _make_mesh((data, model), ("data", "model"),
+                      devices=list(devices)[:n])
 
 
 def mesh_axis_sizes(mesh) -> dict:

@@ -56,11 +56,13 @@ class Trainer(BentoModule):
         self._build(mesh, ruleset)
         self._init_state()
         self.step_idx = 0
+        self.last_restore_stats: Dict[str, Any] = {}
         self._prefetch: Optional[Prefetcher] = None
 
     # --- build / init -----------------------------------------------------------
     def _build(self, mesh, ruleset: str) -> None:
         self.mesh = mesh
+        self.ruleset = ruleset
         self.ctx = (ShardingCtx.for_mesh(mesh, ruleset) if mesh is not None
                     else ShardingCtx.null())
         self.pspecs = lm.param_specs(self.cfg)
@@ -148,12 +150,26 @@ class Trainer(BentoModule):
         return ("params", "opt_state", "step", "seed")
 
     # --- checkpoint / recovery -------------------------------------------------------------
+    def _ckpt_shardings(self):
+        if self.param_shardings is None:
+            return None
+        return {"params": self.param_shardings, "opt": self.opt_shardings}
+
     def save_checkpoint(self) -> None:
+        """Shard-per-file v2 save: the live shardings become the stored
+        shard grid, so a restart on a different mesh reshards on restore
+        instead of gathering full tensors."""
         assert self.ckpt_view is not None
         root = f"{self.ckpt_root}/step_{self.step_idx:08d}"
+        extra = None
+        if self.mesh is not None:
+            from repro.launch.mesh import mesh_axis_sizes
+            extra = {"mesh_axes": mesh_axis_sizes(self.mesh),
+                     "ruleset": self.ruleset}
         ckpt.save(self.ckpt_view, root,
                   {"params": self.params, "opt": self.opt_state},
-                  step=self.step_idx)
+                  step=self.step_idx, shardings=self._ckpt_shardings(),
+                  extra=extra)
 
     def restore_checkpoint(self, step: Optional[int] = None) -> bool:
         assert self.ckpt_view is not None
@@ -163,11 +179,11 @@ class Trainer(BentoModule):
             return False
         root = f"{self.ckpt_root}/step_{step:08d}"
         like = {"params": self.params, "opt": self.opt_state}
+        self.last_restore_stats = {}
         tree, _mf = ckpt.load(
             self.ckpt_view, root, like,
-            sharding_tree=({"params": self.param_shardings,
-                            "opt": self.opt_shardings}
-                           if self.param_shardings is not None else None))
+            sharding_tree=self._ckpt_shardings(),
+            stats=self.last_restore_stats)
         self.params, self.opt_state = tree["params"], tree["opt"]
         self.step_idx = step
         return True

@@ -478,6 +478,29 @@ def test_checkpoint_manifest_chain_every_crash_point():
     _ckpt_roundtrip("all")
 
 
+# --- the v2 SHARDED save under power loss ----------------------------------------
+
+
+def test_sharded_checkpoint_resave_old_xor_complete_new_quick_subset():
+    """Power loss at a bounded subset of device writes of a v2 sharded
+    RE-SAVE (a 2x2 grid leaf + an unsharded leaf over an existing
+    checkpoint): at every point latest_step still finds the checkpoint,
+    the live manifest names a complete 4-shard grid, the restored tree is
+    entirely-old XOR entirely-new (mixed shard generations fail), and the
+    no-crash control sees the new data (exhaustive behind --runslow)."""
+    from repro.fs.crashsim import torture_ckpt_shards
+
+    assert torture_ckpt_shards("xv6", quick=True) > 5
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("kind", ["xv6", "ext4like"])
+def test_sharded_checkpoint_resave_every_crash_point(kind):
+    from repro.fs.crashsim import torture_ckpt_shards
+
+    assert torture_ckpt_shards(kind) > 20
+
+
 # --- scale sweep (slow): mixed chained + unchained traffic -----------------------
 
 

@@ -91,7 +91,7 @@ def test_checkpoint_corruption_detected():
     cks = mf.services.checksum
     tree = {"w": jnp.ones((64, 64))}
     man = ckpt.save(mf.view, "/ck/s", tree, step=0, checksum=cks)
-    path = man["leaves"][0]["path"]
+    path = man["leaves"][0]["shards"][0]["path"]
     raw = bytearray(mf.view.read_file(path))
     raw[500] ^= 0xFF
     mf.view.write_file(path, bytes(raw), off=0, create=False)
@@ -158,7 +158,7 @@ def test_checkpoint_resave_changes_and_shrinks_leaves():
     # prior generation's leaves collected; only the live ones remain
     leaves = [n for n in mf.view.listdir("/ck/step_3")
               if n.startswith("leaf_")]
-    assert leaves == ["leaf_00000_g1.npy"]
+    assert leaves == ["leaf_00000_s000_g1.npy"]
     # a third save keeps rolling generations forward
     man = ckpt.save(mf.view, "/ck/step_3", big, step=3, checksum=cks)
     assert man["gen"] == 2
@@ -179,7 +179,9 @@ def test_checkpoint_resave_probes_past_crashed_attempts_leaves():
     cks = mf.services.checksum
     ckpt.save(mf.view, "/ck/step_5", {"w": jnp.ones(16)}, step=5,
               checksum=cks)
-    # fake the crashed attempt: a gen-1 leaf LONGER than the next save's
+    # fake the crashed attempt: a gen-1 leaf LONGER than the next save's.
+    # Use the v1 (whole-leaf) name — the probe must honor BOTH naming
+    # lines, so a crashed pre-upgrade attempt still pushes the gen tag.
     mf.view.write_file("/ck/step_5/leaf_00000_g1.npy", b"G" * 8192)
     man = ckpt.save(mf.view, "/ck/step_5", {"w": jnp.full((4,), 9.0)},
                     step=5, checksum=cks)
@@ -191,7 +193,7 @@ def test_checkpoint_resave_probes_past_crashed_attempts_leaves():
     # the orphan and the old generation were both collected after the swap
     leaves = sorted(n for n in mf.view.listdir("/ck/step_5")
                     if n.startswith("leaf_"))
-    assert leaves == ["leaf_00000_g2.npy"]
+    assert leaves == ["leaf_00000_s000_g2.npy"]
     mf.close()
 
 

@@ -735,3 +735,65 @@ def test_fuse_threads_submit_on_private_channels():
     assert stats["batch_requests"] >= 24          # every submission served
     assert stats["drains"] <= stats["batch_requests"]
     mf.close()
+
+
+def test_fuse_scalar_ops_ride_private_channels():
+    """Scalar dispatch through the FUSE bridge uses the same per-thread
+    channels as batched submissions (multi-queue /dev/fuse): a 4-thread
+    scalar storm must stay correct with one channel per thread (plus the
+    shutdown-sentinel primary), every call counted daemon-side, and a
+    deterministic two-channel double-send must land in one service round
+    (the ``multi_channel_scalar_rounds`` win)."""
+    from repro.fs.fusebridge import _recv, _send
+
+    mf = make_mount("fuse", n_blocks=2048)
+    v = mf.view
+    m = mf.mount
+    v.write_file("/f", b"k" * 4096)
+    base = m.ctl("stats")["scalar_requests"]
+    errors = []
+    start = threading.Barrier(4)
+
+    def worker(t):
+        try:
+            start.wait()
+            for r in range(10):
+                st = v.stat("/f")
+                assert st.size == 4096
+                assert v.read_file("/f", off=r * 16, size=16) == b"k" * 16
+        except Exception as e:  # noqa: BLE001
+            errors.append(f"t{t}: {type(e).__name__}: {e}")
+
+    threads = [threading.Thread(target=worker, args=(t,), daemon=True)
+               for t in range(4)]
+    for t in threads:
+        t.start()
+    _join_all(threads)
+    assert not errors, errors
+    # one private channel per worker thread + the primary (and this
+    # thread's own channel from the setup/ctl calls)
+    assert len(m._channels) >= 6
+    stats = m.ctl("stats")
+    assert stats["scalar_requests"] - base >= 80   # every scalar counted
+    # deterministic multi-channel round: park a request on each of two
+    # fresh channels before reading either reply — the daemon's select
+    # collects both in one round (retry the race where it wakes between
+    # the sends)
+    chans = [m._connect(deadline_s=10) for _ in range(2)]
+    rounds0 = stats["multi_channel_scalar_rounds"]
+    try:
+        for _ in range(50):
+            for ch in chans:
+                _send(ch, ("getattr", (1,), {}))
+            for ch in chans:
+                status, _payload = _recv(ch)
+                assert status == "ok"
+            if m.ctl("stats")["multi_channel_scalar_rounds"] > rounds0:
+                break
+        else:
+            raise AssertionError(
+                "two-channel scalars never shared a service round")
+    finally:
+        for ch in chans:
+            ch.close()
+    mf.close()
