@@ -18,8 +18,14 @@ Output: ``BENCH_<pr>.json`` — ``{"meta", "runs", "summary"}`` where
 ``summary`` one aggregate per cell. CI and later perf PRs diff summaries;
 the runs stay for re-analysis.
 
-CLI:  PYTHONPATH=src python -m benchmarks.matrix --out BENCH_9.json
+CLI:  PYTHONPATH=src python -m benchmarks.matrix --out BENCH_10.json
       [--reps 5] [--quick] [--fuse] [--seed 7]
+      [--baseline BENCH_9.json]
+
+When the baseline file exists, the ckpt (save+restore cycle) cells are
+diffed against its error bars: each cell's new mean must clear the
+baseline's mean + one std, so a perf claim has to beat the noise band,
+not just the point estimate. ``--baseline ''`` skips the gate.
 """
 
 from __future__ import annotations
@@ -221,9 +227,40 @@ def run_matrix(kinds=DEFAULT_KINDS, *, reps: int = 5, ops: int = 512,
     }
 
 
+def diff_ckpt_cells(table: Dict, baseline_path: str) -> bool:
+    """Gate the ckpt cells on the baseline's error bars: every
+    (kind, threads) ckpt cell present in both tables must have a new
+    mean above the baseline's mean + one std. Returns False (after
+    printing the losers) when any cell misses."""
+    import os
+
+    if not baseline_path or not os.path.exists(baseline_path):
+        print(f"  (no baseline {baseline_path!r} — ckpt diff skipped)")
+        return True
+    with open(baseline_path) as f:
+        base = json.load(f)
+    bars = {(s["kind"], s["threads"]):
+            (s["ops_per_s_mean"], s["ops_per_s_std"])
+            for s in base["summary"] if s["mode"] == "ckpt"}
+    ok = True
+    for s in table["summary"]:
+        if s["mode"] != "ckpt" or (s["kind"], s["threads"]) not in bars:
+            continue
+        mean, std = bars[(s["kind"], s["threads"])]
+        bar = mean + std
+        verdict = "OK" if s["ops_per_s_mean"] > bar else "MISS"
+        ok = ok and verdict == "OK"
+        print(f"  ckpt {s['kind']:>14}: {s['ops_per_s_mean']:7.0f} ops/s "
+              f"vs baseline {mean:.0f} + {std:.0f} = {bar:.0f} — {verdict}")
+    return ok
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--out", default="BENCH_9.json")
+    ap.add_argument("--out", default="BENCH_10.json")
+    ap.add_argument("--baseline", default="BENCH_9.json",
+                    help="prior matrix to diff ckpt cells against "
+                         "('' disables the gate)")
     ap.add_argument("--reps", type=int, default=5)
     ap.add_argument("--ops", type=int, default=512,
                     help="per-thread op budget of one short run")
@@ -246,6 +283,9 @@ def main() -> None:
         print(f"  {s['kind']:>14}/{s['mode']:<7} t{s['threads']}: "
               f"{s['ops_per_s_mean']:9.0f} ops/s "
               f"± {s['ops_per_s_std']:7.0f} (cv {s['cv']:.2f})")
+    if not diff_ckpt_cells(table, args.baseline):
+        raise SystemExit(
+            "ckpt cells regressed against the baseline error bars")
 
 
 if __name__ == "__main__":

@@ -668,40 +668,66 @@ class BentoFilesystem(BentoModule):
         raise FsError(Errno.EINVAL, "no provenance layer mounted")
 
     # --- batched boundary ------------------------------------------------------
-    _SIG_CACHE: Dict[Tuple[type, str], inspect.Signature] = {}
+    _SIG_CACHE: Dict[Tuple[type, str], tuple] = {}
 
     # basic value shapes checked pre-call for the data ops, so a malformed
     # entry completes EINVAL while a TypeError from inside a correctly-
     # called op (an implementation bug) propagates loudly, like scalar
-    # dispatch
+    # dispatch. ``bound`` is a plain {param: value} mapping.
     _VALUE_CHECKS = {
-        "write": lambda ba: (isinstance(ba.arguments.get("data"),
-                                        (bytes, bytearray))
-                             and isinstance(ba.arguments.get("off"), int)),
-        "read": lambda ba: (isinstance(ba.arguments.get("off"), int)
-                            and isinstance(ba.arguments.get("size"), int)),
+        "write": lambda bound: (isinstance(bound.get("data"),
+                                           (bytes, bytearray))
+                                and isinstance(bound.get("off"), int)),
+        "read": lambda bound: (isinstance(bound.get("off"), int)
+                               and isinstance(bound.get("size"), int)),
     }
 
     def _entry_fits(self, op: str, args, kwargs) -> bool:
         """Does (args, kwargs) form a well-shaped call of ``op``? Checked
-        BEFORE dispatch: arity/keywords via the cached signature, plus the
-        per-op basic value shapes above. An unresolved ``PrevResult``
-        placeholder (legal only inside a chain, where ``execute_batch``
-        substitutes it before dispatch) never fits."""
+        BEFORE dispatch: arity/keywords via a precomputed shape of the
+        signature (``inspect.signature`` binding per entry was the single
+        hottest line of batched dispatch), plus the per-op basic value
+        shapes above. An unresolved ``PrevResult`` placeholder (legal
+        only inside a chain, where ``execute_batch`` substitutes it
+        before dispatch) never fits."""
         if any(isinstance(a, PrevResult) for a in args) or \
                 (kwargs and any(isinstance(v, PrevResult)
                                 for v in kwargs.values())):
             return False
         key = (type(self), op)
-        sig = self._SIG_CACHE.get(key)
-        if sig is None:
-            sig = self._SIG_CACHE[key] = inspect.signature(getattr(self, op))
-        try:
-            ba = sig.bind(*args, **(kwargs or {}))
-        except TypeError:
-            return False
+        meta = self._SIG_CACHE.get(key)
+        if meta is None:
+            sig = inspect.signature(getattr(self, op))
+            simple = all(p.kind in (inspect.Parameter.POSITIONAL_ONLY,
+                                    inspect.Parameter.POSITIONAL_OR_KEYWORD)
+                         for p in sig.parameters.values())
+            if simple:
+                names = tuple(sig.parameters)
+                required = sum(1 for p in sig.parameters.values()
+                               if p.default is inspect.Parameter.empty)
+                meta = (names, required)
+            else:  # kw-only / varargs: keep real binding semantics
+                meta = (None, sig)
+            self._SIG_CACHE[key] = meta
+        names, required = meta
+        if names is None:
+            try:
+                bound = required.bind(*args, **(kwargs or {})).arguments
+            except TypeError:
+                return False
+        else:
+            if len(args) > len(names):
+                return False
+            bound = dict(zip(names, args))
+            if kwargs:
+                for k, v in kwargs.items():
+                    if k not in names or k in bound:
+                        return False
+                    bound[k] = v
+            if sum(1 for n in names[:required] if n in bound) < required:
+                return False
         check = self._VALUE_CHECKS.get(op)
-        return check is None or check(ba)
+        return check is None or check(bound)
 
     def _dispatch_one(self, entry: SubmissionEntry) -> CompletionEntry:
         """Run one entry with per-entry errno capture: malformed entries

@@ -19,6 +19,7 @@ hashable, so the normalized form doubles as a grouping key).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, List, Optional, Sequence, Tuple
 
 Slice1D = Tuple[int, int]                 # [lo, hi)
@@ -93,11 +94,12 @@ class ShardGrid:
 
     # -- grid geometry -------------------------------------------------
 
-    @property
+    # cached: the grid is frozen, and save/restore walk these per shard
+    @functools.cached_property
     def axis_sizes(self) -> Dict[str, int]:
         return dict(self.axes)
 
-    @property
+    @functools.cached_property
     def grid(self) -> Tuple[int, ...]:
         """Cuts per dimension (product of the spec'd axis sizes)."""
         sizes = self.axis_sizes
@@ -189,6 +191,51 @@ def plan_reshard(src_indices: Sequence[Index], dst_grid: ShardGrid
     """One read plan per target shard of ``dst_grid``."""
     return [plan_target_shard(src_indices, dst_grid.index(t))
             for t in range(dst_grid.n_shards)]
+
+
+def shift_ops(ops: Sequence[ReadOp], dst_index: Index) -> List[ReadOp]:
+    """Rebase cell-local ``dst_slice``s to global coordinates.
+
+    ``plan_target_shard`` emits destinations relative to the target cell;
+    when a restore assembles several cells into ONE host buffer (uneven —
+    non-divisible — target grids, where no per-device placement exists),
+    each cell's ops shift by the cell's lower corner. Empty ops shift to
+    empty ops; short last cells shift like any other."""
+    return [ReadOp(op.src, op.src_slice,
+                   tuple((lo + base, hi + base)
+                         for (lo, hi), (base, _) in
+                         zip(op.dst_slice, dst_index)))
+            for op in ops]
+
+
+def op_bytes(op: ReadOp, itemsize: int) -> int:
+    """Destination bytes one op materializes (== the sum of its file
+    runs' byte lengths: every source element lands exactly once)."""
+    return op.volume() * itemsize
+
+
+def chunk_ops(ops: Sequence[ReadOp], itemsize: int, budget: int,
+              max_ops: int = 0) -> List[List[ReadOp]]:
+    """Greedy byte-budgeted chunking of a read plan — the unit of overlap
+    for the pipelined restore engine. Consecutive ops pack into one chunk
+    while their combined destination bytes stay within ``budget`` (and,
+    if ``max_ops`` > 0, their count within it); an op bigger than the
+    whole budget travels alone, so a chunk's in-flight raw bytes exceed
+    the budget only when a SINGLE op already does. Order is preserved:
+    concatenating the chunks yields ``ops``."""
+    chunks: List[List[ReadOp]] = []
+    cur: List[ReadOp] = []
+    pend = 0
+    for op in ops:
+        n = op_bytes(op, itemsize)
+        if cur and (pend + n > budget or (max_ops and len(cur) >= max_ops)):
+            chunks.append(cur)
+            cur, pend = [], 0
+        cur.append(op)
+        pend += n
+    if cur:
+        chunks.append(cur)
+    return chunks
 
 
 def plan_volume(ops: Sequence[ReadOp]) -> int:

@@ -50,9 +50,12 @@ class BufferHead:
         self.dirty = True
 
     def brelse(self) -> None:
-        if self._held:
-            self._held = False
-            self._cache._release(self)
+        # idempotence lives in the cache: the held-flag test-and-clear
+        # happens under the cache lock (_release), so an explicit brelse
+        # racing the GC finalizer can never double-decrement a refcount
+        cache = getattr(self, "_cache", None)
+        if cache is not None and self._held:
+            cache._release(self)
 
     def __enter__(self) -> "BufferHead":
         return self
@@ -61,9 +64,16 @@ class BufferHead:
         self.brelse()
 
     def __del__(self):
-        # drop -> brelse (paper §4.7): prevents accidental leaks.
-        if getattr(self, "_held", False):
-            self.brelse()
+        # drop -> brelse (paper §4.7): prevents accidental leaks. At
+        # interpreter shutdown the finalizer can run AFTER the cache (or
+        # its lock, or the threading module) is torn down — a raise here
+        # would just spew "Exception ignored in __del__" noise, so any
+        # failure means the process is dying and the unpin is moot.
+        try:
+            if getattr(self, "_held", False):
+                self.brelse()
+        except Exception:  # noqa: BLE001 — shutdown-ordering teardown
+            pass
 
 
 class BufferCache:
@@ -133,8 +143,7 @@ class BufferCache:
                 prefetched = dict(zip(missing, self.dev.read_many(missing)))
             except BaseException:
                 for bh in out:  # clean (never dirtied) — just unpin
-                    bh._held = False
-                    self._refs[bh.blockno] -= 1
+                    self._release_locked(bh)
                 raise
             for blockno in rest:
                 buf = self._blocks.get(blockno)
@@ -180,12 +189,30 @@ class BufferCache:
     # --- release / writeback -------------------------------------------------------
     def _release(self, bh: BufferHead) -> None:
         with self._lock:
-            self._refs[bh.blockno] -= 1
-            if bh.dirty:
-                if self.writeback == "through":
-                    self.dev.write_block(bh.blockno, bytes(bh._buf))
-                else:
-                    self._dirty[bh.blockno] = bh._buf
+            self._release_locked(bh)
+
+    def _release_locked(self, bh: BufferHead) -> None:
+        """Idempotent unpin: the held-flag test-and-clear AND the ref
+        decrement happen together under the cache lock, so brelse, the
+        ``__del__`` finalizer and ``brelse_many`` can all race on one head
+        without double-releasing. A head whose refs entry is already gone
+        (``invalidate`` ran between bread and release) unpins to nothing
+        instead of minting a negative refcount that would silently cancel
+        a real leak in ``assert_no_leaks``."""
+        if not bh._held:
+            return
+        bh._held = False
+        live = self._refs.get(bh.blockno, 0)
+        if live > 1:
+            self._refs[bh.blockno] = live - 1
+        else:
+            # drop zero entries so the refs dict IS the held-set
+            self._refs.pop(bh.blockno, None)
+        if bh.dirty:
+            if self.writeback == "through":
+                self.dev.write_block(bh.blockno, bytes(bh._buf))
+            else:
+                self._dirty[bh.blockno] = bh._buf
 
     def brelse_many(self, heads: List[BufferHead]) -> None:
         """Release many heads under ONE lock acquisition — the unpin
@@ -193,17 +220,8 @@ class BufferCache:
         round trip per block, which dominates large vectorized reads).
         Already-released heads are skipped, same as ``brelse``."""
         with self._lock:
-            refs = self._refs
             for bh in heads:
-                if not bh._held:
-                    continue
-                bh._held = False
-                refs[bh.blockno] -= 1
-                if bh.dirty:
-                    if self.writeback == "through":
-                        self.dev.write_block(bh.blockno, bytes(bh._buf))
-                    else:
-                        self._dirty[bh.blockno] = bh._buf
+                self._release_locked(bh)
 
     def write_now(self, bh: BufferHead) -> None:
         """Synchronous write of a held buffer (journal commit path)."""
@@ -229,8 +247,12 @@ class BufferCache:
         return len(self._dirty)
 
     def assert_no_leaks(self) -> None:
+        # any NONZERO entry is a bug: positive = a head never released,
+        # negative = a double release slipped past the idempotence guard
+        # (pre-fix, a stray __del__ after invalidate() minted -1 entries
+        # that could mask a real +1 leak on the same block)
         with self._lock:
-            leaked = {b: r for b, r in self._refs.items() if r > 0}
+            leaked = {b: r for b, r in self._refs.items() if r != 0}
             if leaked:
                 raise BufferLeak(f"buffers still held at teardown: {leaked}")
 

@@ -73,11 +73,33 @@ def _recv_exact(sock: socket.socket, n: int) -> bytes:
 
 def _send_quiet(sock: socket.socket, obj: Any) -> None:
     """Best-effort reply: a channel whose client vanished mid-drain must
-    not take the daemon (and every other channel) down with it."""
+    not take the daemon (and every other channel) down with it. A reply
+    that won't SERIALIZE (an op returning an unpicklable object) is a
+    programming error on the daemon side — before this guard it
+    propagated out of the service loop and killed every channel; now the
+    client gets an ``error`` frame naming the failure instead of EOF."""
     try:
         _send(sock, obj)
     except OSError:
         pass
+    except Exception as e:  # noqa: BLE001 — pickle/struct failures
+        _log_exc(f"unserializable reply ({type(obj).__name__})")
+        try:
+            _send(sock, ("error", f"unserializable daemon reply: "
+                                  f"{type(e).__name__}: {e}"))
+        except Exception:  # noqa: BLE001 — client gone too: nothing owed
+            pass
+
+
+def _log_exc(context: str) -> None:
+    """Daemon-side error log: programming errors are NEVER swallowed
+    silently — the traceback lands on stderr (the client holds the pipe),
+    and the offending channel is failed, not the whole daemon."""
+    import traceback
+
+    print(f"fusebridge: {context}", file=sys.stderr)
+    traceback.print_exc(file=sys.stderr)
+    sys.stderr.flush()
 
 
 def _make_fs(fs_kind: str, opts):
@@ -197,7 +219,10 @@ def serve(sock_path: str, backing_path: str, n_blocks: int, fs_kind: str,
     shutdown = False
 
     def drop(conn):
-        sel.unregister(conn)
+        try:
+            sel.unregister(conn)
+        except (KeyError, ValueError):
+            pass  # already failed earlier this round
         conn.close()
         if conn in channels:
             channels.remove(conn)
@@ -219,10 +244,29 @@ def serve(sock_path: str, backing_path: str, n_blocks: int, fs_kind: str,
                 except (EOFError, OSError):
                     drop(conn)
                     continue
+                except Exception:  # noqa: BLE001 — poisoned frame
+                    # an undecodable frame used to propagate OUT of the
+                    # service loop and kill the daemon — every other
+                    # channel died with an unexplained EOF. Fail only the
+                    # channel that sent the poison.
+                    _log_exc("undecodable frame — failing the channel")
+                    _send_quiet(conn, ("error", "undecodable request "
+                                                "frame — channel failed"))
+                    drop(conn)
+                    continue
                 if msg is None:
                     shutdown = True
                     break
-                op, args, kw = msg
+                try:
+                    op, args, kw = msg
+                except (TypeError, ValueError):
+                    _log_exc(f"malformed request {type(msg).__name__} — "
+                             "failing the channel")
+                    _send_quiet(conn, ("error", "malformed request (want "
+                                                "(op, args, kw)) — "
+                                                "channel failed"))
+                    drop(conn)
+                    continue
                 if op == "submit_batch":
                     batch_reqs.append((conn, args[0]))
                 else:
@@ -241,12 +285,21 @@ def serve(sock_path: str, backing_path: str, n_blocks: int, fs_kind: str,
                         state["fs"].submit_batch,
                         [ents for _, ents in batch_reqs])
                 except FsError as e:
+                    # whole-drain refusal (reservation/validation): a real
+                    # errno every submitter understands — channels live on
                     for conn, _ in batch_reqs:
                         _send_quiet(conn, ("fs_error", int(e.errno)))
-                except Exception as e:  # noqa: BLE001
+                except Exception as e:  # noqa: BLE001 — programming error
+                    # NOT an fs refusal: daemon-side state may be torn
+                    # mid-drain. Log it, surface it to every involved
+                    # client, then FAIL those channels — continuing to
+                    # serve them would pretend the drain half-happened.
+                    _log_exc("programming error in multi-batch drain — "
+                             "failing the involved channels")
                     for conn, _ in batch_reqs:
                         _send_quiet(conn, ("error",
                                            f"{type(e).__name__}: {e}"))
+                        drop(conn)
                 else:
                     if any(e.op in ("fsync", "flush")
                            for _, ents in batch_reqs for e in ents):
@@ -274,8 +327,17 @@ def serve(sock_path: str, backing_path: str, n_blocks: int, fs_kind: str,
                     _send_quiet(conn, ("ok", res))
                 except FsError as e:
                     _send_quiet(conn, ("fs_error", int(e.errno)))
-                except Exception as e:  # noqa: BLE001
+                except Exception as e:  # noqa: BLE001 — programming error
+                    # narrow contract: FsError -> errno above; anything
+                    # else is a bug (unknown op, bad arg types, daemon
+                    # state corruption). Log the traceback, surface it to
+                    # the caller, and fail the channel — the old handler
+                    # replied "error" and kept serving a connection whose
+                    # op may have half-applied.
+                    _log_exc(f"programming error in scalar op {op!r} — "
+                             "failing the channel")
                     _send_quiet(conn, ("error", f"{type(e).__name__}: {e}"))
+                    drop(conn)
     finally:
         try:
             state["fs"].destroy()

@@ -1,0 +1,25 @@
+"""Pallas-TPU API compat: ONE feature-detect for the whole kernel pack.
+
+jax has renamed the TPU compiler-params class across releases
+(``pltpu.TPUCompilerParams`` on the 0.4.x line — the image pins 0.4.37 —
+``pltpu.CompilerParams`` on newer lines). Every kernel imports the probe
+from here instead of re-detecting locally, and the probe fails at IMPORT
+time with an actionable message if the API moves again — a silent
+``getattr(..., None)`` chain in four kernels is exactly how the last
+rename slipped through. ``tests/test_kernels.py`` smoke-constructs the
+detected class with the kwargs the kernels actually pass, so a field
+rename breaks loudly there too.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams", None)
+
+if CompilerParams is None:  # pragma: no cover - only on a future jax bump
+    raise ImportError(
+        "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+        "TPUCompilerParams — the pallas compiler-params API moved again; "
+        "update repro/kernels/_compat.py (one probe, all kernels follow)")

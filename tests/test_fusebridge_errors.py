@@ -1,0 +1,105 @@
+"""FUSE daemon error-contract regressions.
+
+The pre-fix daemon swallowed every scalar-op exception into a generic
+"error" reply and kept serving the channel — a poisoned op (unknown name,
+bad argument types, daemon-side state corruption) looked exactly like an
+fs refusal, and an undecodable frame propagated OUT of the service loop
+and killed every other channel with an unexplained EOF. The contract now:
+``FsError`` -> errno to the caller (the fs refusing is normal operation);
+anything else is logged with a traceback, surfaced to the caller, and
+FAILS that one channel while the daemon and its other channels live on.
+"""
+
+import pickle
+import socket
+import struct
+import threading
+
+import pytest
+
+from repro.core.interface import Errno, FsError
+from repro.fs.fusebridge import _recv, _send
+from repro.fs.mounts import make_mount
+
+
+@pytest.fixture
+def mf():
+    m = make_mount("fuse", n_blocks=2048)
+    yield m
+    m.close()
+
+
+def _raw_channel(mount) -> socket.socket:
+    sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+    sock.connect(mount._sock_path)
+    sock.settimeout(10)
+    return sock
+
+
+def test_fs_error_stays_errno(mf):
+    with pytest.raises(FsError) as ei:
+        mf.mount.call("lookup", 1, "does-not-exist")
+    assert ei.value.errno == Errno.ENOENT
+
+
+def test_poisoned_op_surfaces_and_fails_only_its_channel(mf):
+    """An op the fs module does not have is a programming error, not an
+    fs refusal: the caller gets the exception type by name (never a
+    silent hang, never an errno masquerade), that channel dies, and the
+    daemon keeps serving fresh channels."""
+    mf.view.write_file("/keep", b"before the poison")
+    errs = []
+
+    def poison():
+        # own thread -> own channel: only this channel gets failed
+        try:
+            mf.mount.call("definitely_not_an_op")
+        except Exception as e:  # noqa: BLE001 — collected for assertion
+            errs.append(e)
+
+    t = threading.Thread(target=poison)
+    t.start()
+    t.join(timeout=30)
+    assert not t.is_alive(), "poisoned op hung instead of surfacing"
+    assert len(errs) == 1 and isinstance(errs[0], RuntimeError)
+    assert "AttributeError" in str(errs[0])
+    # the daemon survived and serves other channels
+    assert mf.view.read_file("/keep") == b"before the poison"
+    assert mf.mount.ctl("stats")["generation"] == 1
+
+
+def test_undecodable_frame_fails_channel_not_daemon(mf):
+    """Garbage bytes in a frame used to kill the whole daemon. Now the
+    sender gets an error frame, its channel closes, everyone else lives."""
+    mf.view.write_file("/alive", b"yes")
+    raw = _raw_channel(mf.mount)
+    try:
+        raw.sendall(struct.pack("<I", 9) + b"\x93garbage!")
+        status, payload = _recv(raw)
+        assert status == "error" and "undecodable" in payload
+        # daemon closed this channel
+        assert raw.recv(1) == b""
+    finally:
+        raw.close()
+    assert mf.view.read_file("/alive") == b"yes"
+
+
+def test_malformed_message_fails_channel_not_daemon(mf):
+    """A frame that unpickles to the wrong shape (not (op, args, kw))
+    gets the same treatment: error reply, channel failed, daemon fine."""
+    raw = _raw_channel(mf.mount)
+    try:
+        _send(raw, {"not": "a request"})
+        status, payload = _recv(raw)
+        assert status == "error" and "malformed" in payload
+        assert raw.recv(1) == b""
+    finally:
+        raw.close()
+    assert mf.mount.ctl("stats")["drains"] >= 0
+
+
+def test_unpicklable_scalar_args_fail_loudly(mf):
+    """A request whose pickled args decode but blow up inside the op
+    (wrong types) is surfaced as the exception, not a hang."""
+    with pytest.raises(RuntimeError, match="TypeError|AttributeError"):
+        mf.mount.call("read", object=None)

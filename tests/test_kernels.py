@@ -155,3 +155,19 @@ def test_blockhash_batch():
     got = bh_ops.checksum_batch(blocks)
     want = [bh_ref.blockhash_np(b) for b in blocks]
     assert got == want
+
+
+def test_compiler_params_compat_shim():
+    """One feature-detect for the whole kernel pack: every kernel uses the
+    SAME class object from ``_compat``, and it constructs with the kwargs
+    the kernels actually pass (a field rename breaks loudly here)."""
+    from repro.kernels import _compat
+
+    assert _compat.CompilerParams is not None
+    for mod in (fa_k, wkv_k, ssd_k):
+        assert mod._CompilerParams is _compat.CompilerParams
+    from repro.kernels.blockhash import kernel as bh_k
+    assert bh_k._CompilerParams is _compat.CompilerParams
+    for sem in (("parallel",), ("parallel", "parallel", "arbitrary"),
+                ("parallel", "parallel", "parallel", "arbitrary")):
+        _compat.CompilerParams(dimension_semantics=sem)

@@ -20,8 +20,8 @@ import numpy as np
 import pytest
 
 from repro.distributed.resharding import (
-    ReadOp, ShardGrid, index_volume, normalize_index, plan_reshard,
-    plan_target_shard, plan_volume,
+    ReadOp, ShardGrid, chunk_ops, index_volume, normalize_index, op_bytes,
+    plan_reshard, plan_target_shard, plan_volume, shift_ops,
 )
 from repro.fs.mounts import make_mount
 
@@ -441,3 +441,187 @@ def test_reshard_differential_same_halved_doubled_meshes():
                          capture_output=True, text=True, timeout=600)
     assert out.returncode == 0, out.stdout[-1500:] + out.stderr[-1500:]
     assert "RESHARD_OK" in out.stdout
+
+
+# --- chunk scheduling: the overlap engine's planner math --------------------
+
+
+def test_shift_ops_rebases_cell_local_dst_to_global():
+    src = [((0, 4), (0, 6)), ((4, 8), (0, 6))]
+    cell = ((2, 6), (0, 3))
+    ops = plan_target_shard(src, cell)
+    shifted = shift_ops(ops, cell)
+    assert [op.dst_slice for op in shifted] == \
+        [((2, 4), (0, 3)), ((4, 6), (0, 3))]
+    # sources untouched, volume preserved
+    assert [(op.src, op.src_slice) for op in shifted] == \
+        [(op.src, op.src_slice) for op in ops]
+    assert plan_volume(shifted) == plan_volume(ops) == index_volume(cell)
+
+
+def test_shift_ops_short_last_cell_lands_flush():
+    # uneven 8/3 target: the short last cell (6,8) shifts to the tail
+    dst = ShardGrid.from_spec((8,), ("d",), {"d": 3})
+    src = ShardGrid.from_spec((8,), ("d",), {"d": 2}).indices()
+    last = dst.index(2)
+    assert last == ((6, 8),)
+    ops = plan_target_shard(src, last)
+    assert ops == [ReadOp(1, ((2, 4),), ((0, 2),))]
+    assert shift_ops(ops, last) == [ReadOp(1, ((2, 4),), ((6, 8),))]
+
+
+def test_chunk_ops_budget_packing_preserves_order():
+    src = ShardGrid.from_spec((64,), ("d",), {"d": 8}).indices()
+    ops = plan_target_shard(src, ((0, 64),))  # 8 ops x 32B at itemsize 4
+    chunks = chunk_ops(ops, 4, 64)
+    assert [op for c in chunks for op in c] == ops  # concatenation == plan
+    assert [len(c) for c in chunks] == [2, 2, 2, 2]
+    assert all(sum(op_bytes(o, 4) for o in c) <= 64 for c in chunks)
+    # an op bigger than the whole budget travels alone
+    assert all(len(c) == 1 for c in chunk_ops(ops, 4, 16))
+    # max_ops caps chunk length even under an unbounded byte budget
+    assert [len(c) for c in chunk_ops(ops, 4, 1 << 30, max_ops=3)] == \
+        [3, 3, 2]
+    assert chunk_ops([], 4, 64) == []
+
+
+# --- uneven (non-divisible) target grids: A -> uneven-B byte-identity -------
+
+
+def test_uneven_target_grids_restore_byte_identical_at_all_depths():
+    """Target ShardGrids jax's NamedSharding would refuse (short last
+    cell on w, EMPTY last cell on b) restore byte-identically at every
+    pipeline depth. Such a leaf assembles into one full-shape host
+    buffer, so ``max_target_bytes == full_bytes`` marks it exempt from
+    the strict sub-full peak budget."""
+    import jax
+    from repro import checkpoint as ckpt
+
+    mf = make_mount("bento", n_blocks=16384)
+    cks = mf.services.checksum
+    tree, grids = _virtual_tree(), _virtual_grids()
+    ckpt.save(mf.view, "/ck/u", tree, step=1, checksum=cks, shardings=grids)
+    targets = {
+        "w": ShardGrid.from_spec((8, 6), ("d", None), {"d": 3}),  # 3,3,2
+        "b": ShardGrid.from_spec((12,), ("d",), {"d": 5}),  # 3,3,3,3,<empty>
+        "s": ShardGrid.trivial(()),
+    }
+    for depth in (0, 1, 2, 4):
+        stats = {}
+        back, _ = ckpt.load(mf.view, "/ck/u", tree, checksum=cks,
+                            sharding_tree=targets, stats=stats,
+                            pipeline_depth=depth)
+        for k in tree:
+            np.testing.assert_array_equal(
+                np.asarray(jax.device_get(back[k])).view(np.uint16)
+                if k == "b" else np.asarray(jax.device_get(back[k])),
+                np.asarray(jax.device_get(tree[k])).view(np.uint16)
+                if k == "b" else np.asarray(jax.device_get(tree[k])))
+            assert back[k].dtype == tree[k].dtype
+        # sorted leaves: b, s, w — empty cells drop out of target groups
+        by_leaf = {s["leaf"]: s for s in stats["leaves"]}
+        assert by_leaf[0]["n_target_groups"] == 4, (depth, by_leaf)
+        assert by_leaf[2]["n_target_groups"] == 3, (depth, by_leaf)
+        for i in (0, 2):
+            assert by_leaf[i]["max_target_bytes"] == \
+                by_leaf[i]["full_bytes"], (depth, by_leaf[i])
+    mf.close()
+
+
+# --- overlap-on/off differential: pipelined vs serial reference -------------
+
+
+def _overlap_tree():
+    import jax.numpy as jnp
+    rng = np.random.default_rng(7)
+    return {
+        "w": jnp.asarray(rng.normal(size=(64, 48)).astype(np.float32)),
+        "b": jnp.asarray(rng.normal(size=(4096,)).astype(np.float32)),
+        "s": jnp.float32(1.25),
+    }
+
+
+def _overlap_grids():
+    return {
+        "w": ShardGrid.from_spec((64, 48), ("d", "m"), {"d": 2, "m": 3}),
+        "b": ShardGrid.from_spec((4096,), ("d",), {"d": 4}),
+        "s": None,
+    }
+
+
+def test_overlap_differential_depths_match_serial_with_bounded_peak():
+    """Pipelined restores (depths 1/2/4) are byte-identical to the serial
+    reference (depth 0), the per-leaf metered peak stays within depth x
+    the serial peak, and ``stats['pipeline']`` reports the engine."""
+    import jax
+    from repro import checkpoint as ckpt
+
+    mf = make_mount("bento", n_blocks=16384)
+    cks, cks_b = mf.services.checksum, mf.services.checksum_batch
+    tree, grids = _overlap_tree(), _overlap_grids()
+    ckpt.save(mf.view, "/ck/ov", tree, step=1, checksum=cks,
+              shardings=grids)
+    ref_stats = {}
+    ref, _ = ckpt.load(mf.view, "/ck/ov", tree, checksum=cks,
+                       stats=ref_stats, pipeline_depth=0)
+    assert ref_stats["pipeline"]["depth"] == 0
+    serial_peak = {s["leaf"]: s["peak_bytes"] for s in ref_stats["leaves"]}
+    for depth in (1, 2, 4):
+        stats = {}
+        back, _ = ckpt.load(mf.view, "/ck/ov", tree, checksum=cks,
+                            checksum_batch=cks_b, stats=stats,
+                            pipeline_depth=depth)
+        for k in tree:
+            np.testing.assert_array_equal(
+                np.asarray(jax.device_get(back[k])),
+                np.asarray(jax.device_get(ref[k])))
+        pipe = stats["pipeline"]
+        assert pipe["depth"] == depth
+        assert pipe["wall_s"] > 0.0 and pipe["overlap_ratio"] >= 0.0
+        # the peak budget grows by exactly the configured depth, not more
+        for s in stats["leaves"]:
+            if s["streamed"]:
+                cap = max(1, depth) * serial_peak[s["leaf"]]
+                assert s["peak_bytes"] <= cap, (depth, s, cap)
+    mf.close()
+
+
+def test_pipeline_depth_env_default(monkeypatch):
+    from repro.checkpoint import store as st
+
+    monkeypatch.setenv(st._DEPTH_ENV, "3")
+    assert st._resolve_depth(None) == 3
+    assert st._resolve_depth(0) == 0  # explicit arg beats the env
+    monkeypatch.delenv(st._DEPTH_ENV)
+    assert st._resolve_depth(None) == st._DEFAULT_DEPTH
+    assert st._resolve_depth(-5) == 0  # clamped
+
+
+def test_crash_mid_restore_leaves_store_read_only(monkeypatch):
+    """A checksum failure mid-pipelined-restore — speculative prefetches
+    in flight — surfaces as the same IOError as the serial engine and
+    performs ZERO device writes: the store is untouched and a restart
+    can retry or fall back to an older step."""
+    from repro import checkpoint as ckpt
+    from repro.checkpoint import store as store_mod
+
+    # the fixture tree is tiny — force the worker-thread engine anyway,
+    # it is exactly the speculative-prefetch path under test
+    monkeypatch.setattr(store_mod, "_INLINE_BYTES", 0)
+    mf = make_mount("bento", n_blocks=16384)
+    cks, cks_b = mf.services.checksum, mf.services.checksum_batch
+    tree, grids = _virtual_tree(), _virtual_grids()
+    man = ckpt.save(mf.view, "/ck/cr", tree, step=1, checksum=cks,
+                    shardings=grids)
+    victim = man["leaves"][2]["shards"][0]["path"]
+    raw = bytearray(mf.view.read_file(victim))
+    raw[-1] ^= 0xFF
+    mf.view.write_file(victim, bytes(raw), off=0, create=False)
+    mf.view.fsync(victim)  # corruption durable BEFORE the write snapshot
+    w0 = mf.dev.writes
+    for depth in (0, 2, 4):
+        with pytest.raises(IOError, match="checksum mismatch|/ck/cr"):
+            ckpt.load(mf.view, "/ck/cr", tree, checksum=cks,
+                      checksum_batch=cks_b, pipeline_depth=depth)
+    assert mf.dev.writes == w0, "restore wrote to the device"
+    mf.close()
